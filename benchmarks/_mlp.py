@@ -1,0 +1,176 @@
+"""Shared sparse-MLP trainer for the paper-figure benchmarks.
+
+Student MLP trained on the planted sparse-teacher regression task
+(repro.data.teacher): ground-truth sparse topology exists, so the relative
+ordering of sparse-training methods (paper Fig 2) is probed directly.
+All methods run at IDENTICAL step counts; FLOP costs come from
+core.flops.method_train_flops so quality-vs-FLOPs plots match Appendix H.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    LayerSpec,
+    SparseAlgo,
+    UpdateSchedule,
+    apply_masks,
+    dense_to_sparse_grad,
+    get_distribution,
+    init_masks,
+    rigl_update,
+    snip_masks,
+)
+from repro.core.flops import DenseSpec, method_train_flops, model_fwd_flops, sparse_fwd_flops
+from repro.core.pruning import PruningSchedule, prune_step
+from repro.data import make_teacher, teacher_batch
+
+D_IN, D_H, D_OUT = 32, 256, 16
+
+
+def mlp_apply(params, x):
+    h = jax.nn.relu(x @ params["w1"])
+    return h @ params["w2"]
+
+
+def mlp_loss(params, batch):
+    x, y = batch
+    pred = mlp_apply(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+@dataclasses.dataclass
+class Result:
+    method: str
+    sparsity: float
+    final_loss: float
+    train_flops_mult: float
+    test_flops_mult: float
+    masks: dict
+    params: dict
+
+
+def _init(key, dims=(D_IN, D_H, D_OUT)):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dims[0], dims[1])) / np.sqrt(dims[0]),
+        "w2": jax.random.normal(k2, (dims[1], dims[2])) / np.sqrt(dims[1]),
+    }
+
+
+def train_mlp(
+    method: str = "rigl",
+    sparsity: float = 0.9,
+    steps: int = 400,
+    delta_t: int = 25,
+    alpha: float = 0.3,
+    distribution: str = "erk",
+    decay: str = "cosine",
+    seed: int = 0,
+    lr: float = 0.05,
+    momentum: float = 0.9,
+    teacher_sparsity: float = 0.9,
+    dims=(D_IN, D_H, D_OUT),
+    init_params=None,
+    init_masks_override=None,
+    batch: int = 256,
+) -> Result:
+    key = jax.random.PRNGKey(seed)
+    teacher = make_teacher(jax.random.PRNGKey(99), dims[0], 128, dims[2], teacher_sparsity)
+
+    if method == "small_dense":
+        # match ACTIVE param count with a narrower dense network
+        total = dims[0] * dims[1] + dims[1] * dims[2]
+        h = max(int(dims[1] * (1 - sparsity)), 2)
+        dims = (dims[0], h, dims[2])
+        sparsity_eff = 0.0
+    else:
+        sparsity_eff = sparsity if method != "dense" else 0.0
+
+    params = _init(key, dims) if init_params is None else jax.tree_util.tree_map(jnp.asarray, init_params)
+    specs = [LayerSpec("w1", (dims[0], dims[1])), LayerSpec("w2", (dims[1], dims[2]))]
+    if sparsity_eff > 0 and method != "pruning":
+        smap = get_distribution(distribution, specs, sparsity_eff, dense_first=False)
+        masks = init_masks(jax.random.fold_in(key, 1), params, smap)
+        if method == "snip":
+            g = jax.grad(mlp_loss)(params, teacher_batch(teacher, 0, batch))
+            masks = snip_masks(params, g, smap)
+    else:
+        masks = {"w1": jnp.ones(params["w1"].shape, bool), "w2": jnp.ones(params["w2"].shape, bool)}
+    if init_masks_override is not None:
+        masks = jax.tree_util.tree_map(jnp.asarray, init_masks_override)
+    params = apply_masks(params, masks)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    dense_mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    sched = UpdateSchedule(delta_t=delta_t, t_end=int(0.75 * steps), alpha=alpha, decay=decay)
+    algo = SparseAlgo(method=method if method in ("rigl", "set", "snfs") else "static", schedule=sched)
+    prune_sched = PruningSchedule(sparsity, begin_step=steps // 8, end_step=int(0.75 * steps), prune_every=delta_t)
+
+    @jax.jit
+    def step_fn(params, masks, mom, dense_mom, batch_):
+        w_eff = apply_masks(params, masks)
+        loss, g = jax.value_and_grad(mlp_loss)(w_eff, batch_)
+        gs = dense_to_sparse_grad(g, masks)
+        mom2 = jax.tree_util.tree_map(lambda m, gg: momentum * m + gg, mom, gs)
+        params2 = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mom2)
+        dm2 = jax.tree_util.tree_map(lambda m, gg: momentum * m + gg, dense_mom, g)
+        return params2, mom2, dm2, loss
+
+    @jax.jit
+    def update_fn(params, masks, mom, dense_mom, t, batch_):
+        w_eff = apply_masks(params, masks)
+        g = jax.grad(mlp_loss)(w_eff, batch_)
+        p2, m2, grown = rigl_update(
+            params, masks, g, t, algo, jax.random.fold_in(key, t), dense_momentum=dense_mom
+        )
+        mom2 = jax.tree_util.tree_map(
+            lambda m, gr: jnp.where(gr, 0.0, m), mom, grown
+        )
+        return p2, m2, mom2
+
+    for t in range(steps):
+        b = teacher_batch(teacher, t, batch)
+        if (
+            method in ("rigl", "set", "snfs")
+            and t > 0
+            and t % delta_t == 0
+            and t < sched.t_end
+        ):
+            params, masks, mom = update_fn(params, masks, mom, dense_mom, t, b)
+        else:
+            params, mom, dense_mom, _ = step_fn(params, masks, mom, dense_mom, b)
+        if method == "pruning" and t % prune_sched.prune_every == 0 and t >= prune_sched.begin_step:
+            params, masks = prune_step(params, masks, t, prune_sched)
+
+    # eval on held-out batches
+    w_eff = apply_masks(params, masks)
+    eval_loss = float(
+        np.mean([float(mlp_loss(w_eff, teacher_batch(teacher, 10_000 + i, 512))) for i in range(4)])
+    )
+
+    layers = [DenseSpec("w1", dims[0], dims[1]), DenseSpec("w2", dims[1], dims[2])]
+    base = [DenseSpec("w1", D_IN, D_H), DenseSpec("w2", D_H, D_OUT)]
+    f_d = model_fwd_flops(base)
+    nnz = {n: float(1.0 - jnp.mean(masks[n].astype(jnp.float32))) for n in masks}
+    f_s = sparse_fwd_flops(layers, nnz)
+    # small_dense trains a narrower DENSE net: cost 3*f_small == "static" form
+    m = method if method in (
+        "dense", "static", "snip", "set", "snfs", "rigl", "pruning"
+    ) else "static"
+    train_f = method_train_flops(m, f_d, f_s, delta_t=delta_t,
+                                 pruning_schedule=prune_sched, total_steps=steps)
+    return Result(
+        method=method,
+        sparsity=sparsity,
+        final_loss=eval_loss,
+        train_flops_mult=train_f / (3 * f_d),
+        test_flops_mult=f_s / f_d,
+        masks=jax.device_get(masks),
+        params=jax.device_get(params),
+    )

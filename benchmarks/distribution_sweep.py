@@ -1,0 +1,20 @@
+"""Paper Fig 5-left (+ Appendix C): uniform vs ER vs ERK."""
+import time
+
+from ._mlp import train_mlp
+
+
+def run(quick=True):
+    steps = 300 if quick else 1200
+    rows = []
+    for dist in ("uniform", "er", "erk"):
+        for m in ("rigl", "set"):
+            t0 = time.time()
+            r = train_mlp(method=m, sparsity=0.9, steps=steps, distribution=dist)
+            rows.append({
+                "name": f"distribution/{m}_{dist}",
+                "us_per_call": (time.time() - t0) * 1e6 / steps,
+                "derived": {"final_loss": round(r.final_loss, 5),
+                            "test_flops_mult": round(r.test_flops_mult, 4)},
+            })
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Fig 2-left / Table 4 FLOPs columns, reproduced analytically."""
+import time
+
+from repro.core.flops import resnet50_flop_multipliers
+
+PAPER = {  # (sparsity, dist) -> {method: (train, test)} from Fig 2-left/Table 4
+    (0.8, "uniform"): {"rigl": (0.23, 0.23), "static": (0.23, 0.23), "snfs": (None, None)},
+    (0.9, "uniform"): {"rigl": (0.10, 0.10)},
+    (0.8, "erk"): {"rigl": (0.42, 0.42)},
+    (0.9, "erk"): {"rigl": (0.25, 0.24)},
+    (0.95, "uniform"): {"rigl": (0.23 * 0.35, 0.08)},  # Table 4: 0.08x test
+    (0.965, "uniform"): {"rigl": (None, 0.07)},
+}
+
+
+def run(quick=True):
+    rows = []
+    t0 = time.time()
+    for (s, dist), methods in PAPER.items():
+        ours = resnet50_flop_multipliers(s, dist)
+        for m, (pt, pe) in methods.items():
+            rows.append({
+                "name": f"flops_table/{m}_s{s}_{dist}",
+                "us_per_call": (time.time() - t0) * 1e6 / max(len(rows), 1),
+                "derived": {
+                    "train_mult": round(ours[m]["train"], 4),
+                    "test_mult": round(ours[m]["test"], 4),
+                    "paper_train": pt,
+                    "paper_test": pe,
+                },
+            })
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Table 3 / Appendix E: (non)-existence of lottery tickets.
+
+Take the topology found by RigL; retrain from the ORIGINAL init with (a) the
+topology fixed (lottery-static) and (b) RigL. Compare with random-init RigL.
+Paper: Lottery+Static << Lottery+RigL <= Random+RigL — no special tickets.
+"""
+import time
+
+import jax
+
+from ._mlp import _init, train_mlp
+
+
+def run(quick=True):
+    steps = 300 if quick else 1200
+    t0 = time.time()
+    first = train_mlp(method="rigl", sparsity=0.9, steps=steps, seed=0)
+    init_params = jax.device_get(_init(jax.random.PRNGKey(0)))  # original init
+
+    lottery_static = train_mlp(method="static", sparsity=0.9, steps=steps, seed=2,
+                               init_params=init_params, init_masks_override=first.masks)
+    lottery_rigl = train_mlp(method="rigl", sparsity=0.9, steps=steps, seed=2,
+                             init_params=init_params, init_masks_override=first.masks)
+    random_rigl = train_mlp(method="rigl", sparsity=0.9, steps=steps, seed=2)
+    return [{
+        "name": "lottery/table3",
+        "us_per_call": (time.time() - t0) * 1e6,
+        "derived": {
+            "lottery_static_loss": round(lottery_static.final_loss, 5),
+            "lottery_rigl_loss": round(lottery_rigl.final_loss, 5),
+            "random_rigl_loss": round(random_rigl.final_loss, 5),
+            "no_special_tickets": random_rigl.final_loss <= lottery_static.final_loss,
+        },
+    }]

@@ -1,0 +1,29 @@
+"""Paper Fig 2-top-right: sparse-training methods at fixed FLOPs.
+
+Planted-sparse-teacher task (ground-truth topology known). Expected ordering,
+as in the paper: RigL <= SNFS < SET < Static ~ Small-Dense, with RigL at
+sparse cost while SNFS pays dense-gradient cost.
+"""
+import time
+
+from ._mlp import train_mlp
+
+METHODS = ("dense", "small_dense", "static", "snip", "set", "snfs", "rigl", "pruning")
+
+
+def run(quick=True):
+    steps = 300 if quick else 1500
+    rows = []
+    for m in METHODS:
+        t0 = time.time()
+        r = train_mlp(method=m, sparsity=0.9, steps=steps, seed=0)
+        rows.append({
+            "name": f"methods/{m}",
+            "us_per_call": (time.time() - t0) * 1e6 / steps,
+            "derived": {
+                "final_loss": round(r.final_loss, 5),
+                "train_flops_mult": round(r.train_flops_mult, 4),
+                "test_flops_mult": round(r.test_flops_mult, 4),
+            },
+        })
+    return rows

@@ -1,0 +1,32 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section Roofline)."""
+import json
+import pathlib
+import time
+
+
+def run(quick=True):
+    rows = []
+    art_dir = pathlib.Path("artifacts/dryrun")
+    if not art_dir.exists():
+        return [{"name": "roofline/no_artifacts", "us_per_call": 0,
+                 "derived": {"note": "run python -m repro.launch.dryrun --all first"}}]
+    for p in sorted(art_dir.glob("*.json")):
+        art = json.loads(p.read_text())
+        if art.get("skipped"):
+            rows.append({"name": f"roofline/{p.stem}", "us_per_call": 0,
+                         "derived": {"skipped": art["skipped"]}})
+            continue
+        rl = art["roofline"]
+        rows.append({
+            "name": f"roofline/{p.stem}",
+            "us_per_call": rl["step_lower_bound_s"] * 1e6,
+            "derived": {
+                "dominant": rl["dominant"],
+                "compute_s": f"{rl['compute_s']:.3e}",
+                "memory_s": f"{rl['memory_s']:.3e}",
+                "collective_s": f"{rl['collective_s']:.3e}",
+                "mfu_upper_bound": round(rl.get("mfu_upper_bound", 0), 4),
+                "useful_flop_ratio": round(rl.get("useful_flop_ratio", 0), 3),
+            },
+        })
+    return rows

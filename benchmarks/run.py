@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only name]
+
+Prints ``name,us_per_call,derived`` CSV (derived is a compact JSON object).
+"""
+import argparse
+import json
+import sys
+import traceback
+
+MODULES = [
+    "flops_table",        # Fig 2-left / Table 4 FLOPs columns
+    "methods_comparison", # Fig 2-top-right
+    "sparsity_sweep",     # Fig 2-bottom-right / Fig 4-right
+    "char_lm",            # Fig 4-left (paper GRU, §4.2)
+    "distribution_sweep", # Fig 5-left / Appendix C
+    "schedule_sweep",     # Fig 5-right / Fig 9 / Appendix G
+    "interpolation",      # Fig 6
+    "lottery",            # Table 3 / Appendix E
+    "mlp_compression",    # Table 2 / Fig 7
+    "kernel_bench",       # kernels vs refs
+    "roofline_report",    # EXPERIMENTS.md roofline table
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="long (paper-scale) runs")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            mod = importlib.import_module(f".{name}", __package__)
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                derived = json.dumps(r["derived"], separators=(",", ":"))
+                print(f'{r["name"]},{r["us_per_call"]:.1f},"{derived}"')
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{name},0,\"ERROR\"")
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

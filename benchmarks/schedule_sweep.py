@@ -1,0 +1,27 @@
+"""Paper Fig 5-right + Fig 9 + Appendix G: delta_t x alpha x annealing."""
+import time
+
+from ._mlp import train_mlp
+
+
+def run(quick=True):
+    steps = 300 if quick else 1200
+    rows = []
+    for dt in (10, 25, 100):
+        for alpha in (0.1, 0.3, 0.5):
+            t0 = time.time()
+            r = train_mlp(method="rigl", sparsity=0.9, steps=steps, delta_t=dt, alpha=alpha)
+            rows.append({
+                "name": f"schedule/dt{dt}_a{alpha}",
+                "us_per_call": (time.time() - t0) * 1e6 / steps,
+                "derived": {"final_loss": round(r.final_loss, 5)},
+            })
+    for decay in ("cosine", "constant", "linear", "inverse_power"):
+        t0 = time.time()
+        r = train_mlp(method="rigl", sparsity=0.9, steps=steps, decay=decay)
+        rows.append({
+            "name": f"annealing/{decay}",
+            "us_per_call": (time.time() - t0) * 1e6 / steps,
+            "derived": {"final_loss": round(r.final_loss, 5)},
+        })
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig 2-bottom-right / Fig 4-right: quality across sparsity levels."""
+import time
+
+from ._mlp import train_mlp
+
+
+def run(quick=True):
+    steps = 300 if quick else 1200
+    rows = []
+    for s in (0.5, 0.8, 0.9, 0.95):
+        for m in ("rigl", "static", "pruning"):
+            t0 = time.time()
+            r = train_mlp(method=m, sparsity=s, steps=steps, seed=0)
+            rows.append({
+                "name": f"sparsity_sweep/{m}_s{s}",
+                "us_per_call": (time.time() - t0) * 1e6 / steps,
+                "derived": {"final_loss": round(r.final_loss, 5),
+                            "train_flops_mult": round(r.train_flops_mult, 4)},
+            })
+    return rows

@@ -1,0 +1,33 @@
+"""Batched sparse serving: prefill a prompt batch, decode with KV caches.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch hymba-1.5b
+
+Windowed (SWA) and recurrent (xLSTM/SSM) caches demonstrate the long-context
+decode path (the long_500k dry-run cells use exactly this code).
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import apply_masks
+from repro.launch.serve import serve_session
+from repro.optim import OptConfig
+from repro.training import init_train_state
+
+p = argparse.ArgumentParser()
+p.add_argument("--arch", default="hymba-1.5b")
+p.add_argument("--batch", type=int, default=4)
+p.add_argument("--prompt-len", type=int, default=48)
+p.add_argument("--gen", type=int, default=24)
+args = p.parse_args()
+
+cfg = get_config(args.arch, smoke=True)
+state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+weights = apply_masks(state["params"], state["masks"])  # serve THROUGH the masks
+
+toks, stats = serve_session(
+    cfg, weights, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen
+)
+print(f"arch={cfg.name} generated {toks.shape[1]} tokens x {toks.shape[0]} seqs")
+print(f"prefill {stats['prefill_s']*1e3:.1f} ms | {stats['tok_per_s']:.1f} tok/s decode")

@@ -1,0 +1,76 @@
+"""Parse collective-communication bytes out of optimized HLO text.
+
+cost_analysis() does not report collective bytes, so we regex the compiled
+module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction, summing *operand* bytes (operand types are
+inlined in HLO text).  Numbers are per-partition (SPMD), matching
+cost_analysis()'s per-device FLOPs/bytes convention.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+# e.g. "%all-gather.3 = bf16[8,128]{1,0} all-gather(f32[8,8]{1,0} %p.2, ...)"
+# optimized-HLO operands are %name refs (no inline types) — parse the RESULT
+# shape(s) and the replica group size, then derive operand bytes per kind:
+#   all-reduce / all-to-all / collective-permute : operand == result
+#   all-gather                                   : operand == result / group
+#   reduce-scatter                               : operand == result * group
+_INSTR = re.compile(
+    rf"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+{_COLL}(-start|-done)?\("
+    r"[^)]*\)((?:, [a-z_]+=\S+| [a-z_]+=\S+)*)"
+)
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for sm in _SHAPE.finditer(result):
+        dtype, dims = sm.group(1), sm.group(2)
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes (per partition) + 'total'."""
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        result, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":  # paired with -start; count the pair once
+            continue
+        b = _shape_bytes(result)
+        gm = _GROUPS.search(line)
+        group = int(gm.group(2)) if gm else 1
+        if kind == "all-gather":
+            b = b // max(group, 1)
+        elif kind == "reduce-scatter":
+            b = b * group
+        out[kind] += b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))

@@ -1,0 +1,115 @@
+"""Analytic per-device HBM model for the dry-run cells.
+
+The CPU backend's memory_analysis() assigns every intermediate a distinct
+buffer (no reuse, remat-blind — verified empirically, see EXPERIMENTS.md
+§Dry-run methodology), so it wildly overstates TPU-side peaks.  This model
+computes the standard itemized accounting instead:
+
+  state      : params (f32) + optimizer slots + masks (1B) + dense grads (f32)
+  residuals  : remat checkpoints, L x B_loc x S x d x 2B
+  working set: max over (attention scores fp32 per q-chunk, qkv, mlp hidden,
+               MoE dispatch buffers, SSM scan chunk) — one layer live at a time
+  logits     : one loss chunk, fp32, vocab-sharded
+  kv cache   : decode/prefill shapes
+
+Exact terms (params/opt/grads/masks/cache) are exact; activation terms are
+upper-ish estimates of the dominant buffers (2 live copies assumed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["memory_model"]
+
+
+def _dp_model(mesh_shape: dict) -> tuple[int, int]:
+    dp = mesh_shape.get("pod", 1) * mesh_shape.get("data", 1)
+    return dp, mesh_shape.get("model", 1)
+
+
+def memory_model(cfg, shape, mesh_shape: dict, n_params_total: float,
+                 n_sparsifiable: float, opt_slots: int = 1,
+                 opt_state_bytes: int = 4) -> dict:
+    dp, tp = _dp_model(mesh_shape)
+    n_dev = dp * tp
+    B, S = shape.global_batch, shape.seq_len
+    mb = max(getattr(cfg, "microbatches", 1), 1)
+    B_loc = max(B // dp, 1)
+    B_mb = max(B_loc // mb, 1)  # per-microbatch live activations
+    d = cfg.d_model
+    fsdp_div = (mesh_shape.get("data", 1) if cfg.fsdp else 1) * tp
+
+    out: dict[str, float] = {}
+    train = shape.kind == "train"
+    pbytes = 2.0 if cfg.param_dtype == "bfloat16" else 4.0
+    acc_bytes = 2.0 if getattr(cfg, "grad_accum_dtype", "") == "bfloat16" else 4.0
+
+    # ---- state (exact) ----
+    psz = n_params_total / fsdp_div
+    out["params"] = pbytes * psz
+    if train:
+        out["opt_state"] = opt_state_bytes * psz * opt_slots
+        out["grads"] = pbytes * psz
+        if mb > 1:
+            out["grad_accum"] = acc_bytes * psz
+        out["masks_bool"] = n_sparsifiable / fsdp_div
+    else:
+        out["params"] = 2.0 * psz  # serving uses bf16 weights
+
+    # ---- activations ----
+    if shape.kind != "decode":
+        if train and cfg.remat:
+            g = max(getattr(cfg, "remat_group", 1), 1)
+            # sequence parallelism shards the saved residual stream over TP
+            sp_div = tp if getattr(cfg, "seq_shard_activations", False) else 1
+            out["residual_saves"] = (cfg.n_layers / g) * B_mb * S * d * 2.0 / sp_div
+            # bwd of one checkpoint region keeps g layers' internals live
+            region_mult = g
+        else:
+            region_mult = cfg.n_layers if train else 1
+        heads_loc = max(cfg.n_heads // tp, 1) if cfg.n_heads % tp == 0 else cfg.n_heads
+        if cfg.block_type != "xlstm":
+            qlen = min(S, cfg.q_chunk)
+            klen = min(S, cfg.window) if (cfg.attn_pattern == ("local",) and cfg.window) else S
+            out["attn_scores_f32"] = 2.0 * B_mb * heads_loc * qlen * klen * 4.0 * region_mult
+            out["qkv_bf16"] = 3.0 * B_mb * S * heads_loc * cfg.head_dim * 2.0 * region_mult
+        if cfg.d_ff:
+            ff_loc = cfg.d_ff // tp if cfg.d_ff % tp == 0 else cfg.d_ff
+            out["mlp_hidden_bf16"] = 2.0 * B_mb * S * ff_loc * 2.0 * region_mult
+        if cfg.n_experts:
+            T_loc = B_mb * S
+            C = int(np.ceil(T_loc * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor))
+            e_loc = cfg.n_experts if cfg.n_experts % tp else cfg.n_experts // tp
+            out["moe_buffers_bf16"] = 3.0 * e_loc * C * d * 2.0 * region_mult
+        if cfg.ssm_d_inner:
+            out["ssm_chunk_f32"] = (
+                2.0 * B_mb * min(S, 1024) * cfg.ssm_d_inner * cfg.ssm_state * 4.0
+            )
+        pv = ((cfg.vocab_size + 255) // 256) * 256  # models.model.padded_vocab
+        v_loc = pv // tp if pv % tp == 0 else pv
+        if train:  # prefill emits last-position logits only
+            out["logits_chunk_f32"] = (
+                2.0 * B_mb * (S // max(cfg.loss_chunks, 1)) * v_loc * 4.0
+            )
+        else:
+            out["logits_last_f32"] = 2.0 * B_loc * v_loc * 4.0
+
+    # ---- kv / recurrent caches (exact) ----
+    if shape.kind in ("decode", "prefill"):
+        kv_bytes = 0.0
+        for i in range(cfg.n_layers):
+            if cfg.block_type == "xlstm":
+                nh, hd = cfg.n_heads, d // cfg.n_heads
+                kv_bytes += B_loc * nh * (hd * hd + 2 * hd + 1) * 4.0
+                continue
+            kind = cfg.layer_kind(i)
+            size = min(cfg.window, S) if (kind == "local" and cfg.window) else S
+            kvh = cfg.n_kv_heads
+            shard = tp if kvh % tp == 0 else (tp if S % tp == 0 else 1)
+            kv_bytes += 2.0 * B_loc * size * kvh * cfg.head_dim * 2.0 / shard
+            if cfg.block_type == "hymba":
+                kv_bytes += B_loc * cfg.ssm_d_inner * (cfg.ssm_state + 3) * 4.0
+        out["kv_cache"] = kv_bytes
+
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

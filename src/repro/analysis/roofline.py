@@ -1,0 +1,53 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e targets).
+
+  compute   = per_device_HLO_FLOPs / 197e12           [bf16 MXU peak]
+  memory    = per_device_HLO_bytes / 819e9             [HBM bandwidth]
+  collective= per_device_collective_bytes / 50e9       [ICI per-link]
+
+cost_analysis() reports PER-DEVICE flops/bytes after SPMD partitioning
+(verified empirically), so no further division by chip count is needed.
+MODEL_FLOPS = 6·N_active·D (2 fwd + 4 bwd) for train, 2·N_active per token
+for decode; ratio MODEL_FLOPS/(HLO_FLOPs × chips) exposes remat/redundancy
+overhead (ratio < 1 when remat recomputes, > 1 would flag undercounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+__all__ = ["roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    *,
+    chips: int,
+    model_flops_total: float | None = None,
+) -> dict:
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = bytes_per_dev / HBM_BW
+    t_x = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_x)
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_lower_bound_s": bound,
+        # fraction of the roofline-bound step actually spent at peak compute
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+        "chips": chips,
+    }
+    if model_flops_total:
+        hlo_total = flops_per_dev * chips
+        out["model_flops"] = model_flops_total
+        out["useful_flop_ratio"] = model_flops_total / hlo_total if hlo_total else 0.0
+        out["mfu_upper_bound"] = (
+            model_flops_total / (bound * chips * PEAK_FLOPS) if bound else 0.0
+        )
+    return out

@@ -1,0 +1,23 @@
+"""Config registry: get_config(arch_id, smoke=False)."""
+from . import base
+from .base import ARCH_IDS, SHAPES, SKIPS, ModelConfig, ShapeConfig, SparseConfig, cells
+
+_MODULES = {
+    "internvl2-1b": "internvl2_1b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "gemma3-4b": "gemma3_4b",
+    "mistral-large-123b": "mistral_large_123b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "grok-1-314b": "grok_1_314b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    import importlib
+
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.SMOKE if smoke else mod.CONFIG

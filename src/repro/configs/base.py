@@ -1,0 +1,155 @@
+"""ModelConfig + input-shape registry for the 10 assigned architectures.
+
+Every architecture exposes CONFIG (exact assigned dims) and SMOKE (reduced,
+same family) — see per-arch files.  Shapes below are the assigned 4-shape set;
+``cells()`` enumerates the 40 (arch x shape) grid with documented skips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "SparseConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseConfig:
+    """RigL settings attached to a model config."""
+
+    sparsity: float = 0.8
+    distribution: str = "erk"  # uniform | er | erk
+    method: str = "rigl"  # rigl | set | snfs | static
+    delta_t: int = 100
+    alpha: float = 0.3
+    t_end_fraction: float = 0.75
+    grow_init: str = "zeros"
+    block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    block_type: str = "transformer"  # transformer | xlstm | hymba
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab_size: int = 256
+    mlp_kind: str = "swiglu"  # swiglu | geglu | gelu | none
+    # attention pattern: cycle of 'global'/'local' applied per layer index,
+    # plus optional explicit global layer ids (hymba: first/middle/last).
+    attn_pattern: tuple[str, ...] = ("global",)
+    global_layer_ids: tuple[int, ...] = ()
+    window: int = 0
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 1e4
+    causal: bool = True  # False => encoder-only (hubert)
+    parallel_block: bool = False  # command-r style attn || mlp
+    post_norms: bool = False  # gemma-style sandwich norms
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM / xLSTM
+    ssm_state: int = 0
+    ssm_d_inner: int = 0
+    slstm_every: int = 0  # xlstm: layer i is sLSTM if i % slstm_every == slstm_every-1
+    # frontend stubs (vlm/audio): precomputed embeddings come in via input_specs
+    frontend: str = "none"  # none | patch | frames
+    frontend_dim: int = 0
+    n_patches: int = 0
+    # io / numerics
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    q_chunk: int = 4096
+    loss_chunks: int = 1  # chunk the vocab-parallel xent over seq
+    remat: bool = True
+    remat_group: int = 1  # layers per checkpoint region (sqrt-style remat)
+    remat_policy: str = "none"  # none | dots (save matmul outputs)
+    bf16_grads: bool = False  # cast w_eff once -> bf16 grads & DP all-reduce
+    attn_scores_dtype: str = "float32"  # bfloat16 halves score HBM traffic
+    microbatches: int = 1  # gradient-accumulation chunks per step
+    scan_microbatches: bool = False  # lax.scan over microbatches (small HLO)
+    grad_accum_dtype: str = "float32"
+    seq_shard_activations: bool = False  # Megatron-style sequence parallelism
+    scan_layers: bool = False  # set by dryrun for the full-depth memory proof
+    fsdp: bool = False  # shard weight embed-dims over the data axis
+    sparse: SparseConfig = SparseConfig()
+
+    def layer_kind(self, i: int) -> str:
+        """'global' or 'local' attention for layer i."""
+        if self.global_layer_ids:
+            return "global" if i in self.global_layer_ids else "local"
+        return self.attn_pattern[i % len(self.attn_pattern)]
+
+    def is_slstm(self, i: int) -> bool:
+        return self.slstm_every > 0 and (i % self.slstm_every == self.slstm_every - 1)
+
+    @property
+    def pattern_period(self) -> int:
+        """Smallest repeating super-block (for cost extrapolation)."""
+        if self.block_type == "xlstm" and self.slstm_every:
+            return self.slstm_every
+        if self.global_layer_ids:
+            return 1  # irregular: treated per-layer (costed with local kind)
+        return len(self.attn_pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# (arch, shape) cells skipped, with reasons recorded in DESIGN.md §5 /
+# EXPERIMENTS.md. Encoder-only archs have no decode; long_500k requires
+# sub-quadratic attention (SWA / local:global / SSM / hybrid).
+SKIPS: dict[tuple[str, str], str] = {
+    ("hubert-xlarge", "decode_32k"): "encoder-only: no decode step",
+    ("hubert-xlarge", "long_500k"): "encoder-only: no decode step",
+    ("internvl2-1b", "long_500k"): "pure full attention (quadratic)",
+    ("mistral-large-123b", "long_500k"): "pure full attention (quadratic)",
+    ("command-r-plus-104b", "long_500k"): "pure full attention (quadratic)",
+    ("grok-1-314b", "long_500k"): "pure full attention (quadratic)",
+    ("qwen2-moe-a2.7b", "long_500k"): "pure full attention (quadratic)",
+}
+
+ARCH_IDS = (
+    "internvl2-1b",
+    "h2o-danube-1.8b",
+    "gemma3-4b",
+    "mistral-large-123b",
+    "command-r-plus-104b",
+    "grok-1-314b",
+    "qwen2-moe-a2.7b",
+    "hubert-xlarge",
+    "xlstm-1.3b",
+    "hymba-1.5b",
+)
+
+
+def cells():
+    """All 40 (arch x shape) pairs with skip annotations."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            out.append((a, s, SKIPS.get((a, s))))
+    return out

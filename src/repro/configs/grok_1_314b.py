@@ -1,0 +1,22 @@
+"""grok-1-314b [moe]: 8 experts top-2, attention/final logit soft-capping.
+
+[hf:xai-org/grok-1; unverified]. 64L d_model=6144 48H (GQA kv=8)
+moe_d_ff=32768 vocab=131072. Pure-MoE FFN every layer; FSDP required.
+8 experts on a 16-way model axis => intra-expert TP (see moe.py docstring).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=0, vocab_size=131072,
+    n_experts=8, top_k=2, moe_d_ff=32768, logit_softcap=30.0,
+    final_softcap=50.0, tie_embeddings=False, fsdp=True, loss_chunks=4,
+    microbatches=16, param_dtype="bfloat16", grad_accum_dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="grok-1-314b-smoke", family="moe", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=0, vocab_size=128,
+    n_experts=4, top_k=2, moe_d_ff=64, logit_softcap=30.0, final_softcap=50.0,
+    tie_embeddings=False, q_chunk=64, remat=False,
+)

@@ -1,0 +1,12 @@
+"""RigL core: the paper's contribution as composable JAX modules."""
+from .distributions import (  # noqa: F401
+    LayerSpec,
+    erdos_renyi_distribution,
+    get_distribution,
+    sparsity_overall,
+    uniform_distribution,
+)
+from .masks import apply_masks, init_masks, mask_stats, nnz, random_mask, tree_paths  # noqa: F401
+from .pruning import PruningSchedule, prune_step, snip_masks  # noqa: F401
+from .rigl import SparseAlgo, dense_to_sparse_grad, rigl_update, rigl_update_layer  # noqa: F401
+from .schedules import UpdateSchedule, cosine_decay  # noqa: F401

@@ -1,0 +1,119 @@
+"""Mask pytrees: random sparsification, application, bookkeeping.
+
+Masks mirror the params pytree; a leaf is either a bool array (sparsifiable
+weight) or ``None`` (dense parameter — biases, norms, embeddings by default).
+``None`` leaves vanish from pytree flattening, so masks cost nothing for dense
+layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "path_name",
+    "tree_paths",
+    "random_mask",
+    "init_masks",
+    "apply_masks",
+    "mask_stats",
+    "nnz",
+]
+
+
+def path_name(path) -> str:
+    """KeyPath -> 'a/b/c' string."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_paths(tree) -> dict[str, Any]:
+    """Flatten a pytree into {path_string: leaf}."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {path_name(p): v for p, v in flat}
+
+
+def random_mask(key, shape, sparsity: float, dtype=jnp.bool_):
+    """Random mask with EXACTLY round((1-sparsity)*N) nonzeros."""
+    n = int(np.prod(shape))
+    k = int(round((1.0 - sparsity) * n))
+    scores = jax.random.uniform(key, (n,))
+    # rank < k  <=>  among the k largest scores; stable & exact count.
+    rank = jnp.argsort(jnp.argsort(-scores))
+    return (rank < k).reshape(shape).astype(dtype)
+
+
+def init_masks(key, params, sparsities: Mapping[str, float]):
+    """Build the mask pytree.
+
+    sparsities maps param-path -> sparsity; paths not present (or with
+    sparsity exactly 0 and marked dense upstream) get mask ``None``.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    masks = []
+    for path, leaf in flat:
+        name = path_name(path)
+        s = sparsities.get(name)
+        if s is None:
+            masks.append(None)
+            continue
+        key, sub = jax.random.split(key)
+        masks.append(random_mask(sub, leaf.shape, s))
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def apply_masks(params, masks):
+    """Effective weights w_eff = w * m (dense leaves pass through).
+
+    Differentiating the loss w.r.t. the OUTPUT of this function yields the
+    paper's dense gradient; multiplying that by the mask gives the sparse
+    (optimizer) gradient.
+    """
+    def _apply(w, m):
+        if m is None:
+            return w
+        return w * m.astype(w.dtype)
+
+    return jax.tree_util.tree_map(
+        _apply, params, masks, is_leaf=lambda x: x is None
+    )
+
+
+def nnz(masks) -> int:
+    leaves = [l for l in jax.tree_util.tree_leaves(masks) if l is not None]
+    return int(sum(jnp.sum(l) for l in leaves)) if leaves else 0
+
+
+def mask_stats(masks) -> dict[str, Any]:
+    """Per-layer and overall sparsity bookkeeping (host-side)."""
+    out: dict[str, Any] = {"layers": {}}
+    total = 0
+    active = 0
+    for name, m in tree_paths(masks).items():
+        if m is None:
+            continue
+        size = int(np.prod(m.shape))
+        a = int(jnp.sum(m))
+        out["layers"][name] = {
+            "size": size,
+            "nnz": a,
+            "sparsity": 1.0 - a / size,
+        }
+        total += size
+        active += a
+    out["total"] = total
+    out["nnz"] = active
+    out["sparsity"] = 1.0 - active / total if total else 0.0
+    return out

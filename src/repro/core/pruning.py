@@ -1,0 +1,112 @@
+"""Dense-to-sparse baselines the paper compares against.
+
+- Gradual magnitude pruning (Zhu & Gupta 2018): sparsity ramps
+  s_t = s_f * (1 - (1 - (t - t0)/(t1 - t0))^3) between t0 and t1, pruning the
+  lowest-|w| weights every ``prune_every`` steps.  Pruned connections never
+  return (masks are monotone).
+- SNIP (Lee et al. 2019): one-shot mask at init by saliency |theta * grad|
+  (paper Appendix M bug #3: gradient-magnitude-only is catastrophically bad —
+  we implement the corrected saliency and test both orderings).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .rigl import _rank_desc
+
+__all__ = ["PruningSchedule", "pruning_target_sparsity", "prune_step", "snip_masks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PruningSchedule:
+    final_sparsity: float
+    begin_step: int
+    end_step: int
+    prune_every: int = 1000
+    initial_sparsity: float = 0.0
+
+    def target(self, t):
+        """Zhu & Gupta cubic ramp, traceable in t."""
+        t = jnp.asarray(t, jnp.float32)
+        span = max(self.end_step - self.begin_step, 1)
+        p = jnp.clip((t - self.begin_step) / span, 0.0, 1.0)
+        sf, si = self.final_sparsity, self.initial_sparsity
+        return sf + (si - sf) * (1.0 - p) ** 3
+
+    def is_prune_step(self, t):
+        t = jnp.asarray(t)
+        return (
+            (t >= self.begin_step)
+            & (t <= self.end_step)
+            & ((t - self.begin_step) % self.prune_every == 0)
+        )
+
+
+def pruning_target_sparsity(sched: PruningSchedule, t):
+    return sched.target(t)
+
+
+def _prune_layer(w, m, target_sparsity):
+    """Keep the (1-s)*N largest-|w| among currently-active (monotone)."""
+    n = w.size
+    n_keep = jnp.round((1.0 - target_sparsity) * n).astype(jnp.int32)
+    mag = jnp.where(m.reshape(-1).astype(bool), jnp.abs(w).reshape(-1).astype(jnp.float32), -jnp.inf)
+    kept = _rank_desc(mag) < n_keep
+    new_m = kept.reshape(w.shape)
+    return new_m.astype(m.dtype), w * new_m.astype(w.dtype)
+
+
+def prune_step(params, masks, t, sched: PruningSchedule):
+    """Apply gradual pruning to every masked layer (uniform per-layer target)."""
+    s_t = sched.target(t)
+
+    def _f(w, m):
+        if m is None:
+            return w, None
+        return _prune_layer(w, m, s_t)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+    new_p, new_m = [], []
+    for (path, w), m in zip(flat_p, flat_m):
+        nw_nm = _f(w, m)
+        if m is None:
+            new_p.append(w)
+            new_m.append(None)
+        else:
+            new_m.append(nw_nm[0])
+            new_p.append(nw_nm[1])
+    unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return unflat(new_p), unflat(new_m)
+
+
+def snip_masks(params, dense_grads, sparsities, saliency: str = "weight_times_grad"):
+    """One-shot SNIP masks: keep top-(1-s_l) by saliency per layer.
+
+    saliency: 'weight_times_grad' (correct, |theta * grad|) or 'grad'
+    (the Appendix-M bug #3 variant, kept for the ablation benchmark).
+    """
+    from .masks import path_name
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_flatten(dense_grads)[0]
+    out = []
+    for (path, w), g in zip(flat_p, flat_g):
+        name = path_name(path)
+        s = sparsities.get(name)
+        if s is None:
+            out.append(None)
+            continue
+        if saliency == "weight_times_grad":
+            score = jnp.abs(w * g).reshape(-1).astype(jnp.float32)
+        elif saliency == "grad":
+            score = jnp.abs(g).reshape(-1).astype(jnp.float32)
+        else:
+            raise ValueError(saliency)
+        n_keep = int(round((1.0 - s) * w.size))
+        kept = _rank_desc(score) < n_keep
+        out.append(kept.reshape(w.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,279 @@
+"""RigL connectivity updates (paper §3, Algorithm 1) + SET/SNFS growers.
+
+Drop:  remove the k lowest-|w| active connections per layer,
+       k = f_decay(t) * n_active_l  (exact count, dynamic in t).
+Grow:  activate the k highest-score inactive connections, where score is
+         rigl -> |dense gradient|        (the paper's contribution)
+         snfs -> |dense momentum|        (Dettmers & Zettlemoyer 2019)
+         set  -> uniform random          (Mocanu et al. 2018)
+       Freshly-dropped connections are eligible for regrowth, matching the
+       official google-research/rigl code.  Grown connections are initialized
+       to ZERO (paper default) so the network function is unchanged at the
+       update step, and their optimizer state is reset.
+
+Dynamic-k with static shapes: XLA requires static shapes, but k depends on the
+traced step t.  We rank scores with a stable double-argsort (unique ranks, ties
+broken by index) and compare ranks against the traced scalar k — exact counts,
+bit-deterministic, nnz preserved exactly (property-tested).
+
+Block mode (TPU-native): with block_shape=(bm, bn), drop/grow scores are pooled
+(L1) over aligned blocks of the last two dims, so the resulting mask is block
+sparse and can be executed by kernels/block_sparse_matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import UpdateSchedule
+
+__all__ = ["SparseAlgo", "rigl_update_layer", "rigl_update", "dense_to_sparse_grad"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseAlgo:
+    """Which sparse-training method is in effect."""
+
+    method: str = "rigl"  # rigl | set | snfs | static
+    schedule: UpdateSchedule = UpdateSchedule()
+    grow_init: str = "zeros"  # zeros | random | gradient  (paper tried all three)
+    block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
+
+
+def _rank_desc(x):
+    """Unique descending ranks (0 = largest); stable, deterministic."""
+    order = jnp.argsort(-x, stable=True)
+    return jnp.argsort(order, stable=True)
+
+
+def _pool_blocks(x, block_shape):
+    """Sum |x| over (bm, bn) blocks of the last two dims -> block scores."""
+    bm, bn = block_shape
+    *lead, m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, block_shape)
+    xb = x.reshape(*lead, m // bm, bm, n // bn, bn)
+    return jnp.sum(xb, axis=(-3, -1))
+
+
+def _expand_blocks(xb, block_shape, shape):
+    bm, bn = block_shape
+    *lead, m, n = shape
+    x = jnp.broadcast_to(
+        xb[..., :, None, :, None], (*lead, m // bm, bm, n // bn, bn)
+    )
+    return x.reshape(shape)
+
+
+def rigl_update_layer(
+    w,
+    mask,
+    grow_score,
+    fraction,
+    *,
+    grow_init: str = "zeros",
+    key=None,
+    block_shape=None,
+    lr: float = 0.0,
+    grad=None,
+):
+    """One layer's drop/grow.  Returns (new_mask, new_w, grown_mask).
+
+    grow_score: dense score used for growth (|g| for rigl, |momentum| for
+      snfs, uniform random for set) — same shape as w.
+    fraction: traced scalar f_decay(t).
+    """
+    f32 = jnp.float32
+    m_bool = mask.astype(bool)
+
+    if block_shape is not None:
+        mag = _pool_blocks(jnp.abs(w).astype(f32), block_shape)
+        score = _pool_blocks(jnp.abs(grow_score).astype(f32), block_shape)
+        m_blk = _pool_blocks(m_bool.astype(f32), block_shape) > 0
+        new_blk, grown_blk = _drop_grow(mag, score, m_blk, fraction)
+        new_mask = _expand_blocks(new_blk, block_shape, w.shape)
+        grown = _expand_blocks(grown_blk, block_shape, w.shape)
+    else:
+        mag = jnp.abs(w).astype(f32)
+        score = jnp.abs(grow_score).astype(f32)
+        new_mask, grown = _drop_grow(mag, score, m_bool, fraction)
+
+    if grow_init == "zeros":
+        init_val = jnp.zeros_like(w)
+    elif grow_init == "random":
+        assert key is not None
+        init_val = 0.01 * jax.random.normal(key, w.shape, w.dtype)
+    elif grow_init == "gradient":
+        assert grad is not None
+        init_val = (-lr * grad).astype(w.dtype)
+    else:
+        raise ValueError(grow_init)
+
+    new_w = jnp.where(grown, init_val, w)
+    return new_mask.astype(mask.dtype), new_w, grown
+
+
+def _drop_grow(mag, score, m_bool, fraction):
+    """Core exact-count drop/grow on flattened scores."""
+    shape = mag.shape
+    mag = mag.reshape(-1)
+    score = score.reshape(-1)
+    m = m_bool.reshape(-1)
+
+    n_active = jnp.sum(m.astype(jnp.int32))
+    k = jnp.floor(fraction * n_active).astype(jnp.int32)
+    n_keep = n_active - k
+
+    neg_inf = jnp.float32(-jnp.inf)
+    # DROP: keep the n_keep largest |w| among active.
+    drop_scores = jnp.where(m, mag, neg_inf)
+    kept = _rank_desc(drop_scores) < n_keep
+
+    # GROW: k largest grow-scores among everything not kept
+    # (inactive ∪ freshly dropped — official-code semantics).
+    grow_scores = jnp.where(kept, neg_inf, score)
+    grown = _rank_desc(grow_scores) < k
+
+    new_mask = kept | grown
+    return new_mask.reshape(shape), grown.reshape(shape)
+
+
+def rigl_update(
+    params,
+    masks,
+    dense_grads,
+    t,
+    algo: SparseAlgo,
+    key,
+    dense_momentum=None,
+    lr: float = 0.0,
+):
+    """Apply the connectivity update to every masked layer.
+
+    Returns (new_params, new_masks, grown_masks).  grown_masks is used by the
+    optimizer to reset per-connection state (momentum) of newly-activated
+    connections.  For method == 'static' this is an identity.
+
+    NOTE: callers gate this on ``algo.schedule.is_update_step(t)`` — by design
+    this lives in a SEPARATE jitted function from the hot train_step so the
+    per-step roofline stays honest and the dense-gradient work is visibly
+    amortized (paper Appendix H).
+    """
+    if algo.method == "static":
+        zeros = jax.tree_util.tree_map(
+            lambda m: None if m is None else jnp.zeros_like(m, bool),
+            masks,
+            is_leaf=lambda x: x is None,
+        )
+        return params, masks, zeros
+
+    fraction = algo.schedule.fraction(t)
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+    flat_g = jax.tree_util.tree_flatten(dense_grads)[0]
+    flat_mom = (
+        jax.tree_util.tree_flatten(dense_momentum)[0]
+        if dense_momentum is not None
+        else [None] * len(flat_p)
+    )
+
+    new_p, new_m, grown_l = [], [], []
+    for i, ((path, w), m, g, mom) in enumerate(
+        zip(flat_p, flat_m, flat_g, flat_mom)
+    ):
+        if m is None:
+            new_p.append(w)
+            new_m.append(None)
+            grown_l.append(None)
+            continue
+        sub = jax.random.fold_in(key, i)
+        if algo.method == "rigl":
+            score = g
+        elif algo.method == "snfs":
+            assert mom is not None, "snfs needs dense momentum"
+            score = mom
+        elif algo.method == "set":
+            score = jax.random.uniform(sub, w.shape)
+        else:
+            raise ValueError(algo.method)
+        nm, nw, grown = rigl_update_layer(
+            w,
+            m,
+            score,
+            fraction,
+            grow_init=algo.grow_init,
+            key=sub,
+            block_shape=algo.block_shape,
+            lr=lr,
+            grad=g,
+        )
+        new_p.append(nw)
+        new_m.append(nm)
+        grown_l.append(grown)
+
+    unflatten = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    return unflatten(new_p), unflatten(new_m), unflatten(grown_l)
+
+
+def dense_to_sparse_grad(dense_grads, masks):
+    """g_sparse = g_dense * m  (paper: optimizer only sees active connections)."""
+    def _mul(g, m):
+        if m is None:
+            return g
+        return g * m.astype(g.dtype)
+
+    return jax.tree_util.tree_map(
+        _mul, dense_grads, masks, is_leaf=lambda x: x is None
+    )
+
+
+def dsr_update(params, masks, t, algo: SparseAlgo, key):
+    """Dynamic Sparse Reparameterization (Mostafa & Wang 2019) — the paper's
+    Fig 2-left "DSR" row: drop by a GLOBAL magnitude threshold (per-layer
+    budgets shift), grow at random across all layers.  Total nnz is
+    preserved but per-layer sparsity is free to move — which is why DSR
+    cannot target a fixed FLOP budget (paper Table 1 "Selectable FLOPs: no").
+    """
+    fraction = algo.schedule.fraction(t)
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+
+    mags, actives, sizes = [], [], []
+    for (path, w), m in zip(flat_p, flat_m):
+        if m is None:
+            continue
+        mags.append(jnp.abs(w).astype(jnp.float32).reshape(-1))
+        actives.append(m.reshape(-1).astype(bool))
+        sizes.append(w.size)
+    all_mag = jnp.concatenate(mags)
+    all_act = jnp.concatenate(actives)
+    n_active = jnp.sum(all_act.astype(jnp.int32))
+    k = jnp.floor(fraction * n_active).astype(jnp.int32)
+
+    drop_scores = jnp.where(all_act, all_mag, -jnp.inf)
+    kept = _rank_desc(drop_scores) < (n_active - k)
+    grow_scores = jnp.where(kept, -jnp.inf, jax.random.uniform(key, all_mag.shape))
+    grown = _rank_desc(grow_scores) < k
+    new_all = kept | grown
+
+    new_p, new_m, grown_l = [], [], []
+    off = 0
+    i = 0
+    for (path, w), m in zip(flat_p, flat_m):
+        if m is None:
+            new_p.append(w)
+            new_m.append(None)
+            grown_l.append(None)
+            continue
+        sl = slice(off, off + sizes[i])
+        nm = new_all[sl].reshape(w.shape)
+        gr = grown[sl].reshape(w.shape)
+        new_p.append(jnp.where(gr, jnp.zeros_like(w), w))
+        new_m.append(nm.astype(m.dtype))
+        grown_l.append(gr)
+        off += sizes[i]
+        i += 1
+    unflatten = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return unflatten(new_p), unflatten(new_m), unflatten(grown_l)

@@ -1,0 +1,54 @@
+"""Mask-update schedules (paper §3.2 + Appendix G).
+
+``f_decay(t)`` gives the fraction of each layer's connections updated at step t.
+All functions are jnp-traceable (used inside jitted update steps) and also work
+on python ints/floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["UpdateSchedule", "cosine_decay", "constant_decay", "inverse_power_decay"]
+
+
+def cosine_decay(t, alpha: float, t_end: int):
+    """f_decay(t) = alpha/2 * (1 + cos(t*pi/T_end))   (paper eq., default)."""
+    return 0.5 * alpha * (1.0 + jnp.cos(jnp.pi * t / t_end))
+
+
+def constant_decay(t, alpha: float, t_end: int):
+    return alpha * jnp.ones_like(jnp.asarray(t, jnp.float32))
+
+
+def inverse_power_decay(t, alpha: float, t_end: int, k: int = 3):
+    """alpha * (1 - t/T_end)^k;  k=1 is the linear schedule (Appendix G)."""
+    return alpha * (1.0 - jnp.asarray(t, jnp.float32) / t_end) ** k
+
+
+_DECAYS: dict[str, Callable] = {
+    "cosine": cosine_decay,
+    "constant": constant_decay,
+    "linear": lambda t, a, te: inverse_power_decay(t, a, te, k=1),
+    "inverse_power": inverse_power_decay,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSchedule:
+    """Paper defaults: delta_t=100, alpha=0.3, t_end = 3/4 of training."""
+
+    delta_t: int = 100
+    t_end: int = 25_000
+    alpha: float = 0.3
+    decay: str = "cosine"
+
+    def fraction(self, t):
+        return _DECAYS[self.decay](t, self.alpha, self.t_end)
+
+    def is_update_step(self, t):
+        """Traceable predicate: t % delta_t == 0 and t < t_end (and t > 0)."""
+        t = jnp.asarray(t)
+        return (t % self.delta_t == 0) & (t < self.t_end) & (t > 0)

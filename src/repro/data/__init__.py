@@ -1,0 +1,3 @@
+from .synthetic import batch_for, lm_batch, affine_lm_batch  # noqa: F401
+from .teacher import make_teacher, teacher_batch  # noqa: F401
+from .text import byte_corpus, text_batch  # noqa: F401

@@ -1,0 +1,55 @@
+"""Deterministic synthetic data streams.
+
+Every batch is a pure function of (step, host_id, n_hosts) via stateless
+threefry — any host can recompute any shard (straggler/elastic recovery:
+a restarted or replacement host needs no data-state handoff, just the step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_batch", "affine_lm_batch", "vlm_batch", "frames_batch"]
+
+
+def _key(seed: int, step: int, host_id: int):
+    return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), host_id)
+
+
+def lm_batch(cfg, step: int, batch: int, seq: int, *, seed: int = 17, host_id: int = 0):
+    """Random tokens + random targets (shape/throughput work only)."""
+    k = _key(seed, step, host_id)
+    toks = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
+    tgts = jax.random.randint(jax.random.fold_in(k, 1), (batch, seq), 0, cfg.vocab_size)
+    return {"tokens": toks, "targets": tgts}
+
+
+def affine_lm_batch(cfg, step: int, batch: int, seq: int, *, seed: int = 17, host_id: int = 0):
+    """Learnable task: target = (a*token + b) mod V — used by smoke benchmarks."""
+    k = _key(seed, step, host_id)
+    toks = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
+    return {"tokens": toks, "targets": (toks * 3 + 7) % cfg.vocab_size}
+
+
+def vlm_batch(cfg, step: int, batch: int, seq: int, **kw):
+    b = affine_lm_batch(cfg, step, batch, seq - cfg.n_patches, **kw)
+    k = _key(kw.get("seed", 17) + 1, step, kw.get("host_id", 0))
+    b["patches"] = jax.random.normal(k, (batch, cfg.n_patches, cfg.frontend_dim), jnp.float32)
+    return b
+
+
+def frames_batch(cfg, step: int, batch: int, seq: int, *, seed: int = 17, host_id: int = 0):
+    k = _key(seed, step, host_id)
+    frames = jax.random.normal(k, (batch, seq, cfg.frontend_dim), jnp.float32)
+    # learnable: class = sign structure of the frame energy
+    tgts = (jnp.sum(frames**2, -1) * 7).astype(jnp.int32) % cfg.vocab_size
+    return {"frames": frames, "targets": tgts}
+
+
+def batch_for(cfg, step: int, batch: int, seq: int, *, learnable: bool = False, **kw):
+    if cfg.frontend == "patch":
+        return vlm_batch(cfg, step, batch, seq, **kw)
+    if cfg.frontend == "frames":
+        return frames_batch(cfg, step, batch, seq, **kw)
+    fn = affine_lm_batch if learnable else lm_batch
+    return fn(cfg, step, batch, seq, **kw)

@@ -1,0 +1,31 @@
+"""Planted sparse-teacher tasks: ground-truth sparse topology is KNOWN.
+
+A fixed random sparse teacher network generates targets; a student of the
+same architecture trained at matched sparsity probes whether the grow
+criterion can find useful topology — a sharper test of RigL's mechanism than
+any natural dataset (benchmarks/methods_comparison.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_teacher", "teacher_batch"]
+
+
+def make_teacher(key, d_in=32, d_hidden=128, d_out=16, sparsity=0.9):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (d_in, d_hidden)) / jnp.sqrt(d_in)
+    w2 = jax.random.normal(k2, (d_hidden, d_out)) / jnp.sqrt(d_hidden)
+    m1 = jax.random.uniform(k3, w1.shape) > sparsity
+    m2 = jax.random.uniform(jax.random.fold_in(k3, 1), w2.shape) > sparsity
+    return {"w1": w1 * m1, "w2": w2 * m2}
+
+
+def teacher_batch(teacher, step: int, batch: int = 256, *, seed: int = 5, noise=0.01):
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    x = jax.random.normal(k, (batch, teacher["w1"].shape[0]))
+    h = jax.nn.relu(x @ teacher["w1"])
+    y = h @ teacher["w2"]
+    y = y + noise * jax.random.normal(jax.random.fold_in(k, 1), y.shape)
+    return x, y

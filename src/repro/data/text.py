@@ -1,0 +1,47 @@
+"""Byte-level text corpus from local files (offline-available real text).
+
+Used by the paper-reproduction char-LM benchmark (§4.2 analog): WikiText-103
+is not available offline, so we build a byte corpus from this repository's
+own source/docs — real, structured text with byte vocab 256, deterministic
+windows keyed by (step, index).
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+
+import numpy as np
+
+__all__ = ["byte_corpus", "text_batch"]
+
+
+@functools.lru_cache(maxsize=4)
+def byte_corpus(root: str = ".", exts: tuple[str, ...] = (".py", ".md")) -> np.ndarray:
+    chunks = []
+    for p in sorted(pathlib.Path(root).rglob("*")):
+        if p.suffix in exts and p.is_file() and "node_modules" not in str(p):
+            try:
+                chunks.append(p.read_bytes())
+            except OSError:
+                continue
+    data = b"\n".join(chunks)
+    assert len(data) > 10_000, "corpus too small"
+    return np.frombuffer(data, dtype=np.uint8)
+
+
+def text_batch(step: int, batch: int, seq: int, *, corpus=None, seed: int = 23,
+               host_id: int = 0, split: str = "train"):
+    corpus = byte_corpus() if corpus is None else corpus
+    n = len(corpus) - seq - 1
+    cut = int(n * 0.95)
+    rng = np.random.default_rng(seed * 1_000_003 + step * 613 + host_id)
+    if split == "train":
+        starts = rng.integers(0, cut, size=batch)
+    else:
+        starts = rng.integers(cut, n, size=batch)
+    idx = starts[:, None] + np.arange(seq + 1)[None, :]
+    windows = corpus[idx]
+    return {
+        "tokens": windows[:, :-1].astype(np.int32),
+        "targets": windows[:, 1:].astype(np.int32),
+    }

@@ -1,0 +1,111 @@
+"""Block-sparse matmul — the TPU-native execution of RigL sparsity.
+
+Unstructured sparsity cannot skip work on a 128x128 systolic MXU, so the TPU
+adaptation constrains RigL's drop/grow to (bk x bn)-aligned weight blocks
+(core.rigl block_shape mode).  This kernel then *skips inactive blocks
+entirely*: for every output column-block j we precompute the list of active
+K-blocks (a CSC-style index set, padded to the max count), pass it via scalar
+prefetch, and let the BlockSpec index_map DMA only active w-tiles from HBM.
+
+HBM traffic and MXU work both scale with (1 - block_sparsity) — this is the
+"sparse primitives" scenario (3) of the paper's Discussion, realized for TPU.
+
+Grid: (M/bm, N/bn, max_active_k); zero-padding contributes nothing because
+padded slots re-load an arbitrary valid block but are masked by @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["block_sparse_matmul", "pack_block_mask"]
+
+
+def pack_block_mask(block_mask):
+    """block_mask: (K/bk, N/bn) bool -> (indices (N/bn, max_k), counts (N/bn,)).
+
+    Static (host-side) packing: RigL updates the topology every delta_t >= 100
+    steps, so the packing is amortized over >= 100 matmuls.
+    """
+    bm = np.asarray(block_mask)
+    nkb, nnb = bm.shape
+    counts = bm.sum(axis=0).astype(np.int32)
+    max_k = max(int(counts.max()), 1)
+    idx = np.zeros((nnb, max_k), np.int32)
+    for j in range(nnb):
+        act = np.nonzero(bm[:, j])[0]
+        idx[j, : len(act)] = act
+    return jnp.asarray(idx), jnp.asarray(counts)
+
+
+def _kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)
+
+    @pl.when(k < cnt_ref[j])
+    def _accum():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """x: (M, K) @ block-sparse w: (K, N) -> (M, N).
+
+    block_idx: (N/bn, max_k) int32 — active K-block ids per N-block (packed).
+    block_cnt: (N/bn,) int32 — number of active K-blocks per N-block.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and N % bn == 0 and K % bk == 0 and M % bm == 0
+    max_k = block_idx.shape[1]
+    grid = (M // bm, N // bn, max_k)
+
+    def x_map(m, n, k, idx_ref, cnt_ref):
+        return (m, idx_ref[n, jnp.minimum(k, cnt_ref[n] - 1)])
+
+    def w_map(m, n, k, idx_ref, cnt_ref):
+        return (idx_ref[n, jnp.minimum(k, cnt_ref[n] - 1)], n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k, *_: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=max_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(block_idx, block_cnt, x, w)

@@ -1,0 +1,98 @@
+"""Flash attention (forward) — the structural fix for the dominant roofline
+term found in EXPERIMENTS.md §Perf: attention scores never visit HBM.
+
+Online-softmax tiling (Dao et al., adapted to TPU): grid (batch*heads, Sq/bq,
+Sk/bk) with the KV loop innermost; running (max, sum, acc) live in VMEM
+scratch across KV steps. Causal blocks above the diagonal are skipped with
+@pl.when (their DMA is cheap relative to the saved MXU work; a production
+variant would also clip the grid per q-row).
+
+Used as the serving-path attention on TPU; the dry-run path keeps the
+pure-jnp chunked attention (pallas cannot lower for TPU on a CPU host), with
+the HBM saving quantified analytically in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_k, bq, bk, causal, scale):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+
+    should_run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        should_run = kb * bk < (qb + 1) * bq
+
+    @pl.when(should_run)
+    def _step():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q, k, v: (BH, S, d) -> (BH, S, d). Scores never materialize in HBM."""
+    BH, S, d = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    n_q, n_k = S // bq, S // bk
+    scale = float(1.0 / np.sqrt(d))
+    grid = (BH, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_k=n_k, bq=bq, bk=bk, causal=causal, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

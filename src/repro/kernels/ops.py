@@ -1,0 +1,84 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret (python-executed
+kernel bodies) elsewhere — the CPU CI validates kernel semantics against
+ref.py; the BlockSpec tiling targets TPU v5e VMEM (128-aligned tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_sparse_matmul import block_sparse_matmul, pack_block_mask
+from .masked_matmul import masked_matmul
+from .topk_threshold import N_BINS, histogram_abs
+
+__all__ = [
+    "masked_linear",
+    "block_sparse_linear",
+    "topk_threshold",
+    "auto_interpret",
+]
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
+    """out = x @ (w*mask) with the mask fused into the matmul pipeline."""
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    *lead, K = x.shape
+    x2 = x.reshape(-1, K)
+    out = masked_matmul(x2, w, mask, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out.reshape(*lead, w.shape[1])
+
+
+def block_sparse_linear(x, w, block_mask, *, block=(128, 128, 128), interpret=None):
+    """out = x @ w_blocksparse, skipping inactive (bk x bn) blocks entirely."""
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    idx, cnt = pack_block_mask(block_mask)
+    *lead, K = x.shape
+    x2 = x.reshape(-1, K)
+    out = block_sparse_matmul(
+        x2, w, idx, cnt, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    return out.reshape(*lead, w.shape[1])
+
+
+def topk_threshold(x, k: int, *, refine: bool = True, interpret=None):
+    """Threshold t s.t. |{i: |x_i| >= t}| ~= k, via streaming histogram.
+
+    One pass + optional one refinement pass over the bracketing bin;
+    |count - k| <= occupancy of one (refined) bin.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    hi = jnp.max(jnp.abs(x)).astype(jnp.float32) + 1e-12
+    hist = histogram_abs(x, hi, interpret=interpret)[0]
+    # cumulative count from the TOP bin down
+    desc = jnp.cumsum(hist[::-1])
+    bin_from_top = jnp.argmax(desc >= k)  # first bin where count >= k
+    lo_edge = (N_BINS - 1 - bin_from_top) * (hi / N_BINS)
+    if not refine:
+        return lo_edge
+    # refinement: histogram only the bracketing bin's range
+    upper = lo_edge + hi / N_BINS
+    in_above = jnp.sum(jnp.abs(x.astype(jnp.float32)) >= upper)
+    sub = jnp.where(
+        (jnp.abs(x.astype(jnp.float32)) >= lo_edge)
+        & (jnp.abs(x.astype(jnp.float32)) < upper),
+        jnp.abs(x.astype(jnp.float32)) - lo_edge,
+        -1.0,
+    )
+    hist2 = histogram_abs(
+        jnp.where(sub >= 0, sub, 2 * hi), hi / N_BINS, interpret=interpret
+    )[0]
+    need = k - in_above
+    desc2 = jnp.cumsum(hist2[::-1])
+    b2 = jnp.argmax(desc2 >= need)
+    return lo_edge + (N_BINS - 1 - b2) * (hi / N_BINS / N_BINS)

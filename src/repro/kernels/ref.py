@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "masked_matmul_ref",
+    "block_sparse_matmul_ref",
+    "histogram_abs_ref",
+    "kth_value_ref",
+]
+
+
+def masked_matmul_ref(x, w, mask):
+    return (x @ (w * mask.astype(w.dtype))).astype(x.dtype)
+
+
+def block_sparse_matmul_ref(x, w, block_mask, bk: int, bn: int):
+    """block_mask: (K/bk, N/bn) bool expanded over (bk, bn) tiles."""
+    K, N = w.shape
+    dense_mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=0), bn, axis=1)
+    return (x @ (w * dense_mask.astype(w.dtype))).astype(x.dtype)
+
+
+def histogram_abs_ref(x, hi, n_bins: int = 512):
+    a = jnp.abs(x.reshape(-1).astype(jnp.float32))
+    scaled = jnp.clip(a / hi, 0.0, 1.0 - 1e-7) * n_bins
+    return jnp.histogram(scaled, bins=n_bins, range=(0, n_bins))[0].astype(
+        jnp.float32
+    )[None, :]
+
+
+def kth_value_ref(x, k: int):
+    """Exact k-th largest |x| (the threshold RigL's drop step needs)."""
+    a = jnp.sort(jnp.abs(x.reshape(-1).astype(jnp.float32)))[::-1]
+    return a[k - 1]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """(BH, S, d) standard softmax attention oracle."""
+    import numpy as _np
+
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s / _np.sqrt(d)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", w, v)

@@ -1,0 +1,72 @@
+"""Histogram k-th-value selection for RigL drop/grow on huge layers.
+
+Exact top-k on a 10^8-element weight tensor needs a full sort (O(N log N),
+multiple HBM passes).  RigL only needs a *threshold* separating the top k
+magnitudes — this kernel computes a 512-bin histogram of |x| in ONE streaming
+HBM pass (grid over tiles, accumulating into a VMEM histogram via the
+revisited-output pattern); the k-th-value bracket then falls out of a tiny
+cumsum on host/XLA.  Paper §3(4): "gradients can be calculated in an online
+manner and only the top-k values stored" — this is that, TPU-style.
+
+The returned threshold is exact up to one bin width; callers either accept
+|selected| within (k ± bin occupancy) — RigL is robust to that — or refine
+with a second pass over the bracketing bin (kernels.ops.topk_threshold does
+one refinement).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["histogram_abs"]
+
+N_BINS = 512
+
+
+def _kernel(x_ref, lim_ref, hist_ref, *, n_tiles: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = jnp.abs(x_ref[...].astype(jnp.float32)).reshape(-1)
+    hi = lim_ref[0, 0]
+    scaled = jnp.clip(x / hi, 0.0, 1.0 - 1e-7) * N_BINS
+    bins = scaled.astype(jnp.int32)
+    # one-hot accumulate: (tile, N_BINS) matmul-free histogram
+    onehot = (bins[:, None] == jnp.arange(N_BINS)[None, :]).astype(jnp.float32)
+    hist_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def histogram_abs(x, hi, *, tile: int = 65536, interpret: bool = False):
+    """x: any shape; hi: scalar upper bound (e.g. max|x|).
+
+    Returns (1, N_BINS) float32 histogram of |x| over [0, hi).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    tile = min(tile, n)
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    n_tiles = flat.shape[0] // tile
+    lim = jnp.asarray(hi, jnp.float32).reshape(1, 1)
+    hist = pl.pallas_call(
+        functools.partial(_kernel, n_tiles=n_tiles),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda t: (0, t)),
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N_BINS), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N_BINS), jnp.float32),
+        interpret=interpret,
+    )(flat.reshape(1, -1), lim)
+    if pad:  # remove the padding zeros from bin 0
+        hist = hist.at[0, 0].add(-float(pad))
+    return hist

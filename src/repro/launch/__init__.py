@@ -1,0 +1,2 @@
+from .mesh import make_local_mesh, make_production_mesh  # noqa: F401
+from .sharding import batch_shardings, param_shardings, resolve_spec  # noqa: F401

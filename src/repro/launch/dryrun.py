@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run entry point (sets 512 host devices BEFORE any jax import).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch h2o-danube-1.8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Lowers + compiles every (architecture x input-shape) cell on the production
+meshes (16x16 single-pod, 2x16x16 multi-pod), printing memory_analysis() and
+cost_analysis(), and writes roofline artifacts to artifacts/dryrun/.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, SKIPS  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from . import dryrun_lib  # noqa: E402
+
+
+def run_one(arch, shape, mesh, mesh_name, args):
+    skip = SKIPS.get((arch, shape))
+    if skip:
+        print(f"[dryrun] SKIP {arch} x {shape}: {skip}")
+        dryrun_lib.run_cell(arch, shape, mesh, tag=args.tag)
+        return True
+    try:
+        art = dryrun_lib.run_cell(
+            arch,
+            shape,
+            mesh,
+            full_depth=not args.no_full_depth,
+            proof_only=args.proof_only,
+            tag=args.tag,
+        )
+        rl = art["roofline"]
+        mem = art.get("memory", {})
+        model_gib = mem.get("model", {}).get("total", 0) / 2**30
+        print(
+            f"[dryrun] OK {arch} x {shape} x {mesh_name}: "
+            f"compute {rl['compute_s']:.3e}s memory {rl['memory_s']:.3e}s "
+            f"collective {rl['collective_s']:.3e}s dominant={rl['dominant']} "
+            f"hbm-model {model_gib:.2f} GiB/device fits16G={mem.get('fits_16g_hbm')} "
+            f"(wall {art['wall_s']:.0f}s)"
+        )
+        return True
+    except Exception:
+        print(f"[dryrun] FAIL {arch} x {shape} x {mesh_name}")
+        traceback.print_exc()
+        return False
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--no-full-depth", action="store_true",
+                   help="skip the full-depth memory-proof compile (cost terms only)")
+    p.add_argument("--proof-only", action="store_true",
+                   help="full-depth compile proof only (no roofline lowerings)")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    ok = True
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                ok &= run_one(arch, shape, mesh, name, args)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Logical-axis -> mesh sharding resolution with divisibility fallback.
+
+Every param/activation dim carries a logical axis name (models/*.py).  The
+resolver walks a priority list, assigning mesh axes greedily:
+
+  - a mesh axis is used at most once per array;
+  - an assignment is skipped unless the dim is exactly divisible;
+  - first-fit in PRIORITY order, so e.g. MoE expert banks put "model" on the
+    experts dim when E divides it (EP) and otherwise fall through to the ff
+    dim (intra-expert TP) — this single rule makes every assigned arch
+    (14-head GQA, 8-expert grok, 60-expert qwen, ...) compile on a 16-way
+    model axis.
+
+FSDP: weight "embed" dims additionally shard over the *data* axis (intra-pod
+only — inter-pod links never carry weight all-gathers).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .mesh import dp_axes
+
+__all__ = ["resolve_spec", "param_shardings", "batch_shardings", "cache_axes"]
+
+# Logical axis -> candidate mesh axes, tried in order.
+MODEL_AXES = ("experts", "heads", "kv_heads", "mlp", "moe_mlp", "vocab")
+# resolution priority within one array (first match wins the mesh axis)
+PRIORITY = [
+    "experts",
+    "heads",
+    "kv_heads",
+    "moe_mlp",
+    "mlp",
+    "vocab",
+    "act_batch",  # batch first; KV-seq sharding picks up whatever is idle
+    "act_kv_seq",  # decode KV fallback: flash-decoding style seq sharding
+    "embed",  # FSDP (data axis), weights only
+]
+
+
+def _rules(mesh, *, fsdp: bool):
+    dp = dp_axes(mesh)
+    r: dict[str, tuple[tuple[str, ...], ...]] = {
+        name: (("model",),) for name in MODEL_AXES
+    }
+    # decode KV-seq: grab every axis the (possibly tiny) batch left idle —
+    # long_500k (batch=1) gets 256/512-way flash-decoding-style seq sharding
+    r["act_kv_seq"] = ((*dp, "model"), ("data", "model"), ("model",))
+    r["act_batch"] = (dp,)
+    if fsdp:
+        r["embed"] = (("data",),)
+    return r
+
+
+def resolve_spec(axes, shape, mesh, *, fsdp: bool = False, min_fsdp_size: int = 2**16):
+    """axes: tuple of logical names (or None) per dim -> PartitionSpec."""
+    rules = _rules(mesh, fsdp=fsdp)
+    spec: list = [None] * len(shape)
+    used: set[str] = set()
+    order = sorted(
+        [i for i, a in enumerate(axes) if a in rules],
+        key=lambda i: PRIORITY.index(axes[i]) if axes[i] in PRIORITY else 99,
+    )
+    size = int(np.prod(shape)) if len(shape) else 0
+    for i in order:
+        if axes[i] == "embed" and size < min_fsdp_size:
+            continue  # don't FSDP-shard tiny vectors (norm scales, biases)
+        for cand in rules[axes[i]]:
+            cand = tuple(c for c in cand if c in mesh.axis_names)
+            if not cand or any(c in used for c in cand):
+                continue
+            n = int(np.prod([mesh.shape[c] for c in cand]))
+            if shape[i] % n != 0:
+                continue
+            spec[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+    return PartitionSpec(*spec)
+
+
+def param_shardings(axes_tree, shapes_tree, mesh, *, fsdp: bool = False):
+    """Trees of logical axes + ShapeDtypeStructs -> tree of NamedSharding."""
+    def f(axes, shp):
+        return NamedSharding(mesh, resolve_spec(axes, shp.shape, mesh, fsdp=fsdp))
+
+    return jax.tree_util.tree_map(
+        f, axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def state_shardings(state, axes_tree, mesh, *, fsdp: bool = False):
+    """Sharding tree for a full TrainState (params/masks/opt/scalars).
+
+    Optimizer per-connection state (momentum / m / v, SNFS dense_mom) inherits
+    the exact param shardings — with fsdp=True this is ZeRO-style sharded
+    optimizer state for free.
+    """
+    rep = NamedSharding(mesh, PartitionSpec())
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state["params"]
+    )
+    p_sh = param_shardings(axes_tree, shapes, mesh, fsdp=fsdp)
+    m_sh = jax.tree_util.tree_map(
+        lambda m, s: s if m is not None else None,
+        state["masks"],
+        p_sh,
+        is_leaf=lambda x: x is None,
+    )
+    opt_sh = {
+        k: (p_sh if k in ("momentum", "m", "v") else rep) for k in state["opt"]
+    }
+    out = {
+        "step": rep,
+        "params": p_sh,
+        "masks": m_sh,
+        "opt": opt_sh,
+        "rng": rep,
+    }
+    if "dense_mom" in state:
+        out["dense_mom"] = p_sh
+    return out
+
+
+def batch_shardings(batch_tree, mesh):
+    """Inputs: batch dim over all DP axes (divisibility permitting)."""
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def f(x):
+        spec = [None] * len(x.shape)
+        if len(x.shape) and x.shape[0] % n_dp == 0:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    return jax.tree_util.tree_map(f, batch_tree)
+
+
+# logical axes for cache leaves (mirrors models.model.init_caches structure)
+KV_AXES = ("act_batch", "act_kv_seq", "kv_heads", "head_dim")
+SSM_AXES = {"h": ("act_batch", "mlp", None), "conv": ("act_batch", None, "mlp")}
+MLSTM_AXES = {
+    "C": ("act_batch", "heads", None, None),
+    "n": ("act_batch", "heads", None),
+    "m": ("act_batch", "heads"),
+}
+SLSTM_AXES = {k: ("act_batch", "heads", None) for k in ("c", "n", "h", "m")}
+
+
+def cache_axes(cfg):
+    """Axes tree matching init_caches(cfg, ...)."""
+    out = []
+    for i in range(cfg.n_layers):
+        if cfg.block_type == "xlstm":
+            out.append(
+                {"slstm": dict(SLSTM_AXES)}
+                if cfg.is_slstm(i)
+                else {"mlstm": dict(MLSTM_AXES)}
+            )
+            continue
+        c = {"kv": {"k": KV_AXES, "v": KV_AXES}}
+        if cfg.block_type == "hymba":
+            c["ssm"] = dict(SSM_AXES)
+        out.append(c)
+    return out

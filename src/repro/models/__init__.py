@@ -1,0 +1,10 @@
+"""Pure-functional JAX model zoo with RigL-sparsifiable weights."""
+from .layers import P, split_params  # noqa: F401
+from .model import (  # noqa: F401
+    init_caches,
+    init_lm,
+    lm_decode,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)

@@ -1,0 +1,82 @@
+"""The paper's §4.2 character-LM: embed(128) -> GRU(512) -> 256 -> 128 -> vocab.
+
+GRU kernels and readout layers are RigL-sparsifiable (the paper sparsifies
+these to 75%).  Used by benchmarks/char_lm.py to reproduce Figure 4-left.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import P, linear, linear_init, split_params
+
+__all__ = ["gru_lm_init", "gru_lm_apply"]
+
+
+def gru_init(key, n_in: int, n_state: int, *, sparse: bool = True):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": _p(k1, (n_in, 3 * n_state), sparse),
+        "wh": _p(k2, (n_state, 3 * n_state), sparse),
+        "b": P(jnp.zeros((3 * n_state,)), (None,), False),
+    }
+
+
+def _p(key, shape, sparse):
+    return {
+        "w": P(
+            (jax.random.normal(key, shape) / np.sqrt(shape[0])).astype(jnp.float32),
+            ("embed", "mlp"),
+            sparse,
+        )
+    }
+
+
+def gru_apply(p, x, h0=None):
+    """x: (B, S, n_in) -> (B, S, n_state)."""
+    B, S, _ = x.shape
+    n_state = p["wh"]["w"].shape[0]
+    wx = linear(p["wx"], x, jnp.float32) + p["b"]  # (B,S,3n)
+    if h0 is None:
+        h0 = jnp.zeros((B, n_state), jnp.float32)
+    wh_w = p["wh"]["w"]
+
+    def step(h, wx_t):
+        rz_h = h @ wh_w[:, : 2 * n_state]
+        r = jax.nn.sigmoid(wx_t[:, :n_state] + rz_h[:, :n_state])
+        z = jax.nn.sigmoid(wx_t[:, n_state : 2 * n_state] + rz_h[:, n_state:])
+        c = jnp.tanh(wx_t[:, 2 * n_state :] + (r * h) @ wh_w[:, 2 * n_state :])
+        h_new = (1 - z) * c + z * h
+        return h_new, h_new
+
+    h, hs = jax.lax.scan(step, h0, jnp.swapaxes(wx, 0, 1))
+    return jnp.swapaxes(hs, 0, 1), h
+
+
+def gru_lm_init(key, vocab: int = 256, d_embed: int = 128, d_state: int = 512):
+    """Exact paper architecture (Appendix I)."""
+    ks = jax.random.split(key, 5)
+    tree = {
+        "embed": {
+            "table": P(
+                (0.02 * jax.random.normal(ks[0], (vocab, d_embed))).astype(jnp.float32),
+                ("vocab", "embed"),
+                False,
+            )
+        },
+        "gru": gru_init(ks[1], d_embed, d_state),
+        "ro1": linear_init(ks[2], d_state, 256, ("embed", "mlp")),
+        "ro2": linear_init(ks[3], 256, 128, ("embed", "mlp")),
+        "head": linear_init(ks[4], 128, vocab, ("embed", "vocab")),
+    }
+    return split_params(tree)
+
+
+def gru_lm_apply(params, tokens):
+    """tokens: (B, S) -> logits (B, S, vocab)."""
+    x = params["embed"]["table"][tokens]
+    hs, _ = gru_apply(params["gru"], x)
+    h = jax.nn.relu(linear(params["ro1"], hs, jnp.float32))
+    h = jax.nn.relu(linear(params["ro2"], h, jnp.float32))
+    return linear(params["head"], h, jnp.float32)

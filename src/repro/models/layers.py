@@ -1,0 +1,173 @@
+"""Parameter primitives for the pure-functional model zoo.
+
+Params are nested dicts of arrays.  At init time every leaf is a ``P`` bundle
+carrying (value, logical_axes, sparsifiable); ``split_params`` separates the
+three parallel trees.  Logical axes drive sharding (launch/sharding.py) and
+``sparsifiable`` marks the weights RigL operates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "P",
+    "split_params",
+    "linear_init",
+    "linear",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "embed_init",
+    "conv1d_causal_init",
+    "conv1d_causal",
+]
+
+
+@dataclasses.dataclass
+class P:
+    """Init-time parameter bundle (NOT a pytree leaf in the final params)."""
+
+    value: Any
+    axes: tuple[str | None, ...]
+    sparse: bool = False
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def split_params(tree):
+    """Tree of P -> (params, axes, sparse_flags) with identical structure."""
+    params = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_p)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_p)
+    sparse = jax.tree_util.tree_map(lambda p: p.sparse, tree, is_leaf=_is_p)
+    return params, axes, sparse
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    """Fan-in scaled init (matches the paper's conv/dense init spirit)."""
+    stddev = scale / np.sqrt(max(shape[-2] if len(shape) >= 2 else shape[-1], 1))
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def linear_init(
+    key,
+    n_in: int,
+    n_out: int,
+    axes: tuple[str | None, ...] = ("embed", "mlp"),
+    *,
+    sparse: bool = True,
+    scale: float = 1.0,
+    dtype=jnp.float32,
+    bias: bool = False,
+):
+    w = P(truncated_normal_init(key, (n_in, n_out), scale, dtype), axes, sparse)
+    if not bias:
+        return {"w": w}
+    return {"w": w, "b": P(jnp.zeros((n_out,), dtype), (axes[-1],), False)}
+
+
+def linear(p, x, compute_dtype=None):
+    """compute_dtype=None inherits x.dtype (the model's compute dtype flows
+    from the embedding; f32 configs stay f32 end-to-end)."""
+    dt = compute_dtype or x.dtype
+    w = p["w"].astype(dt)
+    y = x.astype(dt) @ w
+    if "b" in p:
+        y = y + p["b"].astype(dt)
+    return y
+
+
+def rmsnorm_init(d: int, axes=("embed",), dtype=jnp.float32):
+    return {"scale": P(jnp.ones((d,), dtype), axes, False)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, axes=("embed",), dtype=jnp.float32):
+    return {
+        "scale": P(jnp.ones((d,), dtype), axes, False),
+        "bias": P(jnp.zeros((d,), dtype), axes, False),
+    }
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32, sparse: bool = False):
+    # Paper keeps embeddings dense (they scale with neurons, not connections).
+    val = (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+    return {"table": P(val, ("vocab", "embed"), sparse)}
+
+
+def embed_lookup(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def embed_logits(p, x, compute_dtype=jnp.bfloat16):
+    """Tied read-out: x @ table.T (vocab-parallel under TP)."""
+    return x.astype(compute_dtype) @ p["table"].astype(compute_dtype).T
+
+
+def conv1d_causal_init(key, d: int, width: int, axes=("conv_k", "mlp"), dtype=jnp.float32):
+    """Depthwise causal conv (mamba/mLSTM front conv). Kept dense (tiny)."""
+    val = (jax.random.normal(key, (width, d)) / np.sqrt(width)).astype(dtype)
+    return {"w": P(val, axes, False), "b": P(jnp.zeros((d,), dtype), (axes[-1],), False)}
+
+
+def conv1d_causal(p, x, compute_dtype=None):
+    """x: (B, S, d) depthwise causal conv along S."""
+    compute_dtype = compute_dtype or x.dtype
+    w = p["w"].astype(compute_dtype)  # (K, d)
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return y + p["b"].astype(compute_dtype)
+
+
+def conv1d_causal_step(p, state, x_t, compute_dtype=None):
+    """Decode step: state (B, K-1, d) holds the last K-1 inputs."""
+    compute_dtype = compute_dtype or x_t.dtype
+    w = p["w"].astype(compute_dtype)
+    k = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, d)
+    y = jnp.einsum("bkd,kd->bd", window, w) + p["b"].astype(compute_dtype)
+    return window[:, 1:, :], y
+
+
+# ---------------------------------------------------------------------------
+# Masked 2D conv (paper's CNN experiments — WRN/CIFAR benchmark).
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, kh, kw, cin, cout, *, sparse=True, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    val = (jax.random.normal(key, (kh, kw, cin, cout)) / np.sqrt(fan_in)).astype(dtype)
+    return {"w": P(val, ("conv_k", "conv_k", "embed", "mlp"), sparse)}
+
+
+def conv2d(p, x, stride: int = 1, compute_dtype=None):
+    """x: (B, H, W, C) -> (B, H', W', C'). SAME padding."""
+    compute_dtype = compute_dtype or x.dtype
+    return jax.lax.conv_general_dilated(
+        x.astype(compute_dtype),
+        p["w"].astype(compute_dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU — all RigL-sparsifiable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init
+
+__all__ = ["mlp_init", "mlp"]
+
+
+def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu", *, sparse: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"kind": None}  # kind is static; stored on config, not params
+    p = {}
+    if kind in ("swiglu", "geglu"):
+        p["wi"] = linear_init(k1, d, d_ff, ("embed", "mlp"), sparse=sparse)
+        p["wg"] = linear_init(k2, d, d_ff, ("embed", "mlp"), sparse=sparse)
+    else:
+        p["wi"] = linear_init(k1, d, d_ff, ("embed", "mlp"), sparse=sparse)
+    p["wo"] = linear_init(k3, d_ff, d, ("mlp", "embed"), sparse=sparse)
+    return p
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    h = linear(p["wi"], x)
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x)) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(kind)
+    return linear(p["wo"], h)

@@ -1,0 +1,413 @@
+"""Unified LM: block composer + train forward / prefill / decode.
+
+Supports the assigned families:
+  transformer (dense GQA, SWA, local:global, parallel-block, MoE, encoder-only,
+  VLM/audio frontend stubs), xlstm (mLSTM/sLSTM mix), hymba (parallel attn+SSM).
+
+Params are nested dicts; ``init_lm`` returns (params, logical_axes, sparse_flags)
+— axes drive sharding, sparse_flags mark RigL-managed weights.  The layer stack
+is a python list (unrolled at trace time — exact cost_analysis); ``scan_layers``
+switches to a stacked lax.scan for the full-depth memory proof on homogeneous
+stacks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as A
+from . import ssm as S
+from . import xlstm as X
+from .layers import P, linear, linear_init, rmsnorm, rmsnorm_init, split_params
+from .mlp import mlp, mlp_init
+from .moe import moe, moe_init
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "init_caches",
+    "lm_prefill",
+    "lm_decode",
+    "stack_layer_params",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg) -> int:
+    """Vocab padded to a multiple of 256 so the vocab dim always shards on a
+    16-way model axis (MaxText-style). Pad logits are masked to -inf in
+    _logits, so the model is mathematically identical to the exact vocab."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def _layer_init(key, cfg, i):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    if cfg.block_type == "xlstm":
+        p["ln1"] = rmsnorm_init(cfg.d_model)
+        if cfg.is_slstm(i):
+            p["slstm"] = X.slstm_init(ks[0], cfg)
+        else:
+            p["mlstm"] = X.mlstm_init(ks[0], cfg)
+        return p
+
+    p["ln1"] = rmsnorm_init(cfg.d_model)
+    p["attn"] = A.attn_init(ks[0], cfg)
+    if cfg.block_type == "hymba":
+        p["ssm"] = S.ssm_init(ks[1], cfg)
+        p["attn_norm"] = rmsnorm_init(cfg.d_model)
+        p["ssm_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.parallel_block:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+    if cfg.post_norms:
+        p["ln1_post"] = rmsnorm_init(cfg.d_model)
+        p["ln2_post"] = rmsnorm_init(cfg.d_model)
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[2], cfg)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return p
+
+
+def init_lm(key, cfg, *, return_bundles: bool = False):
+    """Returns (params, axes, sparse_flags) trees."""
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    tree: dict[str, Any] = {}
+    d = cfg.d_model
+    pv = padded_vocab(cfg)
+    if cfg.frontend == "none":
+        tree["embed"] = {
+            "table": P(
+                (0.02 * jax.random.normal(ks[-1], (pv, d))).astype(jnp.float32),
+                ("vocab", "embed"),
+                False,
+            )
+        }
+    else:
+        # frontend stub: precomputed patch/frame embeddings -> linear proj
+        tree["frontend_proj"] = linear_init(
+            ks[-2], cfg.frontend_dim, d, ("frontend", "embed"), sparse=False
+        )
+        if cfg.frontend == "patch":  # VLM also embeds text tokens
+            tree["embed"] = {
+                "table": P(
+                    (0.02 * jax.random.normal(ks[-1], (pv, d))).astype(jnp.float32),
+                    ("vocab", "embed"),
+                    False,
+                )
+            }
+    tree["layers"] = [_layer_init(ks[i], cfg, i) for i in range(cfg.n_layers)]
+    tree["ln_f"] = rmsnorm_init(d)
+    if not cfg.tie_embeddings or cfg.frontend == "frames":
+        tree["head"] = linear_init(
+            ks[-3], d, pv, ("embed", "vocab"), sparse=False
+        )
+    if return_bundles:
+        return tree
+    return split_params(tree)
+
+
+def stack_layer_params(layers: list):
+    """List of per-layer trees -> single tree stacked on a leading 'layers' dim."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(p, x, cfg, i, *, positions=None):
+    """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux)."""
+    aux = jnp.float32(0.0)
+    if cfg.block_type == "xlstm":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.is_slstm(i):
+            o, state = X.slstm(p["slstm"], h, cfg)
+        else:
+            o, state = X.mlstm(p["mlstm"], h, cfg, chunk=cfg.q_chunk)
+        return x + o, state, aux
+
+    kind = cfg.layer_kind(i)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, kv = A.attention(
+        p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk
+    )
+    state: Any = kv
+    if cfg.block_type == "hymba":
+        ssm_out, ssm_h = S.ssm(p["ssm"], h, cfg, chunk=cfg.q_chunk)
+        attn_out = 0.5 * (
+            rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
+            + rmsnorm(p["ssm_norm"], ssm_out, cfg.norm_eps)
+        )
+        state = (kv, ssm_h, h)  # h tail needed for the conv state at prefill
+
+    if cfg.post_norms:
+        attn_out = rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+
+    if cfg.parallel_block:
+        ff_in = h
+    else:
+        x = x + attn_out
+        ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
+
+    if cfg.n_experts:
+        ff_out, aux = moe(p["moe"], ff_in, cfg)
+    elif cfg.d_ff:
+        ff_out = mlp(p["mlp"], ff_in, cfg.mlp_kind)
+    else:
+        ff_out = 0.0
+    if cfg.post_norms and cfg.d_ff:
+        ff_out = rmsnorm(p["ln2_post"], ff_out, cfg.norm_eps)
+
+    if cfg.parallel_block:
+        return x + attn_out + ff_out, state, aux
+    return x + ff_out, state, aux
+
+
+def _sp_constraint(x, cfg):
+    """Megatron-style sequence parallelism: shard the residual stream's seq
+    dim over the model axis between layers.  GSPMD then turns the TP psums
+    into reduce-scatter + all-gather pairs (half the ICI bytes) and the remat
+    residual saves shrink by the TP degree.  Needs an ambient mesh
+    (jax.sharding.use_mesh) — the dry-run/train drivers provide one."""
+    if not getattr(cfg, "seq_shard_activations", False):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    try:
+        return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+    except Exception:
+        return x  # no ambient mesh: constraint unavailable, stay unsharded
+
+
+def _embed_inputs(params, cfg, batch):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "frames":
+        return linear(params["frontend_proj"], batch["frames"].astype(dt))
+    x = params["embed"]["table"].astype(dt)[batch["tokens"]]
+    x = x * np.sqrt(cfg.d_model)
+    if cfg.frontend == "patch" and "patches" in batch:
+        # decode steps omit "patches": the prompt's patch KV lives in the cache
+        pe = linear(params["frontend_proj"], batch["patches"].astype(dt))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _logits(params, cfg, h):
+    dt = h.dtype
+    if "head" in params:
+        out = linear(params["head"], h, dt)
+    else:
+        out = h @ params["embed"]["table"].astype(dt).T
+    out = out.astype(jnp.float32)
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        out = c * jnp.tanh(out / c)
+    if out.shape[-1] != cfg.vocab_size:  # mask vocab-padding slots
+        pad = out.shape[-1] - cfg.vocab_size
+        neg = jnp.full((pad,), -1e30, out.dtype)
+        out = jnp.concatenate(
+            [out[..., : cfg.vocab_size], jnp.broadcast_to(neg, (*out.shape[:-1], pad))],
+            axis=-1,
+        )
+    return out
+
+
+def lm_forward(params, cfg, batch, *, collect_states: bool = False):
+    """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    S_ = x.shape[1]
+    positions = jnp.arange(S_)
+    aux_total = jnp.float32(0.0)
+    states = []
+
+    if cfg.scan_layers:
+        x, states, aux_total = _forward_scanned(params, cfg, x, positions)
+    elif cfg.remat and not collect_states:
+        # checkpoint REGIONS of remat_group layers (sqrt-style remat): only
+        # the region inputs are saved; kv/ssm states stay internal so they
+        # are not forced live (outputs of a checkpoint are always saved).
+        g = max(cfg.remat_group, 1)
+        layer_ps = params["layers"]
+        policy = (
+            jax.checkpoint_policies.checkpoint_dots
+            if getattr(cfg, "remat_policy", "none") == "dots"
+            else None
+        )
+
+        def region(i0, ps, x_):
+            aux_ = jnp.float32(0.0)
+            for j, p in enumerate(ps):
+                x_, _, a = _block(p, x_, cfg, i0 + j, positions=positions)
+                aux_ = aux_ + a
+            return x_, aux_
+
+        for i0 in range(0, cfg.n_layers, g):
+            ps = layer_ps[i0 : i0 + g]
+            x = _sp_constraint(x, cfg)
+            x, aux = jax.checkpoint(
+                functools.partial(region, i0), policy=policy
+            )(ps, x)
+            aux_total = aux_total + aux
+    else:
+        for i, p in enumerate(params["layers"]):
+            x = _sp_constraint(x, cfg)
+            x, st, aux = _block(p, x, cfg, i, positions=positions)
+            aux_total = aux_total + aux
+            if collect_states:
+                states.append(st)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return h, states, aux_total
+
+
+def _forward_scanned(params, cfg, x, positions):
+    """Homogeneous stacks only: lax.scan over stacked layer params."""
+    assert cfg.pattern_period == 1 and cfg.block_type == "transformer", (
+        "scan_layers requires a homogeneous transformer stack"
+    )
+    stacked = params["layers_stacked"]
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, _, a = _block(layer_p, x, cfg, 0, positions=positions)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, [], aux
+
+
+def lm_loss(params, cfg, batch):
+    """Mean next-token xent (chunked over seq to bound the logits buffer)."""
+    h, _, aux = lm_forward(params, cfg, batch)
+    targets = batch["targets"]
+    # frontend==patch: loss only over the text positions (last T slots)
+    if cfg.frontend == "patch":
+        h = h[:, -targets.shape[1] :]
+    B, S_, _ = h.shape
+    n_chunks = max(1, cfg.loss_chunks)
+    assert S_ % n_chunks == 0
+    step = S_ // n_chunks
+    total = jnp.float32(0.0)
+    for s in range(0, S_, step):
+        logits = _logits(params, cfg, h[:, s : s + step])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = targets[:, s : s + step]
+        picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(lse - picked)
+    loss = total / (B * S_)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int):
+    """Per-layer cache pytree (shapes differ per layer kind — unrolled only)."""
+    caches = []
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    for i in range(cfg.n_layers):
+        if cfg.block_type == "xlstm":
+            if cfg.is_slstm(i):
+                caches.append({"slstm": X.init_slstm_state(cfg, batch)})
+            else:
+                caches.append({"mlstm": X.init_mlstm_state(cfg, batch)})
+            continue
+        kind = cfg.layer_kind(i)
+        c: dict[str, Any] = {"kv": A.init_kv_cache(cfg, kind, batch, max_len, dt)}
+        if cfg.block_type == "hymba":
+            c["ssm"] = S.init_ssm_state(cfg, batch)
+        caches.append(c)
+    return caches
+
+
+def lm_prefill(params, cfg, batch, max_len: int):
+    """Run the prompt, return (last-position logits, filled caches)."""
+    assert cfg.causal, "prefill/decode undefined for encoder-only models"
+    h, states, _ = lm_forward(params, cfg, batch, collect_states=True)
+    B = h.shape[0]
+    S_ = h.shape[1]
+    caches = init_caches(cfg, B, max_len)
+    for i, st in enumerate(states):
+        if cfg.block_type == "xlstm":
+            key = "slstm" if cfg.is_slstm(i) else "mlstm"
+            caches[i][key] = st
+            continue
+        if cfg.block_type == "hymba":
+            kv, ssm_h, pre = st
+            caches[i]["ssm"]["h"] = ssm_h
+            # conv state: last 3 *pre-conv* inner activations
+            u_raw = linear(params["layers"][i]["ssm"]["in_proj"], pre)[
+                ..., : cfg.ssm_d_inner
+            ]
+            caches[i]["ssm"]["conv"] = u_raw[:, -3:, :].astype(
+                caches[i]["ssm"]["conv"].dtype
+            )
+        else:
+            kv = st
+        k, v = kv
+        caches[i]["kv"] = A.fill_kv_cache(caches[i]["kv"], k, v, 0)
+    logits = _logits(params, cfg, h[:, -1:])
+    return logits, caches
+
+
+def lm_decode(params, cfg, caches, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: traced scalar.
+
+    Returns (logits (B,1,V), new caches).
+    """
+    assert cfg.causal
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    new_caches = []
+    for i, p in enumerate(params["layers"]):
+        c = dict(caches[i])
+        if cfg.block_type == "xlstm":
+            h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            if cfg.is_slstm(i):
+                o, c["slstm"] = X.slstm_decode(p["slstm"], h, c["slstm"], cfg)
+            else:
+                o, c["mlstm"] = X.mlstm_decode(p["mlstm"], h, c["mlstm"], cfg)
+            x = x + o
+            new_caches.append(c)
+            continue
+
+        kind = cfg.layer_kind(i)
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_out, c["kv"] = A.attn_decode(p["attn"], h, c["kv"], pos, cfg, kind=kind)
+        if cfg.block_type == "hymba":
+            ssm_out, c["ssm"] = S.ssm_decode(p["ssm"], h, c["ssm"], cfg)
+            attn_out = 0.5 * (
+                rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
+                + rmsnorm(p["ssm_norm"], ssm_out, cfg.norm_eps)
+            )
+        if cfg.post_norms:
+            attn_out = rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+        if cfg.parallel_block:
+            ff_in = h
+        else:
+            x = x + attn_out
+            ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            ff_out, _ = moe(p["moe"], ff_in, cfg)
+        elif cfg.d_ff:
+            ff_out = mlp(p["mlp"], ff_in, cfg.mlp_kind)
+        else:
+            ff_out = 0.0
+        if cfg.post_norms and cfg.d_ff:
+            ff_out = rmsnorm(p["ln2_post"], ff_out, cfg.norm_eps)
+        x = (x + attn_out + ff_out) if cfg.parallel_block else (x + ff_out)
+        new_caches.append(c)
+
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _logits(params, cfg, h), new_caches

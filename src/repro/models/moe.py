@@ -1,0 +1,118 @@
+"""Top-k routed Mixture-of-Experts with optional shared experts.
+
+Sort-based "dropping" dispatch (MegaBlocks/MaxText style), all static shapes:
+  1. router logits -> top_k experts + renormalized gates per token
+  2. flatten (token, slot) assignments, rank them within each expert
+     (argsort by expert id; stable => deterministic)
+  3. scatter tokens into an (E, C, d) buffer (capacity C, overflow dropped)
+  4. batched expert GEMMs  (E, C, d) x (E, d, ff)
+  5. gather back + gate-weighted combine.
+
+Expert weights carry logical axes ("experts", "embed", "moe_mlp"): the greedy
+sharding resolver puts the mesh "model" axis on the experts dim when E
+divides it (EP), otherwise on the ff dim (intra-expert TP) — grok-1 (8e on a
+16-way axis) gets TP, qwen2-moe (60e) gets TP, a 16e config would get EP.
+
+RigL treats each expert's weight matrices as sparsifiable layers; ER/ERK
+budgets are computed from the full (E, d, ff) shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import P, linear
+from .mlp import mlp, mlp_init
+
+__all__ = ["moe_init", "moe"]
+
+
+def moe_init(key, cfg, *, sparse: bool = True):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+
+    def bank(k, shape, axes):
+        return {
+            "w": P(
+                (jax.random.normal(k, shape) / np.sqrt(shape[-2])).astype(jnp.float32),
+                axes,
+                sparse,
+            )
+        }
+
+    p = {
+        "router": {
+            "w": P(
+                (jax.random.normal(ks[0], (d, E)) / np.sqrt(d)).astype(jnp.float32),
+                ("embed", None),
+                False,  # router stays dense (tiny, routing-critical)
+            )
+        },
+        "wi": bank(ks[1], (E, d, ff), ("experts", "embed", "moe_mlp")),
+        "wg": bank(ks[2], (E, d, ff), ("experts", "embed", "moe_mlp")),
+        "wo": bank(ks[3], (E, ff, d), ("experts", "moe_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            ks[4], d, ff * cfg.n_shared_experts, kind="swiglu", sparse=sparse
+        )
+    return p
+
+
+def moe(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    capacity_factor = cfg.moe_capacity_factor
+    T = B * S
+    xt = x.reshape(T, d)
+    dt = xt.dtype
+
+    logits = jnp.einsum(
+        "td,de->te", xt, p["router"]["w"].astype(dt), preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)  # (T, K)
+    gates = gates / jnp.clip(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # floor keeps single-token decode batches from starving an expert
+    C = max(int(np.ceil(T * K / E * capacity_factor)), min(T, 4))
+    # Rank each (token, slot) within its expert: stable argsort of expert ids.
+    flat_e = eidx.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    # position within the sorted run of each expert id:
+    sorted_e = flat_e[order]
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    pos_in_sorted = jnp.arange(T * K)
+    rank_sorted = pos_in_sorted - run_start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)  # (T*K,)
+
+    keep = rank < C
+    dest = jnp.where(keep, flat_e * C + rank, E * C)  # overflow -> scratch row
+    buf = jnp.zeros((E * C + 1, d), dt).at[dest].set(
+        jnp.repeat(xt, K, axis=0), mode="drop"
+    )
+    buf = buf[: E * C].reshape(E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"]["w"].astype(dt))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"]["w"].astype(dt))
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"]["w"].astype(dt))
+
+    out_flat = out_buf.reshape(E * C, d)
+    gathered = jnp.where(
+        keep[:, None], out_flat[jnp.clip(dest, 0, E * C - 1)], 0.0
+    )  # (T*K, d)
+    combined = jnp.einsum(
+        "tkd,tk->td", gathered.reshape(T, K, d), gates.astype(dt)
+    )
+
+    if "shared" in p:
+        combined = combined + mlp(p["shared"], xt, kind="swiglu")
+
+    # load-balancing auxiliary loss (Switch-style), returned for training
+    me = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(1), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce) / K
+    return combined.reshape(B, S, d), aux

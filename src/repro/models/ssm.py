@@ -1,0 +1,121 @@
+"""Mamba-style selective SSM head (Hymba's parallel-SSM branch).
+
+Chunked prefix-scan: a python loop over sequence chunks carries the state
+(h: B, d_in, N) across chunks; *within* a chunk the linear recurrence
+h_t = a_t * h_{t-1} + b_t is evaluated with jax.lax.associative_scan (log-depth
+DAG — counted correctly by cost_analysis, unlike while-loops).  Decode is the
+single-step recurrence (O(1) state — this is what makes long_500k decode
+feasible for the hybrid archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import P, conv1d_causal, conv1d_causal_init, conv1d_causal_step, linear
+
+__all__ = ["ssm_init", "ssm", "ssm_decode", "init_ssm_state"]
+
+
+def ssm_init(key, cfg, *, sparse: bool = True):
+    d, d_in, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+
+    def lin(k, nin, nout, axes, sp):
+        return {
+            "w": P(
+                (jax.random.normal(k, (nin, nout)) / np.sqrt(nin)).astype(jnp.float32),
+                axes,
+                sp,
+            )
+        }
+
+    a_init = -jnp.exp(
+        jax.random.uniform(ks[4], (d_in, N), minval=np.log(0.5), maxval=np.log(8.0))
+    )
+    return {
+        "in_proj": lin(ks[0], d, 2 * d_in, ("embed", "mlp"), sparse),
+        "conv": conv1d_causal_init(ks[5], d_in, 4),
+        "w_bc": lin(ks[1], d_in, 2 * N, ("mlp", None), False),
+        "w_dt": lin(ks[2], d_in, d_in, ("mlp", "mlp2"), False),
+        "a_log": P(jnp.log(-a_init), ("mlp", "state"), False),
+        "d_skip": P(jnp.ones((d_in,)), ("mlp",), False),
+        "dt_bias": P(jnp.zeros((d_in,)), ("mlp",), False),
+        "out_proj": lin(ks[3], d_in, d, ("mlp", "embed"), sparse),
+    }
+
+
+def _gates(p, x, cfg):
+    """Project input -> (u, z, dt, B, C)."""
+    d_in, N = cfg.ssm_d_inner, cfg.ssm_state
+    uz = linear(p["in_proj"], x)
+    u, z = uz[..., :d_in], uz[..., d_in:]
+    return u, z
+
+
+def _selective(p, u, cfg):
+    N = cfg.ssm_state
+    bc = linear(p["w_bc"], u)
+    Bt, Ct = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(
+        linear(p["w_dt"], u) + p["dt_bias"].astype(u.dtype)
+    )  # (B,S,d_in)
+    A = -jnp.exp(p["a_log"]).astype(jnp.float32)  # (d_in, N)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # (B,S,d_in,N)
+    b = (dt * u).astype(jnp.float32)[..., None] * Bt.astype(jnp.float32)[..., None, :]
+    return a, b, Ct
+
+
+def _scan_chunk(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t within a chunk; h0: (B, d_in, N)."""
+    def combine(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    cum_a, acc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = cum_a * h0[:, None] + acc
+    return h, h[:, -1]
+
+
+def ssm(p, x, cfg, *, chunk: int = 1024, h0=None):
+    """x: (B, S, d) -> (out (B,S,d), final state (B,d_in,N))."""
+    B, S, _ = x.shape
+    d_in, N = cfg.ssm_d_inner, cfg.ssm_state
+    u, z = _gates(p, x, cfg)
+    u = jax.nn.silu(conv1d_causal(p["conv"], u))
+    a, b, Ct = _selective(p, u, cfg)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    hs = []
+    for s in range(0, S, chunk):
+        e = min(s + chunk, S)
+        h_chunk, h0 = _scan_chunk(a[:, s:e], b[:, s:e], h0)
+        hs.append(h_chunk)
+    h = jnp.concatenate(hs, axis=1)  # (B,S,d_in,N)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, Ct.astype(jnp.float32)).astype(x.dtype)
+    y = y + u * p["d_skip"].astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), h0
+
+
+def init_ssm_state(cfg, batch: int):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, 3, cfg.ssm_d_inner), dt),
+    }
+
+
+def ssm_decode(p, x_t, state, cfg):
+    """Single-token step. x_t: (B, 1, d). state: {'h', 'conv'}."""
+    u, z = _gates(p, x_t, cfg)
+    conv_state, u1 = conv1d_causal_step(p["conv"], state["conv"], u[:, 0])
+    u = jax.nn.silu(u1)[:, None, :]
+    a, b, Ct = _selective(p, u, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Ct[:, 0].astype(jnp.float32)).astype(x_t.dtype)
+    y = y + u[:, 0] * p["d_skip"].astype(u.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    return linear(p["out_proj"], y), {"h": h, "conv": conv_state}

@@ -1,0 +1,251 @@
+"""xLSTM blocks (Beck et al. 2024, arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM: matrix memory C (hd x hd per head) with exponential gating.  Training
+uses the *chunkwise* stabilized parallel form (quadratic within a chunk,
+recurrent across chunks — python loop so cost_analysis counts every chunk);
+decode is the O(1) recurrence, giving constant-memory 500k-token decoding.
+
+sLSTM: scalar memory with recurrent (block-diagonal per-head) weights — a true
+nonlinear recurrence, evaluated with lax.scan over time (roofline FLOPs for
+these layers are corrected analytically; see EXPERIMENTS.md).
+
+Parameter-shape adaptation vs the official code is documented in DESIGN.md §5
+(qkv are d->d; projection factor moved into the z-gate), keeping the assigned
+48L/d2048/4H config at ~1.3B params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import P, linear, rmsnorm, rmsnorm_init
+
+__all__ = [
+    "mlstm_init",
+    "mlstm",
+    "mlstm_decode",
+    "init_mlstm_state",
+    "slstm_init",
+    "slstm",
+    "slstm_decode",
+    "init_slstm_state",
+]
+
+
+def _lin(k, nin, nout, axes, sparse):
+    return {
+        "w": P(
+            (jax.random.normal(k, (nin, nout)) / np.sqrt(nin)).astype(jnp.float32),
+            axes,
+            sparse,
+        )
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, *, sparse: bool = True):
+    d, nh = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _lin(ks[0], d, d, ("embed", "heads"), sparse),
+        "wk": _lin(ks[1], d, d, ("embed", "heads"), sparse),
+        "wv": _lin(ks[2], d, d, ("embed", "heads"), sparse),
+        "w_if": _lin(ks[3], d, 2 * nh, ("embed", None), False),
+        "wz": _lin(ks[4], d, d, ("embed", "heads"), sparse),
+        "wo": _lin(ks[5], d, d, ("heads", "embed"), sparse),
+        "norm": rmsnorm_init(d // nh, axes=("head_dim",)),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q = linear(p["wq"], x).reshape(B, S, nh, hd)
+    k = linear(p["wk"], x).reshape(B, S, nh, hd) / np.sqrt(hd)
+    v = linear(p["wv"], x).reshape(B, S, nh, hd)
+    gif = linear(p["w_if"], x).astype(jnp.float32)  # (B,S,2nh)
+    i_pre, f_pre = gif[..., :nh], gif[..., nh:]
+    logf = jax.nn.log_sigmoid(f_pre)  # (B,S,nh)
+    return q, k, v, i_pre, logf
+
+
+def init_mlstm_state(cfg, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm(p, x, cfg, *, chunk: int = 1024, state=None):
+    """Chunkwise parallel mLSTM. Returns (out (B,S,d), final_state)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q, k, v, i_pre, logf = _mlstm_qkv(p, x, cfg)
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    C, n, m = state["C"], state["n"], state["m"]
+
+    outs = []
+    for s in range(0, S, min(chunk, S)):
+        e = min(s + chunk, S)
+        L = e - s
+        qc, kc, vc = q[:, s:e], k[:, s:e], v[:, s:e]
+        ic, fc = i_pre[:, s:e], logf[:, s:e]
+
+        F = jnp.cumsum(fc, axis=1)  # (B,L,nh) cumulative logf within chunk
+        # intra-chunk log decay D[t, u] = F_t - F_u + i_u  (u <= t)
+        D = F[:, :, None, :] - F[:, None, :, :] + ic[:, None, :, :]  # (B,t,u,nh)
+        tril = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tril[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)  # (B,L,nh)
+        m_t = jnp.maximum(F + m[:, None, :], m_intra)  # (B,L,nh)
+
+        scores = jnp.einsum("blnh,bunh->blun", qc, kc, preferred_element_type=jnp.float32)
+        w = scores * jnp.exp(D - m_t[:, :, None, :])
+        num_intra = jnp.einsum("blun,bunh->blnh", w.astype(vc.dtype), vc).astype(jnp.float32)
+        den_intra = jnp.sum(w, axis=2)  # (B,L,nh)
+
+        inter_scale = jnp.exp(F + m[:, None, :] - m_t)  # (B,L,nh)
+        qC = jnp.einsum("blnh,bnhv->blnv", qc.astype(jnp.float32), C)
+        qn = jnp.einsum("blnh,bnh->bln", qc.astype(jnp.float32), n)
+        num = num_intra + inter_scale[..., None] * qC
+        den = den_intra + inter_scale * qn
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = (num / denom[..., None]).astype(x.dtype)  # (B,L,nh,hd)
+        outs.append(h)
+
+        # state update to end of chunk
+        F_L = F[:, -1]  # (B,nh)
+        m_new = jnp.maximum(
+            F_L + m, jnp.max(F_L[:, None] - F + ic, axis=1)
+        )  # (B,nh)
+        wgt = jnp.exp(F_L[:, None] - F + ic - m_new[:, None])  # (B,L,nh)
+        C = jnp.exp(F_L + m - m_new)[:, :, None, None] * C + jnp.einsum(
+            "bunh,bunv,bun->bnhv",
+            kc.astype(jnp.float32),
+            vc.astype(jnp.float32),
+            wgt,
+        )
+        n = jnp.exp(F_L + m - m_new)[:, :, None] * n + jnp.einsum(
+            "bunh,bun->bnh", kc.astype(jnp.float32), wgt
+        )
+        m = m_new
+
+    h = jnp.concatenate(outs, axis=1)  # (B,S,nh,hd)
+    h = rmsnorm(p["norm"], h)
+    h = h.reshape(B, S, d) * jax.nn.silu(linear(p["wz"], x))
+    out = linear(p["wo"], h)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(p, x_t, state, cfg):
+    """Single-step recurrence. x_t: (B,1,d)."""
+    B, _, d = x_t.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q, k, v, i_pre, logf = _mlstm_qkv(p, x_t, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    i_pre, logf = i_pre[:, 0], logf[:, 0]  # (B,nh)
+
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)[:, :, None, None]
+    i_s = jnp.exp(i_pre - m_new)[:, :, None, None]
+    C = f_s * C + i_s * jnp.einsum(
+        "bnh,bnv->bnhv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = f_s[..., 0] * n + i_s[..., 0] * k.astype(jnp.float32)
+    num = jnp.einsum("bnh,bnhv->bnv", q.astype(jnp.float32), C)
+    den = jnp.einsum("bnh,bnh->bn", q.astype(jnp.float32), n)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = (num / denom[..., None]).astype(x_t.dtype)[:, None]  # (B,1,nh,hd)
+    h = rmsnorm(p["norm"], h).reshape(B, 1, d) * jax.nn.silu(linear(p["wz"], x_t))
+    return linear(p["wo"], h), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, *, sparse: bool = True):
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": _lin(ks[0], d, 4 * d, ("embed", "heads"), sparse),
+        "r": P(
+            (jax.random.normal(ks[1], (nh, hd, 4 * hd)) / np.sqrt(hd)).astype(
+                jnp.float32
+            ),
+            ("kv_heads", "head_dim", None),
+            sparse,
+        ),
+        "wo": _lin(ks[2], d, d, ("heads", "embed"), sparse),
+        "norm": rmsnorm_init(hd, axes=("head_dim",)),
+    }
+
+
+def init_slstm_state(cfg, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, nh, hd), -1e30)}
+
+
+def _slstm_cell(p, state, wx_t, cfg):
+    """wx_t: (B, 4d) input contribution at step t."""
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    B = wx_t.shape[0]
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bnh,nhk->bnk", h, p["r"].astype(jnp.float32))  # (B,nh,4hd)
+    g = wx_t.reshape(B, nh, 4 * hd).astype(jnp.float32) + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)  # each (B,nh,hd)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm(p, x, cfg, *, state=None):
+    """x: (B,S,d) -> (out, final_state). lax.scan over time."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    wx = linear(p["w_in"], x)  # (B,S,4d)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, carry, wx_t, cfg)
+        return new, new["h"]
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(wx, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)  # (B,S,nh,hd)
+    h = rmsnorm(p["norm"], h).reshape(B, S, d)
+    return linear(p["wo"], h), state
+
+
+def slstm_decode(p, x_t, state, cfg):
+    B, _, d = x_t.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    wx = linear(p["w_in"], x_t)[:, 0]
+    state = _slstm_cell(p, state, wx, cfg)
+    h = state["h"][:, None].astype(x_t.dtype)  # (B,1,nh,hd)
+    h = rmsnorm(p["norm"], h).reshape(B, 1, d)
+    return linear(p["wo"], h), state

@@ -1,0 +1,36 @@
+"""LR schedules: the paper's recipes + warmup-cosine for the LM zoo."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["LRSchedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LRSchedule:
+    kind: str = "warmup_cosine"  # warmup_cosine | step_drops | constant
+    base_lr: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # step_drops (paper ImageNet: x0.1 at epochs 30/70/90 after 5-epoch warmup)
+    drop_steps: tuple[int, ...] = ()
+    drop_factor: float = 0.1
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(self.warmup_steps, 1))
+        if self.kind == "constant":
+            return self.base_lr * warm
+        if self.kind == "warmup_cosine":
+            t = jnp.clip(
+                (s - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            return self.base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        if self.kind == "step_drops":
+            drops = sum(jnp.where(s >= d, 1.0, 0.0) for d in self.drop_steps)
+            return self.base_lr * warm * self.drop_factor**drops
+        raise ValueError(self.kind)

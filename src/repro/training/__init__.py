@@ -1,0 +1,9 @@
+from .steps import (  # noqa: F401
+    init_train_state,
+    make_algo,
+    make_prune_fn,
+    make_rigl_step,
+    make_train_step,
+    snip_init,
+    sparsity_map,
+)

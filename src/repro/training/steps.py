@@ -1,0 +1,261 @@
+"""Step functions: sparse train step, RigL update step, serve steps.
+
+Two compiled functions (paper Appendix H cost structure):
+
+  train_step  — every step: masked fwd/bwd, optimizer on MASKED grads.
+                One backward gives both gradients: we differentiate w.r.t. the
+                effective weights w_eff = w * m, so the gradient is dense;
+                g_sparse = g_dense * m feeds the optimizer.  Under pjit the
+                dense gradient is a global (mesh-wide) array — the paper's
+                Appendix M replica-sync bugs are impossible by construction.
+
+  rigl_step   — every delta_t steps (t < T_end): same backward, then
+                drop/grow (core.rigl), zero-init grown weights, reset their
+                optimizer state.  Per Algorithm 1 the update step does NOT
+                also take an optimizer step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import (
+    LayerSpec,
+    SparseAlgo,
+    UpdateSchedule,
+    apply_masks,
+    dense_to_sparse_grad,
+    get_distribution,
+    init_masks,
+    rigl_update,
+    snip_masks,
+    tree_paths,
+)
+from ..core.pruning import PruningSchedule, prune_step
+from ..models import init_lm, lm_loss
+from ..optim import LRSchedule, OptConfig, apply_opt, init_opt, reset_new_connections
+
+__all__ = [
+    "sparsity_map",
+    "init_train_state",
+    "make_train_step",
+    "make_rigl_step",
+    "make_prune_fn",
+    "snip_init",
+]
+
+
+def sparsity_map(cfg, params, sparse_flags) -> dict[str, float]:
+    """Per-path target sparsities from the config's distribution."""
+    flat_p = tree_paths(params)
+    flat_f = tree_paths(sparse_flags)
+    # official-code semantics: the distribution (and its nnz budget) is solved
+    # over the MASKED layers only — embeddings/norms/biases are outside it.
+    specs = [
+        LayerSpec(name, flat_p[name].shape) for name, flag in flat_f.items() if flag
+    ]
+    sp = cfg.sparse
+    dist = get_distribution(sp.distribution, specs, sp.sparsity, dense_first=False)
+    return dist
+
+
+def make_algo(cfg, total_steps: int) -> SparseAlgo:
+    sp = cfg.sparse
+    return SparseAlgo(
+        method=sp.method,
+        schedule=UpdateSchedule(
+            delta_t=sp.delta_t,
+            t_end=int(sp.t_end_fraction * total_steps),
+            alpha=sp.alpha,
+        ),
+        grow_init=sp.grow_init,
+        block_shape=sp.block_shape,
+    )
+
+
+def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
+    """State dict: step/params/masks/opt/rng (+dense_mom for SNFS)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params, axes, sparse_flags = init_lm(k1, cfg)
+    if cfg.param_dtype == "bfloat16":
+        # pure-bf16 weights (f32 optimizer master state lives in opt_state
+        # unless OptConfig.state_dtype says otherwise) — needed to fit the
+        # 314B grok cell in 16G HBM; see EXPERIMENTS.md.
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.float32 else p,
+            params,
+        )
+    sp = cfg.sparse
+    if sp.method == "pruning" or sp.sparsity == 0.0:
+        # dense start: all-ones masks on sparsifiable layers (pruning tightens)
+        masks = jax.tree_util.tree_map(
+            lambda p, f: jnp.ones(p.shape, jnp.bool_) if f else None,
+            params,
+            sparse_flags,
+        )
+    else:
+        smap = sparsity_map(cfg, params, sparse_flags)
+        masks = init_masks(k2, params, smap)
+        # zero-out masked weights at init so nnz(w) matches the mask
+        params = apply_masks(params, masks)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "masks": masks,
+        "opt": init_opt(opt_cfg, params),
+        "rng": k3,
+    }
+    if sp.method == "snfs":
+        state["dense_mom"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return state, axes, sparse_flags
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: OptConfig,
+    lr_sched: LRSchedule,
+    *,
+    loss_fn: Callable | None = None,
+    snfs_momentum: float = 0.9,
+):
+    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
+    mb = max(getattr(cfg, "microbatches", 1), 1)
+    acc_dt = jnp.bfloat16 if getattr(cfg, "grad_accum_dtype", "") == "bfloat16" else jnp.float32
+
+    def _grads(w_eff, batch):
+        if mb == 1:
+            return jax.value_and_grad(loss_fn)(w_eff, batch)
+        # gradient accumulation: one microbatch's activations live at a time
+        bsz = jax.tree_util.tree_leaves(batch)[0].shape[0] // mb
+        init = (
+            jnp.float32(0.0),
+            jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, acc_dt), w_eff),
+        )
+
+        def acc(carry, sub):
+            loss_acc, g_acc = carry
+            li, gi = jax.value_and_grad(loss_fn)(w_eff, sub)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dt), g_acc, gi
+            )
+            return loss_acc + li, g_acc
+
+        if getattr(cfg, "scan_microbatches", False):
+            # small-HLO form (production + full-depth dry-run compile);
+            # cost_analysis counts the body once, so roofline lowering uses
+            # the unrolled branch below instead (DESIGN.md §8).
+            stacked = jax.tree_util.tree_map(
+                lambda x: x.reshape(mb, bsz, *x.shape[1:]), batch
+            )
+            (loss_acc, g_acc), _ = jax.lax.scan(
+                lambda c, s: (acc(c, s), None), init, stacked
+            )
+        else:
+            loss_acc, g_acc = init
+            for i in range(mb):
+                sub = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * bsz, bsz, 0),
+                    batch,
+                )
+                loss_acc, g_acc = acc((loss_acc, g_acc), sub)
+        inv = 1.0 / mb
+        return loss_acc * inv, jax.tree_util.tree_map(lambda g: g * inv, g_acc)
+
+    def train_step(state, batch):
+        w_eff = apply_masks(state["params"], state["masks"])
+        if getattr(cfg, "bf16_grads", False):
+            # single downcast => bf16 cotangents => bf16 DP grad all-reduce
+            w_eff = jax.tree_util.tree_map(
+                lambda w: w.astype(jnp.bfloat16)
+                if w.dtype == jnp.float32
+                else w,
+                w_eff,
+            )
+        loss, g_dense = _grads(w_eff, batch)
+        g_sparse = dense_to_sparse_grad(g_dense, state["masks"])
+        # weight decay on ACTIVE weights only (inactive must stay untouched)
+        if opt_cfg.weight_decay:
+            g_sparse = jax.tree_util.tree_map(
+                lambda g, w: g + opt_cfg.weight_decay * w.astype(g.dtype), g_sparse, w_eff
+            )
+        lr = lr_sched(state["step"])
+        opt_nowd = dataclasses.replace(opt_cfg, weight_decay=0.0)
+        new_params, new_opt = apply_opt(
+            opt_nowd, g_sparse, state["opt"], state["params"], lr
+        )
+        new_state = dict(
+            state,
+            step=state["step"] + 1,
+            params=new_params,
+            opt=new_opt,
+        )
+        if "dense_mom" in state:  # SNFS tracks dense-gradient momentum
+            new_state["dense_mom"] = jax.tree_util.tree_map(
+                lambda m, g: snfs_momentum * m + g.astype(m.dtype),
+                state["dense_mom"],
+                g_dense,
+            )
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(g_sparse)
+            )
+        )
+        return new_state, {"loss": loss, "lr": lr, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_rigl_step(cfg, algo: SparseAlgo, lr_sched: LRSchedule, *, loss_fn=None):
+    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
+
+    def rigl_step(state, batch):
+        w_eff = apply_masks(state["params"], state["masks"])
+        loss, g_dense = jax.value_and_grad(loss_fn)(w_eff, batch)
+        key = jax.random.fold_in(state["rng"], state["step"])
+        new_params, new_masks, grown = rigl_update(
+            state["params"],
+            state["masks"],
+            g_dense,
+            state["step"],
+            algo,
+            key,
+            dense_momentum=state.get("dense_mom"),
+            lr=float(lr_sched.base_lr),
+        )
+        new_opt = reset_new_connections(state["opt"], grown)
+        new_state = dict(
+            state,
+            step=state["step"] + 1,
+            params=new_params,
+            masks=new_masks,
+            opt=new_opt,
+        )
+        return new_state, {"loss": loss}
+
+    return rigl_step
+
+
+def make_prune_fn(cfg, sched: PruningSchedule):
+    def fn(state):
+        new_params, new_masks = prune_step(
+            state["params"], state["masks"], state["step"], sched
+        )
+        return dict(state, params=new_params, masks=new_masks)
+
+    return fn
+
+
+def snip_init(state, cfg, batch, *, loss_fn=None, saliency="weight_times_grad"):
+    """Replace masks with one-shot SNIP masks computed on one batch."""
+    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
+    _, axes, sparse_flags = init_lm(jax.random.PRNGKey(0), cfg)
+    smap = sparsity_map(cfg, state["params"], sparse_flags)
+    g = jax.grad(loss_fn)(state["params"], batch)
+    masks = snip_masks(state["params"], g, smap, saliency=saliency)
+    params = apply_masks(state["params"], masks)
+    return dict(state, params=params, masks=masks)

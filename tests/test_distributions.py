@@ -1,0 +1,85 @@
+"""Sparsity distribution tests: paper semantics + hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import (
+    LayerSpec,
+    erdos_renyi_distribution,
+    get_distribution,
+    sparsity_overall,
+    uniform_distribution,
+)
+
+
+def _layers(shapes, dense_first=False):
+    return [
+        LayerSpec(f"l{i}", s, dense=(i == 0 and dense_first))
+        for i, s in enumerate(shapes)
+    ]
+
+
+def test_uniform_all_equal():
+    ls = _layers([(64, 64), (64, 128), (128, 64)])
+    d = uniform_distribution(ls, 0.8, dense_first=False)
+    assert all(v == 0.8 for v in d.values())
+
+
+def test_uniform_dense_first():
+    ls = _layers([(64, 64), (64, 128)])
+    d = uniform_distribution(ls, 0.8, dense_first=True)
+    assert d["l0"] == 0.0 and d["l1"] == 0.8
+
+
+def test_erk_hits_target_exactly():
+    ls = _layers([(512, 512), (512, 2048), (2048, 512), (64, 64)])
+    d = erdos_renyi_distribution(ls, 0.9)
+    assert abs(sparsity_overall(ls, d) - 0.9) < 1e-9
+
+
+def test_erk_small_layers_denser():
+    """ER(K) gives smaller layers lower sparsity (the paper's key property)."""
+    ls = _layers([(2048, 2048), (64, 64)])
+    d = erdos_renyi_distribution(ls, 0.8)
+    assert d["l1"] < d["l0"]
+
+
+def test_erk_caps_at_dense():
+    # tiny layer would need density > 1 -> pinned dense, eps re-solved
+    ls = _layers([(4096, 4096), (8, 8)])
+    d = erdos_renyi_distribution(ls, 0.5)
+    assert d["l1"] == 0.0
+    assert abs(sparsity_overall(ls, d) - 0.5) < 1e-9
+
+
+def test_erk_kernel_dims():
+    """ERK counts conv kernel dims; ER does not."""
+    ls = [LayerSpec("c", (3, 3, 64, 64)), LayerSpec("d", (576, 64))]
+    erk = erdos_renyi_distribution(ls, 0.8, kernel_aware=True)
+    er = erdos_renyi_distribution(ls, 0.8, kernel_aware=False)
+    assert erk["c"] != er["c"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(8, 256), st.integers(8, 256)),
+        min_size=2,
+        max_size=8,
+    ),
+    st.floats(0.3, 0.95),
+    st.sampled_from(["uniform", "er", "erk"]),
+)
+def test_property_valid_sparsities(shapes, sparsity, kind):
+    ls = _layers(shapes)
+    d = get_distribution(kind, ls, sparsity, dense_first=False)
+    for v in d.values():
+        assert 0.0 <= v < 1.0
+    if kind in ("er", "erk"):
+        assert abs(sparsity_overall(ls, d) - sparsity) < 1e-6
+
+
+def test_zero_sparsity_is_dense():
+    ls = _layers([(64, 64)])
+    d = get_distribution("erk", ls, 0.0)
+    assert d["l0"] == 0.0

@@ -1,0 +1,43 @@
+"""Analytic HBM model sanity."""
+from repro.analysis.memory_model import memory_model
+from repro.configs import SHAPES, get_config
+
+
+def _model(arch, shape, **kw):
+    cfg = get_config(arch)
+    n = 2e9 if "1" in arch else 1e9
+    return memory_model(cfg, SHAPES[shape], {"data": 16, "model": 16},
+                        n_params_total=n, n_sparsifiable=0.9 * n, **kw)
+
+
+def test_train_has_state_terms():
+    m = _model("h2o-danube-1.8b", "train_4k")
+    for k in ("params", "opt_state", "grads", "masks_bool", "residual_saves"):
+        assert k in m and m[k] > 0
+
+
+def test_decode_has_kv_cache_not_opt():
+    m = _model("h2o-danube-1.8b", "decode_32k")
+    assert "kv_cache" in m and m["kv_cache"] > 0
+    assert "opt_state" not in m
+
+
+def test_windowed_cache_smaller_than_full():
+    # danube (SWA-4096) cache at 32k must be ~8x smaller than a full cache
+    swa = _model("h2o-danube-1.8b", "decode_32k")["kv_cache"]
+    full = _model("qwen2-moe-a2.7b", "decode_32k")["kv_cache"]
+    cfg_s = get_config("h2o-danube-1.8b")
+    cfg_f = get_config("qwen2-moe-a2.7b")
+    per_layer_s = swa / cfg_s.n_layers
+    per_layer_f = full / cfg_f.n_layers
+    assert per_layer_s < per_layer_f
+
+
+def test_microbatching_shrinks_activations():
+    import dataclasses
+    cfg = get_config("mistral-large-123b")
+    big = memory_model(dataclasses.replace(cfg, microbatches=1), SHAPES["train_4k"],
+                       {"data": 16, "model": 16}, 1.23e11, 1.2e11)
+    small = memory_model(cfg, SHAPES["train_4k"], {"data": 16, "model": 16},
+                         1.23e11, 1.2e11)
+    assert small["residual_saves"] < big["residual_saves"] / 8

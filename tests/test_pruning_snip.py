@@ -1,0 +1,54 @@
+"""Gradual magnitude pruning (Zhu & Gupta) + SNIP baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import random_mask
+from repro.core.pruning import PruningSchedule, prune_step, snip_masks
+
+
+def test_cubic_ramp_endpoints():
+    s = PruningSchedule(0.9, begin_step=100, end_step=1100)
+    assert float(s.target(0)) == pytest.approx(0.0)
+    assert float(s.target(100)) == pytest.approx(0.0)
+    assert float(s.target(1100)) == pytest.approx(0.9)
+    assert float(s.target(5000)) == pytest.approx(0.9)
+    mid = float(s.target(600))
+    assert 0.7 < mid < 0.9  # cubic: front-loaded pruning
+
+
+def test_prune_monotone_and_magnitude_based():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (32, 32))
+    params = {"a": w}
+    masks = {"a": jnp.ones((32, 32), bool)}
+    sched = PruningSchedule(0.8, begin_step=0, end_step=100)
+    p50, m50 = prune_step(params, masks, 50, sched)
+    p100, m100 = prune_step(p50, m50, 100, sched)
+    assert int(m100["a"].sum()) <= int(m50["a"].sum())
+    # pruned = never regrown
+    assert not bool(jnp.any(m100["a"] & ~m50["a"]))
+    # survivors are the largest-magnitude weights
+    k = int(m100["a"].sum())
+    top = np.argsort(-np.abs(np.asarray(w)).ravel())[:k]
+    surv = np.flatnonzero(np.asarray(m100["a"]).ravel())
+    assert set(surv) == set(top)
+
+
+def test_snip_saliency_vs_grad_only():
+    """Appendix M bug #3: |theta*grad| (correct) differs from |grad|."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (64, 64))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+    params = {"a": w}
+    grads = {"a": g}
+    m_good = snip_masks(params, grads, {"a": 0.8})
+    m_bad = snip_masks(params, grads, {"a": 0.8}, saliency="grad")
+    assert int(m_good["a"].sum()) == int(m_bad["a"].sum())
+    assert bool(jnp.any(m_good["a"] != m_bad["a"]))
+    # correct saliency keeps exactly the top |w*g|
+    k = int(m_good["a"].sum())
+    top = np.argsort(-np.abs(np.asarray(w * g)).ravel())[:k]
+    surv = np.flatnonzero(np.asarray(m_good["a"]).ravel())
+    assert set(surv) == set(top)

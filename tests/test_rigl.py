@@ -1,0 +1,152 @@
+"""RigL update semantics (paper Algorithm 1) + hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SparseAlgo, UpdateSchedule, random_mask, rigl_update_layer
+from repro.core.rigl import _drop_grow, rigl_update
+from repro.core.schedules import cosine_decay
+
+
+def test_cosine_decay_endpoints():
+    assert float(cosine_decay(0, 0.3, 1000)) == pytest.approx(0.3)
+    assert float(cosine_decay(1000, 0.3, 1000)) == pytest.approx(0.0, abs=1e-7)
+    assert float(cosine_decay(500, 0.3, 1000)) == pytest.approx(0.15)
+
+
+def test_update_schedule_gating():
+    s = UpdateSchedule(delta_t=100, t_end=1000, alpha=0.3)
+    assert bool(s.is_update_step(100)) and bool(s.is_update_step(900))
+    assert not bool(s.is_update_step(0))      # no update at t=0
+    assert not bool(s.is_update_step(150))    # off-cycle
+    assert not bool(s.is_update_step(1000))   # past t_end
+
+
+def test_drop_smallest_magnitude():
+    """Drop step removes exactly the smallest-|w| active connections."""
+    w = jnp.asarray([[5.0, -4.0, 0.1], [-0.2, 3.0, 0.3]])
+    m = jnp.ones_like(w, bool)
+    g = jnp.asarray([[0.0, 0.0, 0.0], [0.0, 0.0, 0.0]])
+    new_m, new_w, grown = rigl_update_layer(w, m, g, fraction=1 / 3)
+    # k = floor(1/3 * 6) = 2 -> drop 0.1 and -0.2 (smallest two); the four
+    # largest |w| must survive, and nnz is preserved by the grow step.
+    kept = np.asarray(new_m)
+    assert kept[0, 0] and kept[0, 1] and kept[1, 1] and kept[1, 2]
+    assert int(new_m.sum()) == 6
+
+
+def test_grow_highest_gradient_zero_init():
+    w = jnp.asarray([[5.0, 0.01, 0.0, 0.0]])
+    m = jnp.asarray([[True, True, False, False]])
+    g = jnp.asarray([[9.0, 0.5, 7.0, 1.0]])
+    new_m, new_w, grown = rigl_update_layer(w, m, g, fraction=0.5)
+    # n_active=2, k=1: drop 0.01; grow candidates = {0.01's slot, idx2, idx3}
+    # highest |g| among candidates is idx2 (7.0) -> grown, zero-initialized
+    assert bool(new_m[0, 2]) and not bool(new_m[0, 1]) and not bool(new_m[0, 3])
+    assert float(new_w[0, 2]) == 0.0
+    assert bool(grown[0, 2])
+    assert int(new_m.sum()) == 2  # nnz preserved
+
+
+def test_freshly_dropped_can_regrow():
+    """Official-code semantics: a just-dropped slot with top gradient regrows."""
+    w = jnp.asarray([[5.0, 0.01, 0.0]])
+    m = jnp.asarray([[True, True, False]])
+    g = jnp.asarray([[0.0, 100.0, 1.0]])  # the dropped slot has the top grad
+    new_m, new_w, grown = rigl_update_layer(w, m, g, fraction=0.5)
+    assert bool(new_m[0, 1]) and bool(grown[0, 1])
+    assert float(new_w[0, 1]) == 0.0  # re-initialized to zero
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(4, 12),
+    st.integers(4, 12),
+    st.floats(0.1, 0.9),
+    st.floats(0.0, 0.6),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_nnz_preserved_exactly(rows, cols, sparsity, fraction, seed):
+    key = jax.random.PRNGKey(seed)
+    m = random_mask(key, (rows, cols), sparsity)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (rows, cols))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (rows, cols))
+    new_m, new_w, grown = rigl_update_layer(w * m, m, g, fraction)
+    assert int(new_m.sum()) == int(m.sum())  # bit-exact nnz preservation
+    # grown connections were zero-initialized
+    assert float(jnp.max(jnp.abs(jnp.where(grown, new_w, 0.0)))) == 0.0
+    # masks stay boolean
+    assert new_m.dtype == m.dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.2, 0.8))
+def test_property_random_mask_exact_count(seed, sparsity):
+    key = jax.random.PRNGKey(seed)
+    shape = (32, 48)
+    m = random_mask(key, shape, sparsity)
+    expected = round((1 - sparsity) * 32 * 48)
+    assert int(m.sum()) == expected
+
+
+def test_block_mode_produces_block_structure():
+    key = jax.random.PRNGKey(0)
+    shape, blk = (32, 64), (8, 16)
+    m = random_mask(key, shape, 0.0)  # start dense then drop blocks
+    w = jax.random.normal(key, shape)
+    g = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    new_m, _, _ = rigl_update_layer(w, m, g, 0.5, block_shape=blk)
+    mb = np.asarray(new_m).reshape(4, 8, 4, 16)
+    per_block = mb.sum(axis=(1, 3))
+    assert set(np.unique(per_block)) <= {0, 8 * 16}  # all-or-nothing blocks
+
+
+def test_set_and_snfs_growers():
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (16, 16))}
+    masks = {"a": random_mask(key, (16, 16), 0.5)}
+    grads = {"a": jax.random.normal(jax.random.fold_in(key, 1), (16, 16))}
+    mom = {"a": jax.random.normal(jax.random.fold_in(key, 2), (16, 16))}
+    for method in ("set", "snfs", "rigl"):
+        algo = SparseAlgo(method=method, schedule=UpdateSchedule(t_end=100))
+        p2, m2, grown = rigl_update(
+            params, masks, grads, 50, algo, key, dense_momentum=mom
+        )
+        assert int(m2["a"].sum()) == int(masks["a"].sum())
+
+
+def test_static_is_identity():
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (8, 8))}
+    masks = {"a": random_mask(key, (8, 8), 0.5)}
+    grads = {"a": jnp.ones((8, 8))}
+    algo = SparseAlgo(method="static")
+    p2, m2, grown = rigl_update(params, masks, grads, 50, algo, key)
+    assert bool(jnp.all(m2["a"] == masks["a"]))
+    assert not bool(grown["a"].any())
+
+
+def test_dsr_global_reallocation():
+    """DSR: total nnz preserved, per-layer budgets may shift (paper Table 1)."""
+    from repro.core.rigl import dsr_update
+
+    key = jax.random.PRNGKey(4)
+    # layer 'a' has uniformly tiny weights -> global threshold drains it
+    params = {
+        "a": 0.01 * jax.random.normal(key, (32, 32)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (32, 32)),
+    }
+    masks = {
+        "a": random_mask(key, (32, 32), 0.5),
+        "b": random_mask(jax.random.fold_in(key, 2), (32, 32), 0.5),
+    }
+    algo = SparseAlgo(method="rigl", schedule=UpdateSchedule(delta_t=10, t_end=1000, alpha=0.4))
+    p2, m2, grown = dsr_update(params, masks, 10, algo, key)
+    total_before = int(masks["a"].sum()) + int(masks["b"].sum())
+    total_after = int(m2["a"].sum()) + int(m2["b"].sum())
+    assert total_after == total_before  # global nnz preserved
+    # budget must have MOVED away from the tiny-weight layer
+    assert int(m2["a"].sum()) < int(masks["a"].sum())
+    assert int(m2["b"].sum()) > int(masks["b"].sum())

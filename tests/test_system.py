@@ -1,0 +1,42 @@
+"""End-to-end behaviour: the fault-tolerant driver + serve session."""
+import dataclasses
+import json
+import subprocess
+import sys
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SparseConfig
+from repro.core import apply_masks
+from repro.launch.serve import serve_session
+from repro.launch.train import run_with_restarts
+from repro.optim import OptConfig
+from repro.training import init_train_state
+
+
+def test_train_driver_with_preemption(tmp_path):
+    """Driver survives a mid-run preemption and finishes from checkpoint."""
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, sparse=SparseConfig(sparsity=0.8, method="rigl", delta_t=20)
+    )
+    state, log = run_with_restarts(
+        cfg=cfg, steps=80, batch=8, seq=64, workdir=tmp_path,
+        ckpt_every=20, preempt_at=40, log_every=20,
+    )
+    assert int(state["step"]) == 80
+    result = json.loads((tmp_path / "result.json").read_text())
+    assert abs(result["sparsity"] - 0.8) < 0.02
+    assert result["metrics"][-1]["loss"] < result["metrics"][0]["loss"]
+
+
+def test_serve_session_generates():
+    cfg = get_config("hymba-1.5b", smoke=True)
+    state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+    w_eff = apply_masks(state["params"], state["masks"])
+    toks, stats = serve_session(cfg, w_eff, batch=2, prompt_len=24, gen=6)
+    assert toks.shape == (2, 6)
+    assert stats["tok_per_s"] > 0
