@@ -1,10 +1,25 @@
-"""Kernel microbenchmarks: fused-mask and block-sparse matmul vs dense.
+"""Kernel microbenchmarks: fused-mask and block-sparse matmul vs dense,
+now covering the FULL train step (fwd + bwd through the custom-VJP kernels).
 
 CPU wall-times are for the jnp reference path (interpret-mode pallas timing is
 meaningless); the derived columns report the TPU-side traffic/FLOP model:
-fused masking removes 3 HBM weight passes, block-sparsity scales both HBM
-bytes and MXU FLOPs with block density.
+
+  fwd          out = x @ (w⊙m)      — fused masking removes 3 HBM weight
+                                      passes vs XLA's materialized w*m
+  bwd dgrad    dx  = g @ (w⊙m)ᵀ     — same fusion on the N-contraction
+  bwd wgrad    dw  = (xᵀ@g)⊙m       — mask fused at the store; block mode
+                                      computes ONLY active (bk x bn) blocks
+
+Block sparsity scales HBM weight bytes AND MXU FLOPs with block density d in
+all three matmuls of a train step, so the fwd+bwd speedup bound is 1/d — the
+paper's "fixed FLOPs throughout training" realized at the kernel level.
+
+``python -m benchmarks.kernel_bench`` additionally writes BENCH_kernels.json
+(schema: {"rows": [...], "meta": {...}}) so the perf trajectory is tracked
+across PRs from this one onward.
 """
+import json
+import pathlib
 import time
 
 import jax
@@ -13,6 +28,9 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.ops import block_sparse_linear, masked_linear
+
+F32 = 4  # bytes
+MASK = 1  # 1-byte mask in HBM
 
 
 def _time(fn, *args, iters=20):
@@ -24,6 +42,37 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters * 1e6
 
 
+def _time_grad(fn, *args, iters=10):
+    g = jax.jit(jax.grad(lambda *a: jnp.sum(fn(*a)), argnums=(0, 1)))
+    jax.tree_util.tree_leaves(g(*args))[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = g(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def _masked_traffic(M, K, N):
+    """HBM byte model for one fwd+bwd of a masked linear (f32)."""
+    # fused: each matmul reads its operands once; the mask is 1 byte
+    fwd_fused = F32 * (M * K + K * N + M * N) + MASK * K * N
+    dgrad_fused = F32 * (M * N + K * N + M * K) + MASK * K * N
+    wgrad_fused = F32 * (M * K + M * N + K * N) + MASK * K * N
+    # unfused: + write w*m + re-read it, per pass that needs masked weights
+    # (fwd and dgrad consume w*m; wgrad consumes the mask for g*m — charge
+    # the same materialize+reread for its masked-grad copy)
+    extra = 2 * F32 * K * N
+    return {
+        "fwd_bytes_fused": fwd_fused,
+        "fwd_bytes_unfused": fwd_fused + extra,
+        "bwd_bytes_fused": dgrad_fused + wgrad_fused,
+        "bwd_bytes_unfused": dgrad_fused + wgrad_fused + 2 * extra,
+        "weight_traffic_saving_fwd_bwd": round(
+            3 * extra / (fwd_fused + dgrad_fused + wgrad_fused), 2
+        ),
+    }
+
+
 def run(quick=True):
     M = K = N = 1024
     key = jax.random.PRNGKey(0)
@@ -31,25 +80,43 @@ def run(quick=True):
     w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
     rows = []
     dense_t = _time(jax.jit(lambda a, b: a @ b), x, w)
+    dense_bwd_t = _time_grad(lambda a, b: a @ b, x, w)
     rows.append({"name": "kernel/dense_matmul_ref", "us_per_call": dense_t,
-                 "derived": {"hbm_bytes": 4 * (M * K + K * N + M * N)}})
+                 "derived": {"hbm_bytes": F32 * (M * K + K * N + M * N)}})
+    rows.append({"name": "kernel/dense_matmul_ref_fwd_bwd",
+                 "us_per_call": dense_t + dense_bwd_t,
+                 "derived": {
+                     # 3 matmuls/step: fwd, dgrad, wgrad
+                     "hbm_bytes": 3 * F32 * (M * K + K * N + M * N),
+                     "mxu_flops": 3 * 2 * M * K * N,
+                 }})
     for density in (0.1, 0.25, 0.5):
         m = jax.random.uniform(jax.random.fold_in(key, 2), (K, N)) < density
         t = _time(jax.jit(ref.masked_matmul_ref), x, w, m)
+        t_bwd = _time_grad(lambda a, b: ref.masked_matmul_ref(a, b, m), x, w)
+        traffic = _masked_traffic(M, K, N)
         rows.append({
             "name": f"kernel/masked_matmul_d{density}",
             "us_per_call": t,
             "derived": {
-                # fused kernel: w + 1-byte mask once; unfused: w read 2x + masked copy written
-                "hbm_bytes_fused": int(4 * M * K + 4 * K * N + K * N + 4 * M * N),
-                "hbm_bytes_unfused": int(4 * M * K + 3 * 4 * K * N + K * N + 4 * M * N),
+                "hbm_bytes_fused": traffic["fwd_bytes_fused"],
+                "hbm_bytes_unfused": traffic["fwd_bytes_unfused"],
                 "weight_traffic_saving": round(
-                    (3 * 4 * K * N) / (4 * K * N + K * N), 2),
+                    (3 * F32 * K * N) / (F32 * K * N + MASK * K * N), 2),
             },
+        })
+        rows.append({
+            "name": f"kernel/masked_matmul_fwd_bwd_d{density}",
+            "us_per_call": t + t_bwd,
+            "derived": traffic,
         })
         bm = jax.random.uniform(jax.random.fold_in(key, 3), (K // 128, N // 128)) < density
         t2 = _time(jax.jit(lambda a, b, mm: ref.block_sparse_matmul_ref(a, b, mm, 128, 128)), x, w, bm)
+        t2_bwd = _time_grad(
+            lambda a, b: ref.block_sparse_matmul_ref(a, b, bm, 128, 128), x, w
+        )
         d = float(bm.mean())
+        nact = int(np.asarray(bm).sum())
         rows.append({
             "name": f"kernel/block_sparse_d{density}",
             "us_per_call": t2,
@@ -60,4 +127,58 @@ def run(quick=True):
                 "tpu_speedup_bound": round(1 / max(d, 1e-3), 2),
             },
         })
+        rows.append({
+            "name": f"kernel/block_sparse_fwd_bwd_d{density}",
+            "us_per_call": t2 + t2_bwd,
+            "derived": {
+                "block_density": round(d, 3),
+                # all three matmuls skip inactive blocks:
+                #   fwd/dgrad touch d of the w blocks; wgrad computes only
+                #   the nact packed (128x128) grad blocks
+                "mxu_flops_fraction_fwd_bwd": round(d, 3),
+                "dgrad_hbm_weight_bytes_fraction": round(d, 3),
+                "wgrad_blocks_computed": nact,
+                "wgrad_blocks_total": int(bm.size),
+                "tpu_speedup_bound_fwd_bwd": round(1 / max(d, 1e-3), 2),
+            },
+        })
+    # interpret-mode correctness canaries for the Pallas path itself (cheap
+    # shapes — wall time here is NOT meaningful, only parity is)
+    xs = jax.random.normal(key, (128, 256), jnp.float32)
+    ws = jax.random.normal(jax.random.fold_in(key, 4), (256, 128), jnp.float32)
+    ms = jax.random.uniform(jax.random.fold_in(key, 5), (256, 128)) < 0.25
+    err = float(jnp.max(jnp.abs(
+        masked_linear(xs, ws, ms, interpret=True) - ref.masked_matmul_ref(xs, ws, ms)
+    )))
+    bms = jax.random.uniform(jax.random.fold_in(key, 6), (2, 1)) < 0.5
+    err_b = float(jnp.max(jnp.abs(
+        block_sparse_linear(xs, ws, bms, block=(128, 128, 128), interpret=True)
+        - ref.block_sparse_matmul_ref(xs, ws, bms, 128, 128)
+    )))
+    rows.append({
+        "name": "kernel/pallas_parity_max_abs_err",
+        "us_per_call": 0.0,
+        "derived": {"masked": err, "block_sparse": err_b},
+    })
     return rows
+
+
+def main():
+    rows = run(quick=True)
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "note": "wall-times are the jnp reference path on this host; "
+                    "derived columns are the TPU traffic/FLOP model",
+        },
+        "rows": rows,
+    }
+    path = pathlib.Path("BENCH_kernels.json")
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path} ({len(rows)} rows)")
+    for r in rows:
+        print(f'{r["name"]},{r["us_per_call"]:.1f},{json.dumps(r["derived"])}')
+
+
+if __name__ == "__main__":
+    main()

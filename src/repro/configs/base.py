@@ -9,7 +9,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "SparseConfig"]
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SparseConfig",
+    "validate_sparse_kernel",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +30,34 @@ class SparseConfig:
     t_end_fraction: float = 0.75
     grow_init: str = "zeros"
     block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
+    # Execution path for sparsifiable matmuls (models/layers.py dispatch):
+    #   dense        — x @ (w*m), XLA materializes w*m in HBM (reference)
+    #   masked       — Pallas fused-mask kernel, any mask pattern
+    #   block_sparse — Pallas block-skipping kernel; REQUIRES block-aligned
+    #                  masks, i.e. block_shape == (kernel_block bk, bn)
+    # Both Pallas paths carry custom-VJP backward kernels, so the train step's
+    # fwd AND bwd run sparse (kernels/masked_matmul.py, block_sparse_matmul.py).
+    kernel: str = "dense"
+    kernel_block: tuple[int, int, int] = (128, 128, 128)  # (bm, bn, bk) tiles
+
+
+def validate_sparse_kernel(sp: SparseConfig) -> None:
+    """Fail fast on inconsistent kernel-dispatch settings.
+
+    block_sparse executes whole (bk x bn) weight blocks unmasked inside active
+    blocks, so the elementwise mask MUST be block-aligned — which core.rigl
+    guarantees exactly when block_shape matches the kernel's (bk, bn).
+    """
+    if sp.kernel not in ("dense", "masked", "block_sparse"):
+        raise ValueError(f"unknown sparse.kernel {sp.kernel!r}")
+    if sp.kernel == "block_sparse":
+        _, bn, bk = sp.kernel_block
+        if sp.block_shape is None or tuple(sp.block_shape) != (bk, bn):
+            raise ValueError(
+                "sparse.kernel='block_sparse' needs block-aligned masks: set "
+                f"sparse.block_shape=({bk}, {bn}) to match kernel_block "
+                f"(got {sp.block_shape})"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

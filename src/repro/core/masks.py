@@ -17,6 +17,7 @@ __all__ = [
     "path_name",
     "tree_paths",
     "random_mask",
+    "random_block_mask",
     "init_masks",
     "apply_masks",
     "mask_stats",
@@ -55,11 +56,32 @@ def random_mask(key, shape, sparsity: float, dtype=jnp.bool_):
     return (rank < k).reshape(shape).astype(dtype)
 
 
-def init_masks(key, params, sparsities: Mapping[str, float]):
+def random_block_mask(key, shape, sparsity: float, block_shape, dtype=jnp.bool_):
+    """Block-aligned random mask: EXACT count of active (bm, bn) blocks.
+
+    Required when the topology executes through the block-sparse kernel from
+    step 0 — elementwise random masks are not block-aligned until the first
+    block-mode RigL update, and the kernel runs whole active blocks unmasked.
+    Falls back to elementwise masks when the block doesn't tile the shape
+    (such layers must not be dispatched to the block kernel; the dispatch
+    layer's reshape fails loudly if they are).
+    """
+    bm_, bn_ = block_shape
+    if len(shape) != 2 or shape[0] % bm_ or shape[1] % bn_:
+        return random_mask(key, shape, sparsity, dtype)
+    blk = random_mask(key, (shape[0] // bm_, shape[1] // bn_), sparsity)
+    return (
+        jnp.repeat(jnp.repeat(blk, bm_, axis=0), bn_, axis=1).astype(dtype)
+    )
+
+
+def init_masks(key, params, sparsities: Mapping[str, float], block_shape=None):
     """Build the mask pytree.
 
     sparsities maps param-path -> sparsity; paths not present (or with
     sparsity exactly 0 and marked dense upstream) get mask ``None``.
+    block_shape: draw block-aligned masks (TPU block-sparse mode) so the
+    topology is kernel-executable from the very first step.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     masks = []
@@ -70,7 +92,10 @@ def init_masks(key, params, sparsities: Mapping[str, float]):
             masks.append(None)
             continue
         key, sub = jax.random.split(key)
-        masks.append(random_mask(sub, leaf.shape, s))
+        if block_shape is not None:
+            masks.append(random_block_mask(sub, leaf.shape, s, block_shape))
+        else:
+            masks.append(random_mask(sub, leaf.shape, s))
     return jax.tree_util.tree_unflatten(treedef, masks)
 
 

@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the RigL hot path (fwd + custom-VJP bwd).
+
+Public API re-exported from ops.py (padding + interpret auto-select); the
+per-kernel modules hold the pallas_call plumbing and backward kernels.
+"""
+from .ops import (  # noqa: F401
+    auto_interpret,
+    block_sparse_linear,
+    masked_linear,
+    topk_threshold,
+)
+
+__all__ = [
+    "auto_interpret",
+    "block_sparse_linear",
+    "masked_linear",
+    "topk_threshold",
+]

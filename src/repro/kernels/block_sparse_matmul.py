@@ -1,17 +1,38 @@
-"""Block-sparse matmul — the TPU-native execution of RigL sparsity.
+"""Block-sparse matmul — the TPU-native execution of RigL sparsity (fwd+bwd).
 
 Unstructured sparsity cannot skip work on a 128x128 systolic MXU, so the TPU
 adaptation constrains RigL's drop/grow to (bk x bn)-aligned weight blocks
-(core.rigl block_shape mode).  This kernel then *skips inactive blocks
-entirely*: for every output column-block j we precompute the list of active
-K-blocks (a CSC-style index set, padded to the max count), pass it via scalar
-prefetch, and let the BlockSpec index_map DMA only active w-tiles from HBM.
+(core.rigl block_shape mode).  These kernels then *skip inactive blocks
+entirely* in every pass of training:
 
-HBM traffic and MXU work both scale with (1 - block_sparsity) — this is the
-"sparse primitives" scenario (3) of the paper's Discussion, realized for TPU.
+  forward  out = x @ w_bs        CSC packing: per N-block, its active K-blocks
+                                 (scalar-prefetched; BlockSpec index_map DMAs
+                                 only active w-tiles from HBM)
+  dgrad    dx  = g @ w_bsᵀ       CSR packing: per K-block, its active N-blocks
+                                 — inactive N-blocks are skipped, so the
+                                 backward input-grad is as sparse as the fwd
+  wgrad    dw  = xᵀ @ g          computed ONLY for active (bk x bn) blocks,
+                                 emitted PACKED as (nnb*max_k, bk, bn); the
+                                 VJP wrapper scatters the packed blocks into
+                                 the dense (K, N) cotangent (zeros outside the
+                                 topology) that the RigL-side optimizer sees.
 
-Grid: (M/bm, N/bn, max_active_k); zero-padding contributes nothing because
-padded slots re-load an arbitrary valid block but are masked by @pl.when.
+HBM traffic and MXU work in fwd AND bwd all scale with (1 - block_sparsity) —
+the "sparse primitives" scenario (3) of the paper's Discussion, realized for
+TPU for the full train step, not just inference.
+
+Packing comes in two flavours:
+  * ``pack_block_mask`` / ``pack_block_mask_rows`` — host-side numpy,
+    vectorized (argsort-based), tight max-count; amortized over delta_t >= 100
+    steps per topology update.
+  * ``pack_block_mask_traced`` / ``pack_block_mask_rows_traced`` — jnp,
+    jit-safe with a STATIC padded count (worst case: the full block-grid dim).
+    Padded grid slots clamp their index_map to the last active block, so they
+    re-DMA nothing and @pl.when skips their compute; the only cost is empty
+    grid iterations.
+
+Grid: (M/bm, N/bn, max_active_k); zero-count columns clamp to block 0 and are
+fully masked by @pl.when (the clamp keeps indices non-negative — see _clamp).
 """
 from __future__ import annotations
 
@@ -22,27 +43,97 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["block_sparse_matmul", "pack_block_mask"]
+__all__ = [
+    "block_sparse_matmul",
+    "pack_block_mask",
+    "pack_block_mask_rows",
+    "pack_block_mask_traced",
+    "pack_block_mask_rows_traced",
+]
 
 
-def pack_block_mask(block_mask):
-    """block_mask: (K/bk, N/bn) bool -> (indices (N/bn, max_k), counts (N/bn,)).
+# ---------------------------------------------------------------------------
+# packing (CSC for fwd/wgrad, CSR for dgrad)
+# ---------------------------------------------------------------------------
+
+def _pack_np(bm, max_count=None):
+    """Per-COLUMN active row ids of a bool matrix, argsort-vectorized.
+
+    bm: (R, C) bool -> (idx (C, max_count) int32, counts (C,) int32).
+    Slots beyond a column's count are 0 (consumers mask on counts).
+    """
+    bm = np.asarray(bm, bool)
+    counts = bm.sum(axis=0).astype(np.int32)
+    if max_count is None:
+        max_count = max(int(counts.max(initial=0)), 1)
+    elif int(counts.max(initial=0)) > max_count:
+        # truncating would silently drop active blocks from the matmul
+        raise ValueError(
+            f"max_count={max_count} < max active blocks per column "
+            f"({int(counts.max())}); the packed matmul would be wrong"
+        )
+    # stable ascending argsort of ~bm puts active rows first, in row order
+    order = np.argsort(~bm, axis=0, kind="stable")
+    idx = order[:max_count].T.astype(np.int32)
+    idx = np.where(np.arange(max_count)[None, :] < counts[:, None], idx, 0)
+    return idx, counts
+
+
+def _pack_jnp(bm, max_count):
+    """Trace-safe twin of _pack_np (max_count must be static)."""
+    counts = jnp.sum(bm, axis=0).astype(jnp.int32)
+    order = jnp.argsort(~bm, axis=0, stable=True)
+    idx = order[:max_count].T.astype(jnp.int32)
+    idx = jnp.where(jnp.arange(max_count)[None, :] < counts[:, None], idx, 0)
+    return idx, counts
+
+
+def pack_block_mask(block_mask, max_count=None):
+    """block_mask: (K/bk, N/bn) bool -> CSC (indices (N/bn, max_k), counts).
 
     Static (host-side) packing: RigL updates the topology every delta_t >= 100
-    steps, so the packing is amortized over >= 100 matmuls.
+    steps, so the packing is amortized over >= 100 matmuls.  ``max_count``
+    pins the padded width (pass a fixed bound to avoid retraces when the
+    per-column max drifts across topology updates).
     """
-    bm = np.asarray(block_mask)
-    nkb, nnb = bm.shape
-    counts = bm.sum(axis=0).astype(np.int32)
-    max_k = max(int(counts.max()), 1)
-    idx = np.zeros((nnb, max_k), np.int32)
-    for j in range(nnb):
-        act = np.nonzero(bm[:, j])[0]
-        idx[j, : len(act)] = act
-    return jnp.asarray(idx), jnp.asarray(counts)
+    idx, cnt = _pack_np(block_mask, max_count)
+    return jnp.asarray(idx), jnp.asarray(cnt)
 
 
-def _kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+def pack_block_mask_rows(block_mask, max_count=None):
+    """block_mask: (K/bk, N/bn) bool -> CSR (indices (K/bk, max_n), counts).
+
+    The dgrad kernel's view: per K-block row, the active N-blocks to visit.
+    """
+    idx, cnt = _pack_np(np.asarray(block_mask).T, max_count)
+    return jnp.asarray(idx), jnp.asarray(cnt)
+
+
+def pack_block_mask_traced(block_mask):
+    """jit-safe CSC pack; padded width = K/bk (static worst case)."""
+    return _pack_jnp(block_mask, block_mask.shape[0])
+
+
+def pack_block_mask_rows_traced(block_mask):
+    """jit-safe CSR pack; padded width = N/bn (static worst case)."""
+    return _pack_jnp(block_mask.T, block_mask.shape[1])
+
+
+def _clamp(idx_ref, cnt_ref, row, s):
+    """Active-block id for slot s of packed row `row`, clamped non-negative.
+
+    Padded slots (s >= cnt) clamp to the LAST active id, so consecutive grid
+    steps see an unchanged index and Pallas skips the re-DMA; cnt == 0 rows
+    clamp to 0 (guarded off by @pl.when in the kernel body).
+    """
+    return idx_ref[row, jnp.maximum(jnp.minimum(s, cnt_ref[row] - 1), 0)]
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -62,6 +153,217 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _dx_kernel(ridx_ref, rcnt_ref, g_ref, w_ref, o_ref, acc_ref, *, n_s: int):
+    """dx (bm, bk) += g (bm, bn) @ w (bk, bn)ᵀ over ACTIVE N-blocks only."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = pl.program_id(1)
+
+    @pl.when(s < rcnt_ref[k])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s == n_s - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dw_kernel(idx_ref, cnt_ref, x_ref, g_ref, o_ref, acc_ref, *, n_m: int):
+    """Packed wgrad: slot (j, s) holds xᵀ @ g for active block (idx[j,s], j).
+
+    Inactive/padded slots store zeros (their x-tile is a clamped re-load of an
+    arbitrary valid block, so the accumulate is guarded off too).
+    """
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j, s = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(s < cnt_ref[j])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        o_ref[...] = jnp.where(
+            s < cnt_ref[j], acc_ref[...], jnp.zeros_like(acc_ref)
+        ).astype(o_ref.dtype)[None]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+
+    M, K = x.shape
+    N = w.shape[1]
+    max_k = block_idx.shape[1]
+    grid = (M // bm, N // bn, max_k)
+
+    def x_map(m, n, k, idx_ref, cnt_ref):
+        return (m, _clamp(idx_ref, cnt_ref, n, k))
+
+    def w_map(m, n, k, idx_ref, cnt_ref):
+        return (_clamp(idx_ref, cnt_ref, n, k), n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k, *_: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, n_k=max_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(block_idx, block_cnt, x, w)
+
+
+def _dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, out_dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    M, N = g.shape
+    K = w.shape[0]
+    max_n = row_idx.shape[1]
+    grid = (M // bm, K // bk, max_n)
+
+    def g_map(m, k, s, ridx_ref, rcnt_ref):
+        return (m, _clamp(ridx_ref, rcnt_ref, k, s))
+
+    def w_map(m, k, s, ridx_ref, rcnt_ref):
+        return (k, _clamp(ridx_ref, rcnt_ref, k, s))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), g_map),
+            pl.BlockSpec((bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda m, k, s, *_: (m, k)),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, n_s=max_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        interpret=interpret,
+    )(row_idx, row_cnt, g, w)
+
+
+def _dw_call(x, g, block_idx, block_cnt, bm, bn, bk, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+
+    M, K = x.shape
+    N = g.shape[1]
+    nnb = N // bn
+    max_k = block_idx.shape[1]
+    n_m = M // bm
+    grid = (nnb, max_k, n_m)
+
+    def x_map(j, s, i, idx_ref, cnt_ref):
+        return (i, _clamp(idx_ref, cnt_ref, j, s))
+
+    def g_map(j, s, i, idx_ref, cnt_ref):
+        return (i, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bm, bn), g_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bk, bn), lambda j, s, i, *_: (j * max_k + s, 0, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, n_m=n_m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nnb * max_k, bk, bn), jnp.float32),
+        interpret=interpret,
+    )(block_idx, block_cnt, x, g)
+
+
+def _scatter_packed_dw(packed, block_idx, block_cnt, nkb, bk, bn, dtype):
+    """Packed (nnb*max_k, bk, bn) wgrad blocks -> dense (K, N) cotangent.
+
+    This is the "scatter on the RigL-update side": the kernel only ever
+    computes/stores active blocks; the dense layout (zeros outside the
+    topology) is materialized here, where the optimizer consumes it.
+    """
+    nnb, max_k = block_idx.shape
+    packed = packed.reshape(nnb, max_k, bk, bn)
+    valid = (jnp.arange(max_k)[None, :] < block_cnt[:, None])[..., None, None]
+    packed = jnp.where(valid, packed, 0.0)
+    cols = jnp.broadcast_to(jnp.arange(nnb)[:, None], block_idx.shape)
+    # .add (not .set): padded slots alias block (0, j) but are already zeroed
+    grid_ = jnp.zeros((nkb, nnb, bk, bn), packed.dtype)
+    grid_ = grid_.at[block_idx, cols].add(packed)
+    return grid_.transpose(0, 2, 1, 3).reshape(nkb * bk, nnb * bn).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _block_sparse_matmul(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+    return _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _bs_fwd(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+    out = _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (x, w, block_idx, block_cnt)
+
+
+def _bs_bwd(bm, bn, bk, interpret, res, g):
+    x, w, block_idx, block_cnt = res
+    K, N = w.shape
+    nkb, nnb = K // bk, N // bn
+    max_k = block_idx.shape[1]
+
+    # Reconstruct the (tiny) block mask from the CSC packing and re-pack it
+    # row-wise (CSR) for dgrad.  nkb x nnb bools — negligible vs the matmuls.
+    valid = jnp.arange(max_k)[None, :] < block_cnt[:, None]  # (nnb, max_k)
+    cols = jnp.broadcast_to(jnp.arange(nnb)[:, None], block_idx.shape)
+    bmask = jnp.zeros((nkb, nnb), bool).at[block_idx, cols].max(valid)
+    row_idx, row_cnt = _pack_jnp(bmask.T, nnb)
+
+    dx = _dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _dw_call(x, g, block_idx, block_cnt, bm, bn, bk, interpret)
+    dw = _scatter_packed_dw(packed, block_idx, block_cnt, nkb, bk, bn, w.dtype)
+
+    zi = np.zeros(block_idx.shape, jax.dtypes.float0)
+    zc = np.zeros(block_cnt.shape, jax.dtypes.float0)
+    return dx, dw, zi, zc
+
+
+_block_sparse_matmul.defvjp(_bs_fwd, _bs_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def block_sparse_matmul(
     x,
@@ -78,34 +380,11 @@ def block_sparse_matmul(
 
     block_idx: (N/bn, max_k) int32 — active K-block ids per N-block (packed).
     block_cnt: (N/bn,) int32 — number of active K-blocks per N-block.
-    """
-    from jax.experimental.pallas import tpu as pltpu
 
+    Differentiable: jax.grad routes through the CSR dgrad kernel (skips
+    inactive K-blocks) and the packed-active-block wgrad kernel.
+    """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and N % bn == 0 and K % bk == 0 and M % bm == 0
-    max_k = block_idx.shape[1]
-    grid = (M // bm, N // bn, max_k)
-
-    def x_map(m, n, k, idx_ref, cnt_ref):
-        return (m, idx_ref[n, jnp.minimum(k, cnt_ref[n] - 1)])
-
-    def w_map(m, n, k, idx_ref, cnt_ref):
-        return (idx_ref[n, jnp.minimum(k, cnt_ref[n] - 1)], n)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), x_map),
-            pl.BlockSpec((bk, bn), w_map),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k, *_: (m, n)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, n_k=max_k),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        interpret=interpret,
-    )(block_idx, block_cnt, x, w)
+    return _block_sparse_matmul(x, w, block_idx, block_cnt, bm, bn, bk, interpret)

@@ -1,15 +1,27 @@
-"""Fused masked matmul:  out = x @ (w * mask).
+"""Fused masked matmul with full training semantics (fwd + custom-VJP bwd).
 
-The RigL hot path executes every linear layer as (w ⊙ m) @ x.  Naively XLA
+The RigL hot path executes every linear layer as x @ (w ⊙ m).  Naively XLA
 materializes the masked copy w⊙m in HBM (read w + read m + write w⊙m + read
-w⊙m = 3 extra HBM passes over the weights *per step*).  This kernel fuses the
+w⊙m = 3 extra HBM passes over the weights *per step*).  These kernels fuse the
 mask multiply into the matmul's VMEM pipeline: w-tile and 1-byte mask-tile are
 DMA'd to VMEM, multiplied in-register, and fed straight to the MXU — the
-masked weight never exists in HBM.
+masked weight never exists in HBM, in the forward OR the backward pass:
+
+  forward   out = x @ (w ⊙ m)          (_fwd_kernel)
+  dgrad     dx  = g @ (w ⊙ m)ᵀ         (_dx_kernel — mask fused in-pipeline)
+  wgrad     dw  = (xᵀ @ g) ⊙ m         (_dw_kernel — mask fused at the store,
+                                         so the cotangent leaving the kernel is
+                                         already the paper's SPARSE gradient)
+
+``masked_matmul`` is wrapped in ``jax.custom_vjp`` so ``jax.grad`` of a model
+routed through it never falls back to dense XLA matmuls; the mask input gets a
+symbolic-zero (float0) cotangent.  Since d/dw [x@(w⊙m)] = (xᵀg)⊙m, the wgrad
+this kernel emits equals g_dense * m — exactly what the optimizer consumes
+(training/steps.py), with no separate dense_to_sparse_grad traffic needed.
 
 Tiling: grid (M/bm, N/bn, K/bk), MXU-aligned (128x128 default), fp32
-accumulator scratch in VMEM, K innermost so the accumulator tile stays
-resident across the contraction.
+accumulator scratch in VMEM, contraction dim innermost so the accumulator tile
+stays resident across it.
 """
 from __future__ import annotations
 
@@ -17,13 +29,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["masked_matmul"]
 
 
-def _kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
+def _fwd_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -40,22 +53,52 @@ def _kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
-)
-def masked_matmul(
-    x, w, mask, *, bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = False
-):
-    """x: (M, K); w: (K, N); mask: (K, N) bool/int8 -> (M, N) in x.dtype."""
+def _dx_kernel(g_ref, w_ref, m_ref, o_ref, acc_ref, *, n_n: int):
+    """dx-tile (bm, bk) += g (bm, bn) @ (w ⊙ m)ᵀ (bn, bk); N innermost."""
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...] * m_ref[...].astype(w_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...], w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_n - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dw_kernel(x_ref, g_ref, m_ref, o_ref, acc_ref, *, n_m: int):
+    """dw-tile (bk, bn) += xᵀ (bk, bm) @ g (bm, bn); mask applied at store."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        o_ref[...] = (
+            acc_ref[...] * m_ref[...].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+def _fwd_call(x, w, mask, bm, bn, bk, interpret):
     M, K = x.shape
-    K2, N = w.shape
-    assert K == K2 and mask.shape == w.shape, (x.shape, w.shape, mask.shape)
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    N = w.shape[1]
     n_k = K // bk
     grid = (M // bm, N // bn, n_k)
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
+        functools.partial(_fwd_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
@@ -67,3 +110,83 @@ def masked_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w, mask)
+
+
+def _dx_call(g, w, mask, bm, bn, bk, interpret, out_dtype):
+    M, N = g.shape
+    K = w.shape[0]
+    n_n = N // bn
+    grid = (M // bm, K // bk, n_n)
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, n_n=n_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda m, k, n: (m, n)),
+            pl.BlockSpec((bk, bn), lambda m, k, n: (k, n)),
+            pl.BlockSpec((bk, bn), lambda m, k, n: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda m, k, n: (m, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(g, w, mask)
+
+
+def _dw_call(x, g, mask, bm, bn, bk, interpret, out_dtype):
+    M, K = x.shape
+    N = g.shape[1]
+    n_m = M // bm
+    grid = (K // bk, N // bn, n_m)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, n_m=n_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda k, n, i: (i, k)),
+            pl.BlockSpec((bm, bn), lambda k, n, i: (i, n)),
+            pl.BlockSpec((bk, bn), lambda k, n, i: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda k, n, i: (k, n)),
+        out_shape=jax.ShapeDtypeStruct((K, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, g, mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _masked_matmul(x, w, mask, bm, bn, bk, interpret):
+    return _fwd_call(x, w, mask, bm, bn, bk, interpret)
+
+
+def _mm_fwd(x, w, mask, bm, bn, bk, interpret):
+    return _fwd_call(x, w, mask, bm, bn, bk, interpret), (x, w, mask)
+
+
+def _mm_bwd(bm, bn, bk, interpret, res, g):
+    x, w, mask = res
+    dx = _dx_call(g, w, mask, bm, bn, bk, interpret, x.dtype)
+    dw = _dw_call(x, g, mask, bm, bn, bk, interpret, w.dtype)
+    # bool mask: symbolic-zero cotangent (float0), per the custom_vjp contract
+    dmask = np.zeros(mask.shape, jax.dtypes.float0)
+    return dx, dw, dmask
+
+
+_masked_matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def masked_matmul(
+    x, w, mask, *, bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = False
+):
+    """x: (M, K); w: (K, N); mask: (K, N) bool/int8 -> (M, N) in x.dtype.
+
+    Differentiable: jax.grad routes through the fused Pallas dgrad/wgrad
+    kernels above (never a dense XLA matmul over unmasked weights).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and mask.shape == w.shape, (x.shape, w.shape, mask.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    return _masked_matmul(x, w, mask, bm, bn, bk, interpret)

@@ -3,6 +3,20 @@
 ``interpret=None`` auto-selects: compiled on TPU, interpret (python-executed
 kernel bodies) elsewhere — the CPU CI validates kernel semantics against
 ref.py; the BlockSpec tiling targets TPU v5e VMEM (128-aligned tiles).
+
+Both linear wrappers are fully differentiable (the underlying kernels carry
+custom-VJP Pallas backward passes) and accept NON-ALIGNED leading dims: the
+flattened batch*seq rows are zero-padded up to the M tile and trimmed after,
+so odd shapes (e.g. decode with batch 4, or batch*seq not a 128 multiple)
+dispatch without caller-side padding.  ``masked_linear`` additionally pads
+K/N when they don't divide the tile; ``block_sparse_linear`` requires aligned
+K/N because the block mask's grid is defined by them.
+
+``block_sparse_linear`` accepts the block mask either concrete (host-side
+numpy packing, tight max-count — serving / eval) or traced (jit-safe jnp
+packing with a static worst-case count — the training hot path; padded grid
+slots cost empty iterations but no DMA or FLOPs).  A precomputed ``pack=
+(idx, cnt)`` bypasses packing entirely.
 """
 from __future__ import annotations
 
@@ -12,7 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .block_sparse_matmul import block_sparse_matmul, pack_block_mask
+from .block_sparse_matmul import (
+    block_sparse_matmul,
+    pack_block_mask,
+    pack_block_mask_traced,
+)
 from .masked_matmul import masked_matmul
 from .topk_threshold import N_BINS, histogram_abs
 
@@ -28,27 +46,73 @@ def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _row_tile(M: int, bm: int) -> tuple[int, int]:
+    """(effective row tile, padded M).  Rows below one tile shrink the tile to
+    the 16-padded row count (16 = bf16 sublane min) instead of padding a tiny
+    batch all the way to bm."""
+    bm_eff = min(bm, _round_up(M, 16))
+    return bm_eff, _round_up(M, bm_eff)
+
+
+def _pad_rows(x2, Mp: int):
+    M = x2.shape[0]
+    return x2 if Mp == M else jnp.pad(x2, ((0, Mp - M), (0, 0)))
+
+
 def masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
     """out = x @ (w*mask) with the mask fused into the matmul pipeline."""
     interpret = auto_interpret() if interpret is None else interpret
     bm, bn, bk = block
     *lead, K = x.shape
+    N = w.shape[1]
     x2 = x.reshape(-1, K)
-    out = masked_matmul(x2, w, mask, bm=bm, bn=bn, bk=bk, interpret=interpret)
-    return out.reshape(*lead, w.shape[1])
+    M = x2.shape[0]
+    bm_eff, Mp = _row_tile(M, bm)
+    x2 = _pad_rows(x2, Mp)
+    # pad K/N up to their (clamped) tiles; zero pad-weights contribute nothing
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+        mask = jnp.pad(mask, ((0, Kp - K), (0, Np - N)))
+    out = masked_matmul(
+        x2, w, mask, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:M, :N].reshape(*lead, N)
 
 
-def block_sparse_linear(x, w, block_mask, *, block=(128, 128, 128), interpret=None):
-    """out = x @ w_blocksparse, skipping inactive (bk x bn) blocks entirely."""
+def block_sparse_linear(
+    x, w, block_mask, *, block=(128, 128, 128), interpret=None, pack=None
+):
+    """out = x @ w_blocksparse, skipping inactive (bk x bn) blocks entirely.
+
+    block_mask: (K/bk, N/bn) bool — concrete or traced (see module docstring).
+    pack: optional precomputed (block_idx, block_cnt) from pack_block_mask.
+    """
     interpret = auto_interpret() if interpret is None else interpret
     bm, bn, bk = block
-    idx, cnt = pack_block_mask(block_mask)
     *lead, K = x.shape
+    bk, bn = min(bk, K), min(bn, w.shape[1])
+    if pack is not None:
+        idx, cnt = pack
+    elif isinstance(block_mask, jax.core.Tracer):
+        idx, cnt = pack_block_mask_traced(block_mask)
+    else:
+        idx, cnt = pack_block_mask(np.asarray(block_mask))
     x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm_eff, Mp = _row_tile(M, bm)
+    x2 = _pad_rows(x2, Mp)
     out = block_sparse_matmul(
-        x2, w, idx, cnt, bm=bm, bn=bn, bk=bk, interpret=interpret
+        x2, w, idx, cnt, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
     )
-    return out.reshape(*lead, w.shape[1])
+    return out[:M].reshape(*lead, w.shape[1])
 
 
 def topk_threshold(x, k: int, *, refine: bool = True, interpret=None):

@@ -1,10 +1,16 @@
 """Batched decode driver: prefill a batch of prompts, stream decode steps.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b --smoke \
-      --batch 4 --prompt-len 48 --gen 32
+      --batch 4 --prompt-len 48 --gen 32 --kernel block_sparse
 
 The sparse model serves through the SAME masks it was trained with — test
 FLOPs scale with (1-S) exactly as the paper's Figure 2 test columns.
+
+With ``--kernel`` (or cfg.sparse.kernel) set, prefill and every decode step
+route the projections/MLPs through the Pallas sparse kernels instead of
+pre-materializing w*m: decode is weight-bound, so block_sparse's skipped
+blocks translate ~1:1 into HBM-traffic (and so latency) savings at the
+kernel level.
 """
 from __future__ import annotations
 
@@ -24,21 +30,37 @@ from ..optim import OptConfig
 __all__ = ["serve_session", "main"]
 
 
-def serve_session(cfg, params, *, batch: int, prompt_len: int, gen: int, max_len: int | None = None):
-    """Greedy batched generation. Returns (tokens (B, prompt+gen), stats)."""
+def serve_session(
+    cfg,
+    params,
+    *,
+    batch: int,
+    prompt_len: int,
+    gen: int,
+    max_len: int | None = None,
+    masks=None,
+):
+    """Greedy batched generation. Returns (tokens (B, prompt+gen), stats).
+
+    masks=None expects pre-masked params (legacy).  With masks, params are
+    raw and serving dispatches through cfg.sparse.kernel (see lm_decode).
+    """
     max_len = max_len or (prompt_len + gen)
     prompt = batch_for(cfg, 0, batch, prompt_len + 1, learnable=True)
     prompt = {k: v for k, v in prompt.items() if k != "targets"}
     if "tokens" in prompt:
         prompt["tokens"] = prompt["tokens"][:, :prompt_len]
 
-    prefill = jax.jit(lambda p, b: lm_prefill(p, cfg, b, max_len=max_len))
+    prefill = jax.jit(
+        lambda p, m, b: lm_prefill(p, cfg, b, max_len=max_len, masks=m)
+    )
     decode = jax.jit(
-        lambda p, c, t, pos: lm_decode(p, cfg, c, t, pos), donate_argnums=(1,)
+        lambda p, m, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m),
+        donate_argnums=(2,),
     )
 
     t0 = time.time()
-    logits, caches = prefill(params, prompt)
+    logits, caches = prefill(params, masks, prompt)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -47,7 +69,7 @@ def serve_session(cfg, params, *, batch: int, prompt_len: int, gen: int, max_len
     n_patches = cfg.n_patches if cfg.frontend == "patch" else 0
     t0 = time.time()
     for i in range(gen - 1):
-        logits, caches = decode(params, caches, tok, prompt_len + n_patches + i)
+        logits, caches = decode(params, masks, caches, tok, prompt_len + n_patches + i)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(tok)
@@ -67,14 +89,42 @@ def main():
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=48)
     p.add_argument("--gen", type=int, default=32)
+    p.add_argument(
+        "--kernel", default=None, choices=["dense", "masked", "block_sparse"],
+        help="override cfg.sparse.kernel for serving",
+    )
+    p.add_argument(
+        "--block", type=int, default=None,
+        help="block edge for --kernel block_sparse (sets block_shape + tiles)",
+    )
     args = p.parse_args()
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.kernel is not None:
+        import dataclasses
+
+        sp = cfg.sparse
+        if args.kernel == "block_sparse":
+            e = args.block or sp.kernel_block[2]
+            sp = dataclasses.replace(
+                sp, kernel="block_sparse", block_shape=(e, e),
+                kernel_block=(sp.kernel_block[0], e, e),
+            )
+        else:
+            sp = dataclasses.replace(sp, kernel=args.kernel)
+        cfg = dataclasses.replace(cfg, sparse=sp)
     state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
-    w_eff = apply_masks(state["params"], state["masks"])
-    toks, stats = serve_session(
-        cfg, w_eff, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen
-    )
-    print("generated shape:", toks.shape)
+    if cfg.sparse.kernel in ("masked", "block_sparse"):
+        # kernel dispatch: serve RAW weights + masks; w*m never materialized
+        toks, stats = serve_session(
+            cfg, state["params"], batch=args.batch,
+            prompt_len=args.prompt_len, gen=args.gen, masks=state["masks"],
+        )
+    else:
+        w_eff = apply_masks(state["params"], state["masks"])
+        toks, stats = serve_session(
+            cfg, w_eff, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen
+        )
+    print(f"kernel={cfg.sparse.kernel}  generated shape: {toks.shape}")
     for k, v in stats.items():
         print(f"  {k}: {v:.4f}")
 

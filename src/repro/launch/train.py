@@ -154,6 +154,14 @@ def main():
     p.add_argument("--distribution", default="erk", choices=["uniform", "er", "erk"])
     p.add_argument("--delta-t", type=int, default=100)
     p.add_argument("--alpha", type=float, default=0.3)
+    p.add_argument(
+        "--kernel", default="dense", choices=["dense", "masked", "block_sparse"],
+        help="execution path for sparsifiable matmuls (Pallas sparse kernels)",
+    )
+    p.add_argument(
+        "--block", type=int, default=128,
+        help="block edge for --kernel block_sparse (sets block_shape + tiles)",
+    )
     p.add_argument("--workdir", default="/tmp/repro_train")
     p.add_argument("--preempt-at", type=int, default=None)
     p.add_argument("--max-restarts", type=int, default=3)
@@ -164,13 +172,17 @@ def main():
     sparsity = 0.0 if method == "dense" else args.sparsity
     if method == "dense":
         method = "static"
-    cfg = dataclasses.replace(
-        cfg,
-        sparse=SparseConfig(
-            sparsity=sparsity, method=method,
-            distribution=args.distribution, delta_t=args.delta_t, alpha=args.alpha,
-        ),
+    sparse_kw = dict(
+        sparsity=sparsity, method=method,
+        distribution=args.distribution, delta_t=args.delta_t, alpha=args.alpha,
+        kernel=args.kernel,
     )
+    if args.kernel == "block_sparse":
+        # block-sparse execution needs a block-aligned topology (core.rigl
+        # block mode) matching the kernel tiles
+        sparse_kw["block_shape"] = (args.block, args.block)
+        sparse_kw["kernel_block"] = (128, args.block, args.block)
+    cfg = dataclasses.replace(cfg, sparse=SparseConfig(**sparse_kw))
     run_with_restarts(
         max_restarts=args.max_restarts,
         cfg=cfg,

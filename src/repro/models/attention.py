@@ -60,13 +60,26 @@ def rope(x, positions, theta: float = 1e4):
     return out.astype(x.dtype)
 
 
-def _qkv(p, x, cfg):
+def _mask_of(masks, name):
+    """Mask leaf for one projection (None when undispatched/legacy)."""
+    return None if masks is None else masks[name]["w"]
+
+
+def _linear_kw(cfg, masks, name):
+    return dict(
+        mask=_mask_of(masks, name),
+        kernel=cfg.sparse.kernel,
+        block=cfg.sparse.kernel_block,
+    )
+
+
+def _qkv(p, x, cfg, masks=None):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    q = linear(p["wq"], x, dt).reshape(B, S, H, hd)
-    k = linear(p["wk"], x, dt).reshape(B, S, KV, hd)
-    v = linear(p["wv"], x, dt).reshape(B, S, KV, hd)
+    q = linear(p["wq"], x, dt, **_linear_kw(cfg, masks, "wq")).reshape(B, S, H, hd)
+    k = linear(p["wk"], x, dt, **_linear_kw(cfg, masks, "wk")).reshape(B, S, KV, hd)
+    v = linear(p["wv"], x, dt, **_linear_kw(cfg, masks, "wv")).reshape(B, S, KV, hd)
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)
@@ -114,16 +127,19 @@ def attention(
     kind: str = "global",
     positions=None,
     q_chunk: int = 4096,
+    masks=None,
 ):
     """Full-sequence attention (train / prefill). Returns (out, (k, v)).
 
     kind: 'global' (full) or 'local' (sliding window cfg.window).
     Causality from cfg.causal (False => encoder, e.g. hubert).
+    masks: the layer's attn mask subtree — routes wq/wk/wv/wo through the
+    Pallas sparse kernels per cfg.sparse.kernel (None => legacy dense path).
     """
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S)
-    q, k, v = _qkv(p, x, cfg)
+    q, k, v = _qkv(p, x, cfg, masks)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
@@ -148,7 +164,7 @@ def attention(
                 )
             )
         o = jnp.concatenate(outs, axis=1)
-    out = linear(p["wo"], o.reshape(B, S, -1))
+    out = linear(p["wo"], o.reshape(B, S, -1), **_linear_kw(cfg, masks, "wo"))
     return out, (k, v)
 
 
@@ -195,15 +211,17 @@ def fill_kv_cache(cache, k, v, start: int = 0):
     return {"k": ck, "v": cv}
 
 
-def attn_decode(p, x_t, cache, pos, cfg, *, kind: str = "global"):
+def attn_decode(p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None):
     """One decode step.  x_t: (B, 1, d); pos: traced scalar (tokens so far).
 
     Windowed caches use ring addressing (softmax is permutation invariant —
     absolute positions are baked into the stored, roped keys).
-    Returns (out (B,1,d), new_cache).
+    Returns (out (B,1,d), new_cache).  With ``masks``, the projections decode
+    through the sparse kernels (serve path: weight-bound, so skipped blocks
+    translate directly to HBM-traffic savings).
     """
     B = x_t.shape[0]
-    q, k, v = _qkv(p, x_t, cfg)
+    q, k, v = _qkv(p, x_t, cfg, masks)
     posv = jnp.full((1,), pos)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
@@ -220,5 +238,5 @@ def attn_decode(p, x_t, cache, pos, cfg, *, kind: str = "global"):
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv).reshape(B, 1, H * hd)
-    out = linear(p["wo"], o)
+    out = linear(p["wo"], o, **_linear_kw(cfg, masks, "wo"))
     return out, {"k": ck, "v": cv}

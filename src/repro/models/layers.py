@@ -73,12 +73,43 @@ def linear_init(
     return {"w": w, "b": P(jnp.zeros((n_out,), dtype), (axes[-1],), False)}
 
 
-def linear(p, x, compute_dtype=None):
+def _block_mask(mask, bk: int, bn: int):
+    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask."""
+    K, N = mask.shape
+    bk, bn = min(bk, K), min(bn, N)
+    return mask.reshape(K // bk, bk, N // bn, bn).any(axis=(1, 3))
+
+
+def linear(p, x, compute_dtype=None, *, mask=None, kernel=None, block=(128, 128, 128)):
     """compute_dtype=None inherits x.dtype (the model's compute dtype flows
-    from the embedding; f32 configs stay f32 end-to-end)."""
+    from the embedding; f32 configs stay f32 end-to-end).
+
+    Kernel dispatch (cfg.sparse.kernel): with ``mask`` given, the matmul is
+    routed to the Pallas sparse kernels instead of materializing w*m in HBM —
+      kernel='masked'        x @ (w⊙m) with the mask fused in-pipeline
+      kernel='block_sparse'  skips inactive (bk x bn) blocks entirely (the
+                             mask must be block-aligned; core.rigl block mode)
+    Both carry custom-VJP Pallas backward kernels, so jax.grad of a dispatched
+    layer stays sparse too.  mask=None or kernel='dense'/None falls back to
+    the jnp reference path (w*m materialized — legacy behaviour).
+    """
     dt = compute_dtype or x.dtype
     w = p["w"].astype(dt)
-    y = x.astype(dt) @ w
+    if mask is not None and kernel in ("masked", "block_sparse"):
+        from ..kernels import block_sparse_linear, masked_linear
+
+        xc = x.astype(dt)
+        if kernel == "masked":
+            y = masked_linear(xc, w, mask, block=block)
+        else:
+            bm, bn, bk = block
+            y = block_sparse_linear(
+                xc, w, _block_mask(mask, bk, bn), block=block
+            )
+    else:
+        if mask is not None:
+            w = w * mask.astype(dt)
+        y = x.astype(dt) @ w
     if "b" in p:
         y = y + p["b"].astype(dt)
     return y

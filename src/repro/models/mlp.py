@@ -1,4 +1,9 @@
-"""Feed-forward blocks: SwiGLU / GeGLU / GELU — all RigL-sparsifiable."""
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU — all RigL-sparsifiable.
+
+When ``masks`` is given (kernel-dispatch mode, cfg.sparse.kernel != 'dense'),
+each linear routes through the Pallas sparse kernels with its mask leaf; the
+masked weights are never materialized in HBM (layers.linear dispatch).
+"""
 from __future__ import annotations
 
 import jax
@@ -11,7 +16,6 @@ __all__ = ["mlp_init", "mlp"]
 
 def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu", *, sparse: bool = True):
     k1, k2, k3 = jax.random.split(key, 3)
-    p = {"kind": None}  # kind is static; stored on config, not params
     p = {}
     if kind in ("swiglu", "geglu"):
         p["wi"] = linear_init(k1, d, d_ff, ("embed", "mlp"), sparse=sparse)
@@ -22,16 +26,21 @@ def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu", *, sparse: bool = Tru
     return p
 
 
-def mlp(p, x, kind: str = "swiglu"):
-    h = linear(p["wi"], x)
+def _m(masks, name):
+    return None if masks is None else masks[name]["w"]
+
+
+def mlp(p, x, kind: str = "swiglu", *, masks=None, kernel=None, block=(128, 128, 128)):
+    kw = dict(kernel=kernel, block=block)
+    h = linear(p["wi"], x, mask=_m(masks, "wi"), **kw)
     if kind == "swiglu":
-        h = jax.nn.silu(linear(p["wg"], x)) * h
+        h = jax.nn.silu(linear(p["wg"], x, mask=_m(masks, "wg"), **kw)) * h
     elif kind == "geglu":
-        h = jax.nn.gelu(linear(p["wg"], x)) * h
+        h = jax.nn.gelu(linear(p["wg"], x, mask=_m(masks, "wg"), **kw)) * h
     elif kind == "gelu":
         h = jax.nn.gelu(h)
     elif kind == "relu":
         h = jax.nn.relu(h)
     else:
         raise ValueError(kind)
-    return linear(p["wo"], h)
+    return linear(p["wo"], h, mask=_m(masks, "wo"), **kw)

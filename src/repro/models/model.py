@@ -9,6 +9,15 @@ Params are nested dicts; ``init_lm`` returns (params, logical_axes, sparse_flags
 is a python list (unrolled at trace time — exact cost_analysis); ``scan_layers``
 switches to a stacked lax.scan for the full-depth memory proof on homogeneous
 stacks.
+
+Sparse-kernel dispatch: ``lm_forward``/``lm_loss``/``lm_prefill``/``lm_decode``
+take an optional ``masks`` pytree mirroring params.  When given, transformer
+attention + MLP linears route through the Pallas sparse kernels selected by
+``cfg.sparse.kernel`` ('masked' fused-mask matmul, 'block_sparse' block
+skipping) with custom-VJP backward kernels — masked weights are never
+materialized in HBM, fwd or bwd.  Non-dispatched sparse submodules
+(ssm/xlstm/moe) fall back to w*m at submodule granularity.  masks=None keeps
+the legacy contract (callers pre-mask via core.apply_masks).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.masks import apply_masks
 from . import attention as A
 from . import ssm as S
 from . import xlstm as X
@@ -124,25 +134,50 @@ def stack_layer_params(layers: list):
 # forward
 # ---------------------------------------------------------------------------
 
-def _block(p, x, cfg, i, *, positions=None):
-    """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux)."""
+def _sub(masks, key):
+    """Mask subtree lookup tolerating masks=None (legacy pre-masked path)."""
+    return None if masks is None else masks[key]
+
+
+def _local_masked(p, masks, key):
+    """Materialize w*m for a NON-dispatched sparse submodule (ssm/xlstm/moe).
+
+    These consume their weights through einsums/scans the kernel dispatch
+    doesn't cover (yet — see ROADMAP open items), so in kernel mode they fall
+    back to the legacy apply_masks semantics at submodule granularity.
+    """
+    return p[key] if masks is None else apply_masks(p[key], masks[key])
+
+
+def _block(p, x, cfg, i, *, positions=None, masks=None):
+    """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux).
+
+    masks: this layer's mask subtree.  None => legacy behaviour (params are
+    already w*m).  Given => attention/mlp linears dispatch to the Pallas
+    sparse kernels (cfg.sparse.kernel) and never materialize masked weights.
+    """
     aux = jnp.float32(0.0)
     if cfg.block_type == "xlstm":
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
         if cfg.is_slstm(i):
-            o, state = X.slstm(p["slstm"], h, cfg)
+            o, state = X.slstm(_local_masked(p, masks, "slstm"), h, cfg)
         else:
-            o, state = X.mlstm(p["mlstm"], h, cfg, chunk=cfg.q_chunk)
+            o, state = X.mlstm(
+                _local_masked(p, masks, "mlstm"), h, cfg, chunk=cfg.q_chunk
+            )
         return x + o, state, aux
 
     kind = cfg.layer_kind(i)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn_out, kv = A.attention(
-        p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk
+        p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk,
+        masks=_sub(masks, "attn"),
     )
     state: Any = kv
     if cfg.block_type == "hymba":
-        ssm_out, ssm_h = S.ssm(p["ssm"], h, cfg, chunk=cfg.q_chunk)
+        ssm_out, ssm_h = S.ssm(
+            _local_masked(p, masks, "ssm"), h, cfg, chunk=cfg.q_chunk
+        )
         attn_out = 0.5 * (
             rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
             + rmsnorm(p["ssm_norm"], ssm_out, cfg.norm_eps)
@@ -159,9 +194,12 @@ def _block(p, x, cfg, i, *, positions=None):
         ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
 
     if cfg.n_experts:
-        ff_out, aux = moe(p["moe"], ff_in, cfg)
+        ff_out, aux = moe(_local_masked(p, masks, "moe"), ff_in, cfg)
     elif cfg.d_ff:
-        ff_out = mlp(p["mlp"], ff_in, cfg.mlp_kind)
+        ff_out = mlp(
+            p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(masks, "mlp"),
+            kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+        )
     else:
         ff_out = 0.0
     if cfg.post_norms and cfg.d_ff:
@@ -222,8 +260,12 @@ def _logits(params, cfg, h):
     return out
 
 
-def lm_forward(params, cfg, batch, *, collect_states: bool = False):
-    """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux)."""
+def lm_forward(params, cfg, batch, *, collect_states: bool = False, masks=None):
+    """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux).
+
+    masks: mask pytree mirroring params (kernel-dispatch mode).  None keeps
+    the legacy contract: callers pass pre-masked effective weights.
+    """
     x = _embed_inputs(params, cfg, batch)
     S_ = x.shape[1]
     positions = jnp.arange(S_)
@@ -231,6 +273,10 @@ def lm_forward(params, cfg, batch, *, collect_states: bool = False):
     states = []
 
     if cfg.scan_layers:
+        assert masks is None, (
+            "scan_layers (dry-run memory proof) does not thread masks; "
+            "pre-mask the stacked params instead"
+        )
         x, states, aux_total = _forward_scanned(params, cfg, x, positions)
     elif cfg.remat and not collect_states:
         # checkpoint REGIONS of remat_group layers (sqrt-style remat): only
@@ -238,30 +284,35 @@ def lm_forward(params, cfg, batch, *, collect_states: bool = False):
         # are not forced live (outputs of a checkpoint are always saved).
         g = max(cfg.remat_group, 1)
         layer_ps = params["layers"]
+        layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
         policy = (
             jax.checkpoint_policies.checkpoint_dots
             if getattr(cfg, "remat_policy", "none") == "dots"
             else None
         )
 
-        def region(i0, ps, x_):
+        def region(i0, ps, ms, x_):
             aux_ = jnp.float32(0.0)
-            for j, p in enumerate(ps):
-                x_, _, a = _block(p, x_, cfg, i0 + j, positions=positions)
+            for j, (p, m) in enumerate(zip(ps, ms)):
+                x_, _, a = _block(
+                    p, x_, cfg, i0 + j, positions=positions, masks=m
+                )
                 aux_ = aux_ + a
             return x_, aux_
 
         for i0 in range(0, cfg.n_layers, g):
             ps = layer_ps[i0 : i0 + g]
+            ms = layer_ms[i0 : i0 + g]
             x = _sp_constraint(x, cfg)
             x, aux = jax.checkpoint(
                 functools.partial(region, i0), policy=policy
-            )(ps, x)
+            )(ps, ms, x)
             aux_total = aux_total + aux
     else:
+        layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
         for i, p in enumerate(params["layers"]):
             x = _sp_constraint(x, cfg)
-            x, st, aux = _block(p, x, cfg, i, positions=positions)
+            x, st, aux = _block(p, x, cfg, i, positions=positions, masks=layer_ms[i])
             aux_total = aux_total + aux
             if collect_states:
                 states.append(st)
@@ -287,9 +338,15 @@ def _forward_scanned(params, cfg, x, positions):
     return x, [], aux
 
 
-def lm_loss(params, cfg, batch):
-    """Mean next-token xent (chunked over seq to bound the logits buffer)."""
-    h, _, aux = lm_forward(params, cfg, batch)
+def lm_loss(params, cfg, batch, masks=None):
+    """Mean next-token xent (chunked over seq to bound the logits buffer).
+
+    masks != None => kernel-dispatch mode: params are RAW (unmasked) and the
+    sparse topology is enforced inside the matmul kernels; jax.grad of this
+    w.r.t. params then yields the paper's SPARSE gradient directly (the
+    custom-VJP wgrad kernels fuse the g⊙m product).
+    """
+    h, _, aux = lm_forward(params, cfg, batch, masks=masks)
     targets = batch["targets"]
     # frontend==patch: loss only over the text positions (last T slots)
     if cfg.frontend == "patch":
@@ -332,13 +389,14 @@ def init_caches(cfg, batch: int, max_len: int):
     return caches
 
 
-def lm_prefill(params, cfg, batch, max_len: int):
+def lm_prefill(params, cfg, batch, max_len: int, *, masks=None):
     """Run the prompt, return (last-position logits, filled caches)."""
     assert cfg.causal, "prefill/decode undefined for encoder-only models"
-    h, states, _ = lm_forward(params, cfg, batch, collect_states=True)
+    h, states, _ = lm_forward(params, cfg, batch, collect_states=True, masks=masks)
     B = h.shape[0]
     S_ = h.shape[1]
     caches = init_caches(cfg, B, max_len)
+    layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
     for i, st in enumerate(states):
         if cfg.block_type == "xlstm":
             key = "slstm" if cfg.is_slstm(i) else "mlstm"
@@ -348,7 +406,8 @@ def lm_prefill(params, cfg, batch, max_len: int):
             kv, ssm_h, pre = st
             caches[i]["ssm"]["h"] = ssm_h
             # conv state: last 3 *pre-conv* inner activations
-            u_raw = linear(params["layers"][i]["ssm"]["in_proj"], pre)[
+            ssm_p = _local_masked(params["layers"][i], layer_ms[i], "ssm")
+            u_raw = linear(ssm_p["in_proj"], pre)[
                 ..., : cfg.ssm_d_inner
             ]
             caches[i]["ssm"]["conv"] = u_raw[:, -3:, :].astype(
@@ -362,31 +421,44 @@ def lm_prefill(params, cfg, batch, max_len: int):
     return logits, caches
 
 
-def lm_decode(params, cfg, caches, tokens, pos):
+def lm_decode(params, cfg, caches, tokens, pos, *, masks=None):
     """One decode step. tokens: (B, 1) int32; pos: traced scalar.
 
-    Returns (logits (B,1,V), new caches).
+    Returns (logits (B,1,V), new caches).  With ``masks``, projections and
+    MLPs decode through the Pallas sparse kernels (cfg.sparse.kernel) — the
+    serve path is weight-bound, so block skipping cuts HBM traffic by the
+    block density directly.
     """
     assert cfg.causal
     x = _embed_inputs(params, cfg, {"tokens": tokens})
     new_caches = []
+    layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
     for i, p in enumerate(params["layers"]):
+        m = layer_ms[i]
         c = dict(caches[i])
         if cfg.block_type == "xlstm":
             h = rmsnorm(p["ln1"], x, cfg.norm_eps)
             if cfg.is_slstm(i):
-                o, c["slstm"] = X.slstm_decode(p["slstm"], h, c["slstm"], cfg)
+                o, c["slstm"] = X.slstm_decode(
+                    _local_masked(p, m, "slstm"), h, c["slstm"], cfg
+                )
             else:
-                o, c["mlstm"] = X.mlstm_decode(p["mlstm"], h, c["mlstm"], cfg)
+                o, c["mlstm"] = X.mlstm_decode(
+                    _local_masked(p, m, "mlstm"), h, c["mlstm"], cfg
+                )
             x = x + o
             new_caches.append(c)
             continue
 
         kind = cfg.layer_kind(i)
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
-        attn_out, c["kv"] = A.attn_decode(p["attn"], h, c["kv"], pos, cfg, kind=kind)
+        attn_out, c["kv"] = A.attn_decode(
+            p["attn"], h, c["kv"], pos, cfg, kind=kind, masks=_sub(m, "attn")
+        )
         if cfg.block_type == "hymba":
-            ssm_out, c["ssm"] = S.ssm_decode(p["ssm"], h, c["ssm"], cfg)
+            ssm_out, c["ssm"] = S.ssm_decode(
+                _local_masked(p, m, "ssm"), h, c["ssm"], cfg
+            )
             attn_out = 0.5 * (
                 rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
                 + rmsnorm(p["ssm_norm"], ssm_out, cfg.norm_eps)
@@ -399,9 +471,12 @@ def lm_decode(params, cfg, caches, tokens, pos):
             x = x + attn_out
             ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
         if cfg.n_experts:
-            ff_out, _ = moe(p["moe"], ff_in, cfg)
+            ff_out, _ = moe(_local_masked(p, m, "moe"), ff_in, cfg)
         elif cfg.d_ff:
-            ff_out = mlp(p["mlp"], ff_in, cfg.mlp_kind)
+            ff_out = mlp(
+                p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(m, "mlp"),
+                kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+            )
         else:
             ff_out = 0.0
         if cfg.post_norms and cfg.d_ff:

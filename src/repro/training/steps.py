@@ -13,11 +13,20 @@ Two compiled functions (paper Appendix H cost structure):
                 drop/grow (core.rigl), zero-init grown weights, reset their
                 optimizer state.  Per Algorithm 1 the update step does NOT
                 also take an optimizer step.
+
+Kernel dispatch (cfg.sparse.kernel != 'dense'): train_step switches to the
+Pallas sparse kernels — raw params + mask threading, no apply_masks, sparse
+fwd AND bwd (kernels/).  rigl_step intentionally KEEPS the dense backward:
+RigL's grow step scores inactive connections by |dense gradient|, which only
+the dense path produces, and its cost is amortized over delta_t >= 100 steps
+(paper Appendix H).  The two compiled functions thus realize the paper's cost
+split exactly: sparse every step, dense only at topology updates.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import Any, Callable, Optional
 
 import jax
@@ -99,7 +108,32 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
         )
     else:
         smap = sparsity_map(cfg, params, sparse_flags)
-        masks = init_masks(k2, params, smap)
+        if sp.kernel == "block_sparse":
+            from ..configs.base import validate_sparse_kernel
+
+            validate_sparse_kernel(sp)  # clean error when block_shape unset
+            # static shape check: random_block_mask silently falls back to
+            # elementwise masks on non-divisible layers, which the block
+            # kernel would execute WRONGLY (whole blocks run unmasked) —
+            # fail loudly instead of training a corrupted topology.
+            bs = sp.block_shape
+            flat_p = tree_paths(params)
+            bad = [
+                name
+                for name in smap
+                if len(flat_p[name].shape) != 2
+                or flat_p[name].shape[0] % bs[0]
+                or flat_p[name].shape[1] % bs[1]
+            ]
+            if bad:
+                raise ValueError(
+                    f"sparse.kernel='block_sparse' with block_shape={bs} "
+                    f"does not tile these sparsifiable layers: {bad}; "
+                    "choose a block edge dividing every layer dim"
+                )
+        # block-aligned init when block mode is on, so the topology is
+        # executable by the block-sparse kernel from the very first step
+        masks = init_masks(k2, params, smap, block_shape=sp.block_shape)
         # zero-out masked weights at init so nnz(w) matches the mask
         params = apply_masks(params, masks)
     state = {
@@ -122,13 +156,47 @@ def make_train_step(
     loss_fn: Callable | None = None,
     snfs_momentum: float = 0.9,
 ):
-    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
+    """Build the hot-path step.
+
+    With ``cfg.sparse.kernel`` in {'masked', 'block_sparse'} the step runs in
+    KERNEL-DISPATCH mode: the loss is computed on RAW params with the mask
+    pytree threaded into the model, every dispatched matmul (fwd and bwd)
+    executes through the Pallas sparse kernels, and ``apply_masks`` is never
+    called — the masked weight copy w⊙m is never materialized in HBM.  The
+    gradient that comes back is already the paper's sparse gradient (the
+    custom-VJP wgrad kernels fuse g⊙m), so the optimizer path is unchanged.
+
+    SNFS needs the DENSE gradient every step for its momentum buffer, which
+    the sparse backward (by design) never computes — it is rejected here;
+    RigL's dense grow-scores are unaffected because make_rigl_step keeps the
+    dense backward on the amortized (every delta_t) update step.
+    """
+    dispatch = cfg.sparse.kernel not in (None, "dense")
+    if dispatch:
+        from ..configs.base import validate_sparse_kernel
+
+        validate_sparse_kernel(cfg.sparse)
+        if cfg.sparse.method == "snfs":
+            raise ValueError(
+                "snfs tracks dense-gradient momentum every step; the sparse "
+                "backward kernels never compute it — use sparse.kernel='dense'"
+            )
+    if loss_fn is None:
+        loss_fn = lambda p, b, masks=None: lm_loss(p, cfg, b, masks=masks)
+    elif dispatch and "masks" not in inspect.signature(loss_fn).parameters:
+        raise ValueError(
+            "kernel dispatch needs a loss_fn accepting masks= (raw params + "
+            "mask threading); got one without it"
+        )
     mb = max(getattr(cfg, "microbatches", 1), 1)
     acc_dt = jnp.bfloat16 if getattr(cfg, "grad_accum_dtype", "") == "bfloat16" else jnp.float32
 
-    def _grads(w_eff, batch):
+    def _grads(w_eff, batch, masks=None):
+        loss_fn_ = loss_fn if masks is None else (
+            lambda p, b: loss_fn(p, b, masks=masks)
+        )
         if mb == 1:
-            return jax.value_and_grad(loss_fn)(w_eff, batch)
+            return jax.value_and_grad(loss_fn_)(w_eff, batch)
         # gradient accumulation: one microbatch's activations live at a time
         bsz = jax.tree_util.tree_leaves(batch)[0].shape[0] // mb
         init = (
@@ -138,7 +206,7 @@ def make_train_step(
 
         def acc(carry, sub):
             loss_acc, g_acc = carry
-            li, gi = jax.value_and_grad(loss_fn)(w_eff, sub)
+            li, gi = jax.value_and_grad(loss_fn_)(w_eff, sub)
             g_acc = jax.tree_util.tree_map(
                 lambda a, g: a + g.astype(acc_dt), g_acc, gi
             )
@@ -166,22 +234,47 @@ def make_train_step(
         return loss_acc * inv, jax.tree_util.tree_map(lambda g: g * inv, g_acc)
 
     def train_step(state, batch):
-        w_eff = apply_masks(state["params"], state["masks"])
+        # KERNEL DISPATCH: raw params + mask threading; no apply_masks — w⊙m
+        # lives only inside the kernels' VMEM pipelines and the returned
+        # gradient is already masked (custom-VJP wgrad).  Legacy: pre-masked
+        # effective weights, dense XLA matmuls.
+        src = (
+            state["params"]
+            if dispatch
+            else apply_masks(state["params"], state["masks"])
+        )
         if getattr(cfg, "bf16_grads", False):
             # single downcast => bf16 cotangents => bf16 DP grad all-reduce
-            w_eff = jax.tree_util.tree_map(
+            src = jax.tree_util.tree_map(
                 lambda w: w.astype(jnp.bfloat16)
                 if w.dtype == jnp.float32
                 else w,
-                w_eff,
+                src,
             )
-        loss, g_dense = _grads(w_eff, batch)
+        loss, g_dense = _grads(
+            src, batch, masks=state["masks"] if dispatch else None
+        )
         g_sparse = dense_to_sparse_grad(g_dense, state["masks"])
-        # weight decay on ACTIVE weights only (inactive must stay untouched)
+        # weight decay on ACTIVE weights only (inactive must stay untouched).
+        # In dispatch mode src is RAW, so decay through the mask: m is bool,
+        # the product w*m here is a grad-sized elementwise op, not a second
+        # resident weight copy.
         if opt_cfg.weight_decay:
-            g_sparse = jax.tree_util.tree_map(
-                lambda g, w: g + opt_cfg.weight_decay * w.astype(g.dtype), g_sparse, w_eff
-            )
+            wd = opt_cfg.weight_decay
+
+            def _decay(g, w, m):
+                w_act = w if m is None else w * m.astype(w.dtype)
+                return g + wd * w_act.astype(g.dtype)
+
+            if dispatch:
+                g_sparse = jax.tree_util.tree_map(
+                    _decay, g_sparse, src, state["masks"],
+                    is_leaf=lambda x: x is None,
+                )
+            else:
+                g_sparse = jax.tree_util.tree_map(
+                    lambda g, w: g + wd * w.astype(g.dtype), g_sparse, src
+                )
         lr = lr_sched(state["step"])
         opt_nowd = dataclasses.replace(opt_cfg, weight_decay=0.0)
         new_params, new_opt = apply_opt(
@@ -211,6 +304,10 @@ def make_train_step(
 
 
 def make_rigl_step(cfg, algo: SparseAlgo, lr_sched: LRSchedule, *, loss_fn=None):
+    """Topology-update step.  Always uses the DENSE backward (apply_masks +
+    XLA matmuls) regardless of cfg.sparse.kernel: grow needs |dense grad| at
+    inactive coordinates, which the sparse kernels never compute.  Runs every
+    delta_t >= 100 steps, so the dense cost is amortized (Appendix H)."""
     loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
 
     def rigl_step(state, batch):

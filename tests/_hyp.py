@@ -1,0 +1,62 @@
+"""Optional-hypothesis shim.
+
+CI images do not always ship ``hypothesis``.  When it is installed we re-export
+the real ``given``/``settings``/``st``; when it is missing, property tests fall
+back to a deterministic sweep of pseudo-random draws (seeded ``random.Random``)
+so the invariants are still exercised — just with fewer, fixed examples.
+
+``tests/test_distributions.py`` instead skips outright via
+``pytest.importorskip`` (its strategies are richer than this shim covers).
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - depends on the environment
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _N_FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, lo, hi, is_int):
+            self.lo, self.hi, self.is_int = lo, hi, is_int
+
+        def draw(self, rng: random.Random):
+            if self.is_int:
+                return rng.randint(self.lo, self.hi)
+            return rng.uniform(self.lo, self.hi)
+
+    class st:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(min_value, max_value, True)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(min_value, max_value, False)
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(_N_FALLBACK_EXAMPLES):
+                    f(*(s.draw(rng) for s in strategies))
+
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original (parametrized) signature and demand
+            # fixtures for the strategy arguments.
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

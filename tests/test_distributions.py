@@ -1,6 +1,12 @@
-"""Sparsity distribution tests: paper semantics + hypothesis invariants."""
+"""Sparsity distribution tests: paper semantics + hypothesis invariants.
+
+Requires ``hypothesis`` (pinned in requirements-dev.txt); the whole module is
+skipped when it is absent so a bare CI image still collects the suite.
+"""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distributions import (

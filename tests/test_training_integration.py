@@ -138,3 +138,113 @@ def test_snfs_tracks_dense_momentum():
         for x in jax.tree_util.tree_leaves(state["dense_mom"])
     )
     assert mom_nonzero
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel-dispatch mode (cfg.sparse.kernel != 'dense')
+# ---------------------------------------------------------------------------
+
+def _kernel_cfg(kernel, arch="h2o-danube-1.8b", block=16, sparsity=0.8):
+    cfg = get_config(arch, smoke=True)
+    sp = dict(sparsity=sparsity, method="rigl", delta_t=10, alpha=0.3, kernel=kernel)
+    if kernel == "block_sparse":
+        sp["block_shape"] = (block, block)
+        sp["kernel_block"] = (128, block, block)
+    else:
+        sp["kernel_block"] = (128, 32, 32)
+    return dataclasses.replace(cfg, sparse=SparseConfig(**sp))
+
+
+def test_block_sparse_kernel_trains_end_to_end(monkeypatch):
+    """50 steps through make_train_step with kernel='block_sparse': loss must
+    decrease, nnz must be preserved, masks must stay block-aligned, and
+    apply_masks must NEVER run on the dispatched hot path (the masked weight
+    copy is never materialized)."""
+    import repro.models.model as model_mod
+    import repro.training.steps as steps_mod
+
+    cfg = _kernel_cfg("block_sparse")
+    opt = OptConfig(kind="adam", weight_decay=0.0, grad_clip=1.0)
+    steps = 50
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=10, total_steps=steps)
+    algo = make_algo(cfg, steps)
+    state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    nnz0 = mask_stats(state["masks"])["nnz"]
+
+    calls = {"n": 0}
+    real_apply = steps_mod.apply_masks
+
+    def spy(params, masks):
+        calls["n"] += 1
+        return real_apply(params, masks)
+
+    monkeypatch.setattr(steps_mod, "apply_masks", spy)
+    monkeypatch.setattr(model_mod, "apply_masks", spy)
+
+    train = jax.jit(make_train_step(cfg, opt, lr))
+    rigl = jax.jit(make_rigl_step(cfg, algo, lr))
+    losses = []
+    for t in range(steps):
+        b = batch_for(cfg, t, 4, 32, learnable=True)
+        if t > 0 and t % 10 == 0 and t < algo.schedule.t_end:
+            state, m = rigl(state, b)  # dense backward, amortized — MAY apply
+        else:
+            n_before = calls["n"]
+            state, m = train(state, b)
+            assert calls["n"] == n_before, (
+                "train_step materialized w*m despite kernel dispatch"
+            )
+        losses.append(float(m["loss"]))
+
+    assert losses[-1] < losses[0] * 0.7, "block_sparse kernel failed to learn"
+    st = mask_stats(state["masks"])
+    assert st["nnz"] == nnz0, "topology updates must preserve nnz"
+    # every mask still block-aligned (executable by the block kernel)
+    for name, mk in tree_paths(state["masks"]).items():
+        if mk is None:
+            continue
+        K, N = mk.shape
+        per = np.asarray(mk).reshape(K // 16, 16, N // 16, 16).sum(axis=(1, 3))
+        assert set(np.unique(per)) <= {0, 16 * 16}, name
+
+
+def test_masked_kernel_grads_match_legacy_path():
+    """Dispatched loss/grads (raw params + masks) == legacy apply_masks path."""
+    from repro.models import lm_loss
+
+    cfg = dataclasses.replace(_kernel_cfg("masked"), dtype="float32")
+    state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+    batch = batch_for(cfg, 0, 4, 32, learnable=True)
+
+    l_disp, g_disp = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, batch, masks=state["masks"])
+    )(state["params"])
+    l_leg, g_leg = jax.value_and_grad(
+        lambda p: lm_loss(apply_masks(p, state["masks"]), cfg, batch)
+    )(state["params"])
+    np.testing.assert_allclose(float(l_disp), float(l_leg), rtol=1e-4)
+    fd, fl = tree_paths(g_disp), tree_paths(g_leg)
+    for name in fd:
+        np.testing.assert_allclose(
+            np.asarray(fd[name]), np.asarray(fl[name]),
+            rtol=1e-3, atol=2e-4, err_msg=name,
+        )
+
+
+def test_snfs_rejected_under_kernel_dispatch():
+    cfg = _kernel_cfg("masked")
+    cfg = dataclasses.replace(
+        cfg, sparse=dataclasses.replace(cfg.sparse, method="snfs")
+    )
+    with pytest.raises(ValueError, match="snfs"):
+        make_train_step(cfg, OptConfig(), LRSchedule(total_steps=10))
+
+
+def test_block_sparse_requires_matching_block_shape():
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg,
+        sparse=SparseConfig(kernel="block_sparse", block_shape=None),
+    )
+    with pytest.raises(ValueError, match="block-aligned"):
+        make_train_step(cfg, OptConfig(), LRSchedule(total_steps=10))
