@@ -1,0 +1,18 @@
+# Repro verification / tooling entry points.  `make verify` is the gate:
+# tier-1 tests (ROADMAP.md) + the doc-link check (README/docs must not rot).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test docs-check bench-kernels
+
+verify: test docs-check
+
+test:
+	$(PY) -m pytest -x -q
+
+docs-check:
+	$(PY) scripts/check_doc_links.py
+
+bench-kernels:
+	$(PY) -m benchmarks.kernel_bench

@@ -73,6 +73,50 @@ def _masked_traffic(M, K, N):
     }
 
 
+def _tight_vs_padded_rows(key):
+    """BENCH rows for host-packed (tight) vs traced-width (padded) grids."""
+    from repro.kernels.block_sparse_matmul import pack_block_mask
+
+    M, K, N, bk, bn = 128, 1024, 512, 128, 128
+    nkb = K // bk
+    x = jax.random.normal(jax.random.fold_in(key, 7), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 8), (K, N), jnp.float32)
+    rows = []
+    for sparsity in (0.8, 0.9, 0.95):
+        bm = np.array(  # owning copy: the fixup below writes into it
+            jax.random.uniform(jax.random.fold_in(key, int(100 * sparsity)),
+                               (nkb, N // bn)) < (1 - sparsity)
+        )
+        if bm.sum() == 0:  # degenerate draw: keep one block active
+            bm[0, 0] = True
+        tight = pack_block_mask(bm)  # width = true max count per column
+        padded = pack_block_mask(bm, max_count=nkb)  # traced worst case
+        f_tight = lambda a, b: block_sparse_linear(
+            a, b, block=(128, bn, bk), pack=tight, interpret=True
+        )
+        f_padded = lambda a, b: block_sparse_linear(
+            a, b, block=(128, bn, bk), pack=padded, interpret=True
+        )
+        t_tight = _time(f_tight, x, w, iters=3)
+        t_padded = _time(f_padded, x, w, iters=3)
+        width = int(tight[0].shape[1])
+        rows.append({
+            "name": f"kernel/block_sparse_tight_vs_padded_s{sparsity}",
+            "us_per_call": t_tight,
+            "derived": {
+                "us_per_call_padded": t_padded,
+                "grid_iters_tight": (M // 128) * (N // bn) * width,
+                "grid_iters_padded": (M // 128) * (N // bn) * nkb,
+                "grid_fraction": round(width / nkb, 3),
+                "active_blocks": int(bm.sum()),
+                "bit_identical": bool(
+                    jnp.array_equal(f_tight(x, w), f_padded(x, w))
+                ),
+            },
+        })
+    return rows
+
+
 def run(quick=True):
     M = K = N = 1024
     key = jax.random.PRNGKey(0)
@@ -142,6 +186,14 @@ def run(quick=True):
                 "tpu_speedup_bound_fwd_bwd": round(1 / max(d, 1e-3), 2),
             },
         })
+    # tight vs padded grids (PackState, core/pack.py) at serving sparsities:
+    # same kernel, same topology — only the grid's third dim differs (the
+    # host-packed true max active-block count vs the traced worst case K/bk).
+    # Interpret mode executes one python kernel body per grid cell, so the
+    # wall-time RATIO here directly tracks the launched-iteration ratio; on
+    # TPU the padded slots are empty iterations (no DMA/FLOPs), so the win is
+    # launch overhead, not bandwidth — outputs are bit-identical either way.
+    rows.extend(_tight_vs_padded_rows(key))
     # interpret-mode correctness canaries for the Pallas path itself (cheap
     # shapes — wall time here is NOT meaningful, only parity is)
     xs = jax.random.normal(key, (128, 256), jnp.float32)

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Doc-link check: every file referenced from README.md / docs/*.md exists.
+
+Catches the classic docs-rot failure where a refactor moves or deletes a file
+that the docs still point at.  Two kinds of references are checked:
+
+  * markdown links ``[text](path)`` with a relative, non-URL target
+    (resolved against the file containing the link; ``#anchors`` stripped);
+  * backticked repo paths like ``src/repro/core/pack.py`` or ``tests/``.
+
+Exits nonzero listing every missing target.  Run via ``make docs-check`` or
+as part of ``make verify``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# directory-qualified paths are root-relative; bare names are only treated as
+# root files for doc-ish extensions (`ref.py` etc. are module mentions)
+CODE_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs|scripts)/[A-Za-z0-9_./-]*"
+    r"|[A-Za-z0-9_.-]+\.(?:md|json|txt))`"
+)
+
+
+def doc_files():
+    yield from sorted(ROOT.glob("*.md"))
+    yield from sorted(ROOT.glob("docs/*.md"))
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    text = md.read_text()
+    missing = []
+    for target in MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (md.parent / rel).resolve()
+        if not resolved.exists():
+            missing.append(f"{md.relative_to(ROOT)}: link target {target!r}")
+    for target in CODE_PATH.findall(text):
+        # backticked paths are repo-root relative by convention
+        if not (ROOT / target).exists():
+            missing.append(f"{md.relative_to(ROOT)}: code path `{target}`")
+    return missing
+
+
+def main() -> int:
+    missing = []
+    n = 0
+    for md in doc_files():
+        n += 1
+        missing.extend(check_file(md))
+    if missing:
+        print(f"doc-link check FAILED ({len(missing)} missing targets):")
+        for m in missing:
+            print(f"  {m}")
+        return 1
+    print(f"doc-link check OK ({n} markdown files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

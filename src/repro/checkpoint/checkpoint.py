@@ -133,7 +133,16 @@ def restore(like, ckpt_dir, *, step: Optional[int] = None, shardings=None):
         if leaf is None:
             leaves.append(None)
             continue
-        arr = arrays[name]
+        arr = arrays.get(name)
+        if arr is None:
+            if name.startswith("pack/"):
+                # pre-PackState checkpoint: the pack is derived state
+                # (rebuildable from the masks), so fall back to the template
+                # leaf — callers MUST refresh_pack() after restoring so it
+                # matches the restored masks (launch/train.py does).
+                arr = leaf
+            else:
+                raise KeyError(f"checkpoint {d} is missing leaf {name!r}")
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:

@@ -20,7 +20,54 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class SparseConfig:
-    """RigL settings attached to a model config."""
+    """RigL settings attached to a model config (paper §3 + TPU execution).
+
+    Topology / schedule (paper Algorithm 1):
+      sparsity         target overall sparsity S in [0, 1) of the
+                       sparsifiable weights (1 - density).
+      distribution     how S is distributed across layers: 'uniform', 'er'
+                       (Erdos-Renyi) or 'erk' (ER-kernel, paper default).
+      method           'rigl' (grow by |dense grad|), 'set' (random grow),
+                       'snfs' (grow by |dense momentum|; incompatible with
+                       sparse kernels — needs a dense backward every step),
+                       'static' (fixed topology).  The drivers also accept
+                       'snip' and 'pruning' via their own code paths.
+      delta_t          steps between topology updates (drop/grow cadence);
+                       also the amortization window for every host-side
+                       topology cost (dense backward, PackState repack).
+      alpha            initial drop/grow fraction, cosine-annealed to 0.
+      t_end_fraction   updates stop after this fraction of total steps.
+      grow_init        init for grown connections: 'zeros' (paper default,
+                       function-preserving), 'random', or 'gradient'.
+      block_shape      (bk, bn) or None.  When set, drop/grow scores are
+                       L1-pooled over aligned weight blocks (core/rigl.py), so
+                       every mask stays block-aligned — REQUIRED for
+                       kernel='block_sparse', where it must equal the kernel's
+                       (bk, bn) tiles (validate_sparse_kernel enforces this).
+
+    Execution path for sparsifiable matmuls (models/layers.py dispatch; the
+    full path is documented in docs/kernels.md):
+      kernel           'dense'        x @ (w*m); XLA materializes w*m in HBM
+                                      (reference semantics, no Pallas).
+                       'masked'       Pallas fused-mask matmul: any mask
+                                      pattern; w*m only ever exists tile-wise
+                                      in VMEM.
+                       'block_sparse' Pallas block-skipping matmul: inactive
+                                      (bk x bn) blocks are skipped entirely —
+                                      HBM traffic and MXU work scale with
+                                      block density in fwd AND bwd.  The
+                                      train/serve state then carries a
+                                      PackState (core/pack.py) so kernel
+                                      grids are sized to the true
+                                      active-block count (tight grids).
+                       Both Pallas paths carry custom-VJP backward kernels
+                       (kernels/masked_matmul.py, block_sparse_matmul.py).
+      kernel_block     (bm, bn, bk) Pallas tile sizes: bm rows of the
+                       flattened batch*seq dim, bn output columns, bk
+                       contraction rows.  128-aligned tiles target TPU v5e;
+                       for kernel='block_sparse', (bk, bn) doubles as the
+                       weight-block granularity and must match block_shape.
+    """
 
     sparsity: float = 0.8
     distribution: str = "erk"  # uniform | er | erk
@@ -30,13 +77,6 @@ class SparseConfig:
     t_end_fraction: float = 0.75
     grow_init: str = "zeros"
     block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
-    # Execution path for sparsifiable matmuls (models/layers.py dispatch):
-    #   dense        — x @ (w*m), XLA materializes w*m in HBM (reference)
-    #   masked       — Pallas fused-mask kernel, any mask pattern
-    #   block_sparse — Pallas block-skipping kernel; REQUIRES block-aligned
-    #                  masks, i.e. block_shape == (kernel_block bk, bn)
-    # Both Pallas paths carry custom-VJP backward kernels, so the train step's
-    # fwd AND bwd run sparse (kernels/masked_matmul.py, block_sparse_matmul.py).
     kernel: str = "dense"
     kernel_block: tuple[int, int, int] = (128, 128, 128)  # (bm, bn, bk) tiles
 

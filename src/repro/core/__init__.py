@@ -6,7 +6,21 @@ from .distributions import (  # noqa: F401
     sparsity_overall,
     uniform_distribution,
 )
-from .masks import apply_masks, init_masks, mask_stats, nnz, random_mask, tree_paths  # noqa: F401
+from .masks import (  # noqa: F401
+    apply_masks,
+    block_mask_of,
+    init_masks,
+    mask_stats,
+    nnz,
+    random_mask,
+    tree_paths,
+)
+from .pack import (  # noqa: F401
+    build_pack_state,
+    pack_mismatch,
+    pack_stats,
+    refresh_pack_state,
+)
 from .pruning import PruningSchedule, prune_step, snip_masks  # noqa: F401
 from .rigl import SparseAlgo, dense_to_sparse_grad, rigl_update, rigl_update_layer  # noqa: F401
 from .schedules import UpdateSchedule, cosine_decay  # noqa: F401

@@ -18,6 +18,7 @@ __all__ = [
     "tree_paths",
     "random_mask",
     "random_block_mask",
+    "block_mask_of",
     "init_masks",
     "apply_masks",
     "mask_stats",
@@ -73,6 +74,20 @@ def random_block_mask(key, shape, sparsity: float, block_shape, dtype=jnp.bool_)
     return (
         jnp.repeat(jnp.repeat(blk, bm_, axis=0), bn_, axis=1).astype(dtype)
     )
+
+
+def block_mask_of(mask, block_shape):
+    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask.
+
+    A block is active iff ANY of its elements is active.  Works on both numpy
+    (host-side PackState builds, core/pack.py) and jnp (traced consistency
+    checks) arrays, returning the same kind.  block_shape is (bk, bn) — the
+    kernel's (K-tile, N-tile), i.e. ``cfg.sparse.block_shape``.
+    """
+    bk, bn = block_shape
+    K, N = mask.shape
+    assert K % bk == 0 and N % bn == 0, (mask.shape, block_shape)
+    return mask.reshape(K // bk, bk, N // bn, bn).any(axis=(1, 3))
 
 
 def init_masks(key, params, sparsities: Mapping[str, float], block_shape=None):

@@ -1,0 +1,237 @@
+"""PackState — host-packed block topology carried in train/serve state.
+
+The block-sparse kernels (kernels/block_sparse_matmul.py) are driven by a CSC
+packing of the block-activity mask: per N-block column, the ids of its active
+K-blocks (``idx (N/bn, width) int32``) and how many are real (``cnt (N/bn,)``).
+The kernel grid's third dimension is ``width`` — every padded slot is a
+launched-but-skipped grid iteration.  Inside jit the mask is a tracer, so the
+trace-safe pack must pad ``width`` to the STATIC worst case (K/bk), which makes
+every grid as expensive (in iterations) as a dense one.
+
+PackState fixes that: the packing is computed HOST-SIDE (numpy, tight width)
+from the concrete masks, stored in the train/serve state as a pytree mirroring
+the mask tree, and threaded through the model into
+``ops.block_sparse_linear(pack=...)``.  Both the train step and prefill/decode
+then launch grids sized to the true active-block count.  RigL only changes the
+topology every ``delta_t`` steps, so the pack is refreshed exactly there —
+the host repack is amortized over >= delta_t matmuls (paper Appendix H
+cost-structure argument, applied to grid shape instead of gradient cost).
+
+Lifecycle (documented end-to-end in docs/kernels.md):
+
+  init      training/steps.py::init_train_state builds ``state["pack"]`` when
+            cfg.sparse.kernel == 'block_sparse'
+  train     training/steps.py::make_train_step threads state["pack"] into the
+            loss (models/model.py -> layers.linear -> ops.block_sparse_linear)
+  update    launch/train.py refreshes the pack right after every rigl_step —
+            a rigl_step WITHOUT a refresh leaves the pack stale, which the
+            ``pack_stale`` train-step metric (pack_mismatch below) surfaces
+  ckpt      the pack is ordinary int32 leaves in the state pytree, so
+            checkpoint/ persists and restores it with everything else
+  serve     launch/serve.py threads the serve state's pack (built by
+            init_train_state, or restored with a checkpoint) into every
+            prefill/decode call — packed once per topology, reused per token
+
+Entry layout (one per packable mask leaf, ``None`` elsewhere):
+
+  {"idx":  (N/bn, width) int32,   # active K-block ids per N-block, CSC —
+   "cnt":  (N/bn,) int32,         #   drives the fwd and wgrad kernel grids
+   "ridx": (K/bk, row_width) i32, # active N-block ids per K-block, CSR —
+   "rcnt": (K/bk,) int32,         #   drives the custom-VJP dgrad grid
+   "nnz":  () int32,              # total active blocks (bookkeeping/bench)
+   "nkb":  () int32}              # K/bk — the CSC padded worst-case width
+
+Width policy: ``width = max_j cnt[j]`` (tight; same for ``row_width`` over
+``rcnt``), but never below the width of ``prev`` when refreshing — widths only
+ever grow within a run, so jit retraces on topology updates are bounded by the
+drift toward the worst case instead of happening on every shrink/grow wiggle.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .masks import block_mask_of, path_name
+
+__all__ = [
+    "build_pack_state",
+    "refresh_pack_state",
+    "pack_entry",
+    "pack_mismatch",
+    "pack_stats",
+    "is_pack_entry",
+]
+
+
+def is_pack_entry(x) -> bool:
+    """Leaf predicate for pack pytrees (an entry dict or a None leaf)."""
+    return x is None or (isinstance(x, dict) and "idx" in x and "cnt" in x)
+
+
+# Only these param subtrees are dispatched through layers.linear and consume
+# packs (models/model.py); ssm/xlstm/moe fall back to w*m at submodule
+# granularity (_local_masked) where an all-zero layer is well-defined, so
+# packing them would both waste host/checkpoint space and mis-fire the
+# dead-layer error below.  Extend when more submodules join kernel dispatch
+# (ROADMAP "Dispatch coverage").
+DISPATCHED_SUBTREES = ("attn", "mlp")
+
+
+def _dispatched(name: str) -> bool:
+    return any(part in DISPATCHED_SUBTREES for part in name.split("/"))
+
+
+def _packable(m, block_shape) -> bool:
+    bk, bn = block_shape
+    return (
+        m is not None
+        and m.ndim == 2
+        and m.shape[0] % bk == 0
+        and m.shape[1] % bn == 0
+    )
+
+
+def pack_entry(
+    mask, block_shape, *, min_width: int = 0, min_row_width: int = 0,
+    name: str = "?",
+):
+    """Host-pack ONE mask leaf into a PackState entry (CSC + CSR views).
+
+    Raises loudly (rather than packing an all-zero topology) when the layer
+    has no active blocks at all: the block-sparse forward would silently
+    output zeros for the whole layer, which is never what a sparsity
+    distribution intends — see docs/kernels.md#empty-columns-and-dead-layers.
+    Individual all-zero COLUMNS are fine (the kernel writes zeros for them).
+    """
+    from ..kernels.block_sparse_matmul import (
+        pack_block_mask,
+        pack_block_mask_rows,
+    )
+
+    bm = np.asarray(block_mask_of(np.asarray(mask, bool), block_shape))
+    nkb, nnb = bm.shape
+    total = int(bm.sum())
+    if total == 0:
+        raise ValueError(
+            f"PackState: layer {name!r} has ZERO active blocks — the "
+            "block-sparse kernel would output all-zeros for it. This almost "
+            "always means the sparsity distribution assigned (near-)1.0 "
+            "sparsity to a layer smaller than one block; see "
+            "docs/kernels.md#empty-columns-and-dead-layers"
+        )
+    width = min(max(int(bm.sum(axis=0).max()), 1, min_width), nkb)
+    row_width = min(max(int(bm.sum(axis=1).max()), 1, min_row_width), nnb)
+    idx, cnt = pack_block_mask(bm, max_count=width)
+    ridx, rcnt = pack_block_mask_rows(bm, max_count=row_width)
+    return {
+        "idx": idx,
+        "cnt": cnt,
+        "ridx": ridx,
+        "rcnt": rcnt,
+        "nnz": jnp.int32(total),
+        "nkb": jnp.int32(nkb),
+    }
+
+
+def build_pack_state(masks, block_shape, *, prev=None):
+    """Masks pytree -> PackState pytree (same structure; entry or None leaves).
+
+    masks must be CONCRETE (host) arrays — this runs outside jit, on the
+    amortized topology-update path, never in the per-step hot loop.
+    prev: a previous PackState; per-layer widths are kept >= prev's widths so
+    the packed shapes (and thus the jitted train step) stay stable when a
+    topology update shrinks some column's count.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        masks, is_leaf=lambda x: x is None
+    )
+    prev_leaves = (
+        jax.tree_util.tree_leaves(prev, is_leaf=is_pack_entry)
+        if prev is not None
+        else [None] * len(flat)
+    )
+    entries = []
+    for (path, m), pe in zip(flat, prev_leaves):
+        name = path_name(path)
+        if not _packable(m, block_shape) or not _dispatched(name):
+            entries.append(None)
+            continue
+        min_w = int(pe["idx"].shape[1]) if pe is not None else 0
+        min_rw = (
+            int(pe["ridx"].shape[1]) if pe is not None and "ridx" in pe else 0
+        )
+        entries.append(
+            pack_entry(
+                m, block_shape, min_width=min_w, min_row_width=min_rw,
+                name=name,
+            )
+        )
+    return jax.tree_util.tree_unflatten(treedef, entries)
+
+
+def refresh_pack_state(masks, block_shape, *, prev):
+    """Re-pack after a topology update (call right after every rigl_step).
+
+    Same as build_pack_state but prev is required — refreshing without the
+    previous pack would let widths shrink and retrigger jit compilation on
+    every update.
+    """
+    return build_pack_state(masks, block_shape, prev=prev)
+
+
+def pack_mismatch(masks, pack, block_shape):
+    """Traced-safe exact staleness check: #blocks where pack != masks.
+
+    Returns an int32 scalar, 0 iff every pack entry encodes exactly the block
+    mask of its layer (the entry is scattered back to a block mask via
+    kernels.block_sparse_matmul.unpack_block_mask — the same reconstruction
+    the VJP's CSR fallback uses).  Cost: one elementwise any-reduce over each
+    mask (O(#sparsifiable params), no batch/seq factor) plus tiny block-grid
+    compares — the train step already does O(#params) elementwise mask work
+    every step (dense_to_sparse_grad), so reporting this as the per-step
+    ``pack_stale`` metric is noise next to the M-scaled matmuls.  A nonzero
+    value means a rigl_step ran without refresh_pack_state and the kernels
+    are executing a stale topology (docs/kernels.md#staleness).
+    """
+    from ..kernels.block_sparse_matmul import unpack_block_mask
+
+    flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+    flat_e = jax.tree_util.tree_leaves(pack, is_leaf=is_pack_entry)
+    total = jnp.int32(0)
+    for m, e in zip(flat_m, flat_e):
+        if e is None or not _packable(m, block_shape):
+            continue
+        bm = block_mask_of(m, block_shape)
+        rec = unpack_block_mask(e["idx"], e["cnt"], bm.shape[0])
+        total = total + jnp.sum(rec != bm).astype(jnp.int32)
+    return total
+
+
+def pack_stats(pack) -> dict[str, Any]:
+    """Host-side bookkeeping: per-layer grid width vs the padded worst case."""
+    out: dict[str, Any] = {"layers": {}}
+    tight = padded = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(pack, is_leaf=is_pack_entry)
+    for path, e in flat:
+        if e is None:
+            continue
+        name = path_name(path)
+        width = int(e["idx"].shape[1])
+        nkb = int(e["nkb"])
+        out["layers"][name] = {
+            "width": width,
+            "worst_case": nkb,
+            "grid_fraction": width / nkb,
+            "row_width": int(e["ridx"].shape[1]) if "ridx" in e else None,
+            "nnz_blocks": int(e["nnz"]),
+            "cols": int(e["cnt"].shape[0]),
+        }
+        tight += width
+        padded += nkb
+    out["grid_iters_tight"] = tight
+    out["grid_iters_padded"] = padded
+    out["grid_fraction"] = tight / padded if padded else 1.0
+    return out

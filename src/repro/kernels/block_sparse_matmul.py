@@ -49,6 +49,7 @@ __all__ = [
     "pack_block_mask_rows",
     "pack_block_mask_traced",
     "pack_block_mask_rows_traced",
+    "unpack_block_mask",
 ]
 
 
@@ -67,10 +68,14 @@ def _pack_np(bm, max_count=None):
     if max_count is None:
         max_count = max(int(counts.max(initial=0)), 1)
     elif int(counts.max(initial=0)) > max_count:
-        # truncating would silently drop active blocks from the matmul
+        # truncating would SILENTLY drop active blocks from the matmul —
+        # the output would be wrong with no runtime signal, so fail loudly
         raise ValueError(
-            f"max_count={max_count} < max active blocks per column "
-            f"({int(counts.max())}); the packed matmul would be wrong"
+            f"pack_block_mask: max_count={max_count} < max active blocks per "
+            f"column ({int(counts.max())}). Truncating the pack would drop "
+            "active blocks from the matmul and corrupt the output. Repack "
+            "with a wider max_count (PackState does this automatically on "
+            "refresh — see docs/kernels.md#packing-and-truncation)"
         )
     # stable ascending argsort of ~bm puts active rows first, in row order
     order = np.argsort(~bm, axis=0, kind="stable")
@@ -117,6 +122,20 @@ def pack_block_mask_traced(block_mask):
 def pack_block_mask_rows_traced(block_mask):
     """jit-safe CSR pack; padded width = N/bn (static worst case)."""
     return _pack_jnp(block_mask.T, block_mask.shape[1])
+
+
+def unpack_block_mask(block_idx, block_cnt, n_rows: int):
+    """CSC ``(idx, cnt)`` -> (n_rows, n_cols) bool block mask (traced-safe).
+
+    Inverse of pack_block_mask (padded slots contribute nothing).  Shared by
+    the VJP's CSR fallback derivation below and PackState's staleness check
+    (core/pack.py) — one reconstruction definition, kept in sync by
+    construction.
+    """
+    n_cols, width = block_idx.shape
+    valid = jnp.arange(width)[None, :] < block_cnt[:, None]
+    cols = jnp.broadcast_to(jnp.arange(n_cols)[:, None], block_idx.shape)
+    return jnp.zeros((n_rows, n_cols), bool).at[block_idx, cols].max(valid)
 
 
 def _clamp(idx_ref, cnt_ref, row, s):
@@ -329,36 +348,29 @@ def _scatter_packed_dw(packed, block_idx, block_cnt, nkb, bk, bn, dtype):
 # custom VJP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _block_sparse_matmul(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
+):
     return _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
 
 
-def _bs_fwd(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+def _bs_fwd(x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret):
     out = _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
-    return out, (x, w, block_idx, block_cnt)
+    return out, (x, w, block_idx, block_cnt, row_idx, row_cnt)
 
 
 def _bs_bwd(bm, bn, bk, interpret, res, g):
-    x, w, block_idx, block_cnt = res
+    x, w, block_idx, block_cnt, row_idx, row_cnt = res
     K, N = w.shape
-    nkb, nnb = K // bk, N // bn
-    max_k = block_idx.shape[1]
-
-    # Reconstruct the (tiny) block mask from the CSC packing and re-pack it
-    # row-wise (CSR) for dgrad.  nkb x nnb bools — negligible vs the matmuls.
-    valid = jnp.arange(max_k)[None, :] < block_cnt[:, None]  # (nnb, max_k)
-    cols = jnp.broadcast_to(jnp.arange(nnb)[:, None], block_idx.shape)
-    bmask = jnp.zeros((nkb, nnb), bool).at[block_idx, cols].max(valid)
-    row_idx, row_cnt = _pack_jnp(bmask.T, nnb)
+    nkb = K // bk
 
     dx = _dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
     packed = _dw_call(x, g, block_idx, block_cnt, bm, bn, bk, interpret)
     dw = _scatter_packed_dw(packed, block_idx, block_cnt, nkb, bk, bn, w.dtype)
 
-    zi = np.zeros(block_idx.shape, jax.dtypes.float0)
-    zc = np.zeros(block_cnt.shape, jax.dtypes.float0)
-    return dx, dw, zi, zc
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, dw, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt)
 
 
 _block_sparse_matmul.defvjp(_bs_fwd, _bs_bwd)
@@ -370,6 +382,8 @@ def block_sparse_matmul(
     w,
     block_idx,
     block_cnt,
+    row_idx=None,
+    row_cnt=None,
     *,
     bm: int = 128,
     bn: int = 128,
@@ -378,13 +392,25 @@ def block_sparse_matmul(
 ):
     """x: (M, K) @ block-sparse w: (K, N) -> (M, N).
 
-    block_idx: (N/bn, max_k) int32 — active K-block ids per N-block (packed).
+    block_idx: (N/bn, max_k) int32 — active K-block ids per N-block (CSC).
     block_cnt: (N/bn,) int32 — number of active K-blocks per N-block.
+    row_idx/row_cnt: optional CSR view ((K/bk, max_n) / (K/bk,)) consumed by
+    the dgrad kernel.  Pass the host-packed (tight) CSR from a PackState
+    entry so the backward dx grid is also sized to the true active count;
+    when omitted, it is derived here from the CSC pack at the static
+    worst-case width N/bn (padded dgrad grid — correct, just longer).  The
+    derivation is dead-code-eliminated whenever the call is not
+    differentiated (e.g. serving).
 
     Differentiable: jax.grad routes through the CSR dgrad kernel (skips
-    inactive K-blocks) and the packed-active-block wgrad kernel.
+    inactive N-blocks) and the packed-active-block wgrad kernel.
     """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and N % bn == 0 and K % bk == 0 and M % bm == 0
-    return _block_sparse_matmul(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    if row_idx is None:
+        bmask = unpack_block_mask(block_idx, block_cnt, K // bk)
+        row_idx, row_cnt = _pack_jnp(bmask.T, N // bn)
+    return _block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
+    )

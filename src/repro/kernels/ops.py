@@ -12,11 +12,13 @@ dispatch without caller-side padding.  ``masked_linear`` additionally pads
 K/N when they don't divide the tile; ``block_sparse_linear`` requires aligned
 K/N because the block mask's grid is defined by them.
 
-``block_sparse_linear`` accepts the block mask either concrete (host-side
-numpy packing, tight max-count — serving / eval) or traced (jit-safe jnp
-packing with a static worst-case count — the training hot path; padded grid
-slots cost empty iterations but no DMA or FLOPs).  A precomputed ``pack=
-(idx, cnt)`` bypasses packing entirely.
+``block_sparse_linear`` accepts its topology three ways, in priority order:
+a precomputed ``pack=(idx, cnt)`` (tight grid, zero per-call packing cost —
+this is what PackState in the train/serve state provides, core/pack.py); a
+concrete block mask (host-side numpy packing, tight max-count — eval /
+one-off calls); or a traced block mask (jit-safe jnp packing with a static
+worst-case count — correct anywhere, but every grid is padded to K/bk with
+empty iterations).  docs/kernels.md documents the whole path end-to-end.
 """
 from __future__ import annotations
 
@@ -29,6 +31,8 @@ import numpy as np
 from .block_sparse_matmul import (
     block_sparse_matmul,
     pack_block_mask,
+    pack_block_mask_rows,
+    pack_block_mask_rows_traced,
     pack_block_mask_traced,
 )
 from .masked_matmul import masked_matmul
@@ -64,7 +68,17 @@ def _pad_rows(x2, Mp: int):
 
 
 def masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
-    """out = x @ (w*mask) with the mask fused into the matmul pipeline."""
+    """out = x @ (w*mask) with the mask fused into the matmul pipeline.
+
+    mask: (K, N) bool, ANY sparsity pattern (no block alignment needed) —
+    the mask is applied to each weight tile inside VMEM, so the masked weight
+    copy w*m is never written to (or re-read from) HBM.  Differentiable: the
+    custom-VJP backward fuses the mask into dgrad (dx = g @ (w*m)T) and wgrad
+    (dw = (xT @ g) * m), so cotangents off-mask are exactly zero.
+    block: (bm, bn, bk) VMEM tile sizes; non-aligned M/K/N are zero-padded up
+    to the (clamped) tiles and trimmed after.  interpret=None auto-selects
+    compiled-on-TPU / interpret-elsewhere.
+    """
     interpret = auto_interpret() if interpret is None else interpret
     bm, bn, bk = block
     *lead, K = x.shape
@@ -88,29 +102,62 @@ def masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
 
 
 def block_sparse_linear(
-    x, w, block_mask, *, block=(128, 128, 128), interpret=None, pack=None
+    x, w, block_mask=None, *, block=(128, 128, 128), interpret=None, pack=None
 ):
-    """out = x @ w_blocksparse, skipping inactive (bk x bn) blocks entirely.
+    """out = x @ w_blocksparse, skipping inactive (bk x bn) weight blocks.
 
-    block_mask: (K/bk, N/bn) bool — concrete or traced (see module docstring).
-    pack: optional precomputed (block_idx, block_cnt) from pack_block_mask.
+    Exactly one topology source must be usable:
+
+    pack: precomputed packing — a PackState entry dict (core/pack.py,
+        ``{"idx", "cnt", "ridx", "rcnt", ...}``) or a bare ``(idx, cnt)``
+        CSC tuple from ``pack_block_mask``.  This is the TIGHT-GRID path:
+        the forward/wgrad grid's third dim is ``idx.shape[1]`` (the true max
+        active-block count), not the worst case, and an entry's host-packed
+        CSR (``ridx``/``rcnt``) makes the dgrad grid tight too (a bare CSC
+        tuple falls back to a worst-case-width derived CSR for dgrad).
+        Train/serve state carries these packs and refreshes them only on
+        RigL topology updates, so the per-call cost is zero.  ``block_mask``
+        is ignored.
+    block_mask: (K/bk, N/bn) bool fallback when no pack is given —
+        concrete (host-side numpy packing, tight width: eval/one-off calls) or
+        traced (jit-safe jnp packing, STATIC worst-case width K/bk: correct
+        anywhere, but pads the grid with empty iterations).
+
+    The padded and tight paths are bit-identical: both visit the active blocks
+    of each column in ascending K-block order, and padded slots neither DMA
+    nor accumulate (see docs/kernels.md#tight-vs-padded-grids).
+
+    Differentiable (custom-VJP dgrad/wgrad kernels); leading dims of ``x`` are
+    flattened and zero-padded to the M tile; K and N must be tile-aligned.
     """
     interpret = auto_interpret() if interpret is None else interpret
     bm, bn, bk = block
     *lead, K = x.shape
     bk, bn = min(bk, K), min(bn, w.shape[1])
+    ridx = rcnt = None
     if pack is not None:
-        idx, cnt = pack
+        if isinstance(pack, dict):
+            idx, cnt = pack["idx"], pack["cnt"]
+            ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+        else:
+            idx, cnt = pack
+    elif block_mask is None:
+        raise ValueError(
+            "block_sparse_linear needs a topology: pass block_mask= or a "
+            "precomputed pack=(idx, cnt) — see docs/kernels.md#packing"
+        )
     elif isinstance(block_mask, jax.core.Tracer):
         idx, cnt = pack_block_mask_traced(block_mask)
+        ridx, rcnt = pack_block_mask_rows_traced(block_mask)
     else:
         idx, cnt = pack_block_mask(np.asarray(block_mask))
+        ridx, rcnt = pack_block_mask_rows(np.asarray(block_mask))
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
     bm_eff, Mp = _row_tile(M, bm)
     x2 = _pad_rows(x2, Mp)
     out = block_sparse_matmul(
-        x2, w, idx, cnt, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+        x2, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
     )
     return out[:M].reshape(*lead, w.shape[1])
 

@@ -10,7 +10,9 @@ With ``--kernel`` (or cfg.sparse.kernel) set, prefill and every decode step
 route the projections/MLPs through the Pallas sparse kernels instead of
 pre-materializing w*m: decode is weight-bound, so block_sparse's skipped
 blocks translate ~1:1 into HBM-traffic (and so latency) savings at the
-kernel level.
+kernel level.  block_sparse additionally threads the serve state's PackState
+(host-packed (idx, cnt), core/pack.py) through every call, so the kernel
+grids launch the TRUE active-block count — packed once, reused per token.
 """
 from __future__ import annotations
 
@@ -39,11 +41,16 @@ def serve_session(
     gen: int,
     max_len: int | None = None,
     masks=None,
+    pack=None,
 ):
     """Greedy batched generation. Returns (tokens (B, prompt+gen), stats).
 
     masks=None expects pre-masked params (legacy).  With masks, params are
     raw and serving dispatches through cfg.sparse.kernel (see lm_decode).
+    pack: PackState (core/pack.py) — the serve state's host-packed block
+    topology.  Packed ONCE per topology, threaded into prefill and reused by
+    every decode step, so block_sparse grids launch the true active-block
+    count instead of the in-jit padded worst case.
     """
     max_len = max_len or (prompt_len + gen)
     prompt = batch_for(cfg, 0, batch, prompt_len + 1, learnable=True)
@@ -52,15 +59,15 @@ def serve_session(
         prompt["tokens"] = prompt["tokens"][:, :prompt_len]
 
     prefill = jax.jit(
-        lambda p, m, b: lm_prefill(p, cfg, b, max_len=max_len, masks=m)
+        lambda p, m, pk, b: lm_prefill(p, cfg, b, max_len=max_len, masks=m, pack=pk)
     )
     decode = jax.jit(
-        lambda p, m, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m),
-        donate_argnums=(2,),
+        lambda p, m, pk, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m, pack=pk),
+        donate_argnums=(3,),
     )
 
     t0 = time.time()
-    logits, caches = prefill(params, masks, prompt)
+    logits, caches = prefill(params, masks, pack, prompt)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -69,7 +76,7 @@ def serve_session(
     n_patches = cfg.n_patches if cfg.frontend == "patch" else 0
     t0 = time.time()
     for i in range(gen - 1):
-        logits, caches = decode(params, masks, caches, tok, prompt_len + n_patches + i)
+        logits, caches = decode(params, masks, pack, caches, tok, prompt_len + n_patches + i)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(tok)
@@ -114,10 +121,14 @@ def main():
         cfg = dataclasses.replace(cfg, sparse=sp)
     state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
     if cfg.sparse.kernel in ("masked", "block_sparse"):
-        # kernel dispatch: serve RAW weights + masks; w*m never materialized
+        # kernel dispatch: serve RAW weights + masks; w*m never materialized.
+        # block_sparse also serves the host-packed tight-grid topology
+        # (init_train_state already built state["pack"]; a restored
+        # checkpoint carries its own).
         toks, stats = serve_session(
             cfg, state["params"], batch=args.batch,
             prompt_len=args.prompt_len, gen=args.gen, masks=state["masks"],
+            pack=state.get("pack"),
         )
     else:
         w_eff = apply_masks(state["params"], state["masks"])

@@ -38,6 +38,7 @@ from ..training import (
     make_prune_fn,
     make_rigl_step,
     make_train_step,
+    refresh_pack,
     snip_init,
 )
 
@@ -77,6 +78,10 @@ def train_loop(
     restored, rstep = ckpt.restore_or_none(state)
     if restored is not None:
         state = restored
+        # re-pack against the RESTORED masks: covers pre-PackState
+        # checkpoints (restore falls back to the template pack) and any
+        # width drift between the fresh-init template and the saved run
+        state = refresh_pack(state, cfg)
         print(f"[train] restored checkpoint at step {rstep}")
 
     train_step = jax.jit(make_train_step(cfg, opt_cfg, lr_sched), donate_argnums=0)
@@ -90,6 +95,7 @@ def train_loop(
     sp = cfg.sparse
     if sp.method == "snip" and int(state["step"]) == 0:
         state = snip_init(state, cfg, batch_for(cfg, 0, batch, seq, learnable=learnable))
+        state = refresh_pack(state, cfg)  # snip replaced the masks
 
     metrics_log = []
     t0 = time.time()
@@ -104,10 +110,15 @@ def train_loop(
         )
         if is_update:
             state, m = rigl_step(state, b)
+            # topology changed: re-pack the tight-grid block topology NOW so
+            # the next delta_t train/serve steps run grids sized to the new
+            # active counts (host-side, amortized — see core/pack.py)
+            state = refresh_pack(state, cfg)
         else:
             state, m = train_step(state, b)
         if prune_fn is not None and step % prune_sched.prune_every == 0:
             state = prune_fn(state)
+            state = refresh_pack(state, cfg)  # pruning moved the masks too
         step = int(state["step"])
         if preempt_at is not None and step == preempt_at:
             ckpt.maybe_save(state, step, force=True)
@@ -115,7 +126,20 @@ def train_loop(
             raise SimulatedPreemption(f"preempted at step {step}")
         if step % log_every == 0 or step == steps:
             loss = float(m["loss"])
-            metrics_log.append({"step": step, "loss": loss})
+            rec = {"step": step, "loss": loss}
+            if "pack_stale" in m:
+                # staleness is sticky until the next refresh, so checking at
+                # log cadence (not every step) still catches a missed
+                # refresh_pack — and a nonzero value means the kernels are
+                # executing the WRONG topology: fail fast, don't mistrain
+                rec["pack_stale"] = stale = int(m["pack_stale"])
+                if stale:
+                    raise RuntimeError(
+                        f"PackState is stale ({stale} blocks differ from the "
+                        f"masks) at step {step} — a topology update ran "
+                        "without refresh_pack(); see docs/kernels.md#staleness"
+                    )
+            metrics_log.append(rec)
             print(f"[train] step {step:6d} loss {loss:.4f} ({(time.time()-t0):.1f}s)")
         ckpt.maybe_save(state, step)
     ckpt.maybe_save(state, step, force=True)

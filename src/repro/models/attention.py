@@ -61,25 +61,27 @@ def rope(x, positions, theta: float = 1e4):
 
 
 def _mask_of(masks, name):
-    """Mask leaf for one projection (None when undispatched/legacy)."""
+    """Mask (or PackState entry) leaf for one projection (None when
+    undispatched/legacy — both trees mirror the params structure)."""
     return None if masks is None else masks[name]["w"]
 
 
-def _linear_kw(cfg, masks, name):
+def _linear_kw(cfg, masks, name, pack=None):
     return dict(
         mask=_mask_of(masks, name),
         kernel=cfg.sparse.kernel,
         block=cfg.sparse.kernel_block,
+        pack=_mask_of(pack, name),
     )
 
 
-def _qkv(p, x, cfg, masks=None):
+def _qkv(p, x, cfg, masks=None, pack=None):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    q = linear(p["wq"], x, dt, **_linear_kw(cfg, masks, "wq")).reshape(B, S, H, hd)
-    k = linear(p["wk"], x, dt, **_linear_kw(cfg, masks, "wk")).reshape(B, S, KV, hd)
-    v = linear(p["wv"], x, dt, **_linear_kw(cfg, masks, "wv")).reshape(B, S, KV, hd)
+    q = linear(p["wq"], x, dt, **_linear_kw(cfg, masks, "wq", pack)).reshape(B, S, H, hd)
+    k = linear(p["wk"], x, dt, **_linear_kw(cfg, masks, "wk", pack)).reshape(B, S, KV, hd)
+    v = linear(p["wv"], x, dt, **_linear_kw(cfg, masks, "wv", pack)).reshape(B, S, KV, hd)
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)
@@ -128,6 +130,7 @@ def attention(
     positions=None,
     q_chunk: int = 4096,
     masks=None,
+    pack=None,
 ):
     """Full-sequence attention (train / prefill). Returns (out, (k, v)).
 
@@ -135,11 +138,12 @@ def attention(
     Causality from cfg.causal (False => encoder, e.g. hubert).
     masks: the layer's attn mask subtree — routes wq/wk/wv/wo through the
     Pallas sparse kernels per cfg.sparse.kernel (None => legacy dense path).
+    pack: matching PackState subtree — tight block_sparse grids (core/pack.py).
     """
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S)
-    q, k, v = _qkv(p, x, cfg, masks)
+    q, k, v = _qkv(p, x, cfg, masks, pack)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
@@ -164,7 +168,7 @@ def attention(
                 )
             )
         o = jnp.concatenate(outs, axis=1)
-    out = linear(p["wo"], o.reshape(B, S, -1), **_linear_kw(cfg, masks, "wo"))
+    out = linear(p["wo"], o.reshape(B, S, -1), **_linear_kw(cfg, masks, "wo", pack))
     return out, (k, v)
 
 
@@ -211,17 +215,21 @@ def fill_kv_cache(cache, k, v, start: int = 0):
     return {"k": ck, "v": cv}
 
 
-def attn_decode(p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None):
+def attn_decode(
+    p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None, pack=None
+):
     """One decode step.  x_t: (B, 1, d); pos: traced scalar (tokens so far).
 
     Windowed caches use ring addressing (softmax is permutation invariant —
     absolute positions are baked into the stored, roped keys).
     Returns (out (B,1,d), new_cache).  With ``masks``, the projections decode
     through the sparse kernels (serve path: weight-bound, so skipped blocks
-    translate directly to HBM-traffic savings).
+    translate directly to HBM-traffic savings).  ``pack`` (PackState subtree)
+    additionally shrinks each block_sparse grid to the true active count — it
+    is packed once per topology and reused by every decode step.
     """
     B = x_t.shape[0]
-    q, k, v = _qkv(p, x_t, cfg, masks)
+    q, k, v = _qkv(p, x_t, cfg, masks, pack)
     posv = jnp.full((1,), pos)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
@@ -238,5 +246,5 @@ def attn_decode(p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None):
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv).reshape(B, 1, H * hd)
-    out = linear(p["wo"], o, **_linear_kw(cfg, masks, "wo"))
+    out = linear(p["wo"], o, **_linear_kw(cfg, masks, "wo", pack))
     return out, {"k": ck, "v": cv}

@@ -74,13 +74,22 @@ def linear_init(
 
 
 def _block_mask(mask, bk: int, bn: int):
-    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask."""
+    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask.
+
+    Same reduction as the host-side PackState build (one definition, so the
+    traced fallback and the packed topology can never diverge); this wrapper
+    just clamps the tiles to small layer dims.
+    """
+    from ..core.masks import block_mask_of
+
     K, N = mask.shape
-    bk, bn = min(bk, K), min(bn, N)
-    return mask.reshape(K // bk, bk, N // bn, bn).any(axis=(1, 3))
+    return block_mask_of(mask, (min(bk, K), min(bn, N)))
 
 
-def linear(p, x, compute_dtype=None, *, mask=None, kernel=None, block=(128, 128, 128)):
+def linear(
+    p, x, compute_dtype=None, *, mask=None, kernel=None, block=(128, 128, 128),
+    pack=None,
+):
     """compute_dtype=None inherits x.dtype (the model's compute dtype flows
     from the embedding; f32 configs stay f32 end-to-end).
 
@@ -92,6 +101,13 @@ def linear(p, x, compute_dtype=None, *, mask=None, kernel=None, block=(128, 128,
     Both carry custom-VJP Pallas backward kernels, so jax.grad of a dispatched
     layer stays sparse too.  mask=None or kernel='dense'/None falls back to
     the jnp reference path (w*m materialized — legacy behaviour).
+
+    pack: this layer's PackState entry ({"idx", "cnt", ...} — core/pack.py).
+    Only consumed by kernel='block_sparse': the kernel grid is then sized to
+    the entry's tight active-block count instead of the worst-case padded
+    width the in-jit traced pack must assume.  The entry MUST describe the
+    same topology as ``mask`` (the train/serve drivers refresh it on every
+    RigL update; the pack_stale metric guards the invariant).
     """
     dt = compute_dtype or x.dtype
     w = p["w"].astype(dt)
@@ -101,6 +117,10 @@ def linear(p, x, compute_dtype=None, *, mask=None, kernel=None, block=(128, 128,
         xc = x.astype(dt)
         if kernel == "masked":
             y = masked_linear(xc, w, mask, block=block)
+        elif pack is not None:
+            # full PackState entry: tight CSC for fwd/wgrad AND tight CSR
+            # for the custom-VJP dgrad grid
+            y = block_sparse_linear(xc, w, block=block, pack=pack)
         else:
             bm, bn, bk = block
             y = block_sparse_linear(

@@ -30,17 +30,25 @@ def _m(masks, name):
     return None if masks is None else masks[name]["w"]
 
 
-def mlp(p, x, kind: str = "swiglu", *, masks=None, kernel=None, block=(128, 128, 128)):
-    kw = dict(kernel=kernel, block=block)
-    h = linear(p["wi"], x, mask=_m(masks, "wi"), **kw)
+def mlp(
+    p, x, kind: str = "swiglu", *, masks=None, kernel=None,
+    block=(128, 128, 128), pack=None,
+):
+    """pack: this MLP's PackState subtree (mirrors ``masks``) — sizes the
+    block_sparse kernel grids to the true active-block count (core/pack.py)."""
+    def kw(name):
+        return dict(kernel=kernel, block=block, mask=_m(masks, name),
+                    pack=_m(pack, name))
+
+    h = linear(p["wi"], x, **kw("wi"))
     if kind == "swiglu":
-        h = jax.nn.silu(linear(p["wg"], x, mask=_m(masks, "wg"), **kw)) * h
+        h = jax.nn.silu(linear(p["wg"], x, **kw("wg"))) * h
     elif kind == "geglu":
-        h = jax.nn.gelu(linear(p["wg"], x, mask=_m(masks, "wg"), **kw)) * h
+        h = jax.nn.gelu(linear(p["wg"], x, **kw("wg"))) * h
     elif kind == "gelu":
         h = jax.nn.gelu(h)
     elif kind == "relu":
         h = jax.nn.relu(h)
     else:
         raise ValueError(kind)
-    return linear(p["wo"], h, mask=_m(masks, "wo"), **kw)
+    return linear(p["wo"], h, **kw("wo"))

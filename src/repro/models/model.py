@@ -18,6 +18,12 @@ skipping) with custom-VJP backward kernels — masked weights are never
 materialized in HBM, fwd or bwd.  Non-dispatched sparse submodules
 (ssm/xlstm/moe) fall back to w*m at submodule granularity.  masks=None keeps
 the legacy contract (callers pre-mask via core.apply_masks).
+
+All four entry points also take ``pack`` — a PackState pytree (core/pack.py)
+mirroring the masks — which sizes every block_sparse kernel grid to the TRUE
+active-block count instead of the in-jit worst case.  The train/serve drivers
+carry it in state and refresh it only on RigL topology updates; see
+docs/kernels.md for the end-to-end lifecycle.
 """
 from __future__ import annotations
 
@@ -149,12 +155,14 @@ def _local_masked(p, masks, key):
     return p[key] if masks is None else apply_masks(p[key], masks[key])
 
 
-def _block(p, x, cfg, i, *, positions=None, masks=None):
+def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux).
 
     masks: this layer's mask subtree.  None => legacy behaviour (params are
     already w*m).  Given => attention/mlp linears dispatch to the Pallas
     sparse kernels (cfg.sparse.kernel) and never materialize masked weights.
+    pack: this layer's PackState subtree (mirrors masks) — block_sparse grids
+    run at the true active-block count instead of the padded worst case.
     """
     aux = jnp.float32(0.0)
     if cfg.block_type == "xlstm":
@@ -171,7 +179,7 @@ def _block(p, x, cfg, i, *, positions=None, masks=None):
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn_out, kv = A.attention(
         p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk,
-        masks=_sub(masks, "attn"),
+        masks=_sub(masks, "attn"), pack=_sub(pack, "attn"),
     )
     state: Any = kv
     if cfg.block_type == "hymba":
@@ -199,6 +207,7 @@ def _block(p, x, cfg, i, *, positions=None, masks=None):
         ff_out = mlp(
             p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(masks, "mlp"),
             kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+            pack=_sub(pack, "mlp"),
         )
     else:
         ff_out = 0.0
@@ -260,11 +269,15 @@ def _logits(params, cfg, h):
     return out
 
 
-def lm_forward(params, cfg, batch, *, collect_states: bool = False, masks=None):
+def lm_forward(
+    params, cfg, batch, *, collect_states: bool = False, masks=None, pack=None
+):
     """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux).
 
     masks: mask pytree mirroring params (kernel-dispatch mode).  None keeps
     the legacy contract: callers pass pre-masked effective weights.
+    pack: PackState pytree mirroring masks (core/pack.py) — block_sparse
+    kernel grids are sized to the true active-block count (tight grids).
     """
     x = _embed_inputs(params, cfg, batch)
     S_ = x.shape[1]
@@ -272,9 +285,12 @@ def lm_forward(params, cfg, batch, *, collect_states: bool = False, masks=None):
     aux_total = jnp.float32(0.0)
     states = []
 
+    def _per_layer(tree):
+        return tree["layers"] if tree is not None else [None] * cfg.n_layers
+
     if cfg.scan_layers:
-        assert masks is None, (
-            "scan_layers (dry-run memory proof) does not thread masks; "
+        assert masks is None and pack is None, (
+            "scan_layers (dry-run memory proof) does not thread masks/pack; "
             "pre-mask the stacked params instead"
         )
         x, states, aux_total = _forward_scanned(params, cfg, x, positions)
@@ -284,18 +300,19 @@ def lm_forward(params, cfg, batch, *, collect_states: bool = False, masks=None):
         # are not forced live (outputs of a checkpoint are always saved).
         g = max(cfg.remat_group, 1)
         layer_ps = params["layers"]
-        layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
+        layer_ms = _per_layer(masks)
+        layer_pk = _per_layer(pack)
         policy = (
             jax.checkpoint_policies.checkpoint_dots
             if getattr(cfg, "remat_policy", "none") == "dots"
             else None
         )
 
-        def region(i0, ps, ms, x_):
+        def region(i0, ps, ms, pks, x_):
             aux_ = jnp.float32(0.0)
-            for j, (p, m) in enumerate(zip(ps, ms)):
+            for j, (p, m, pk) in enumerate(zip(ps, ms, pks)):
                 x_, _, a = _block(
-                    p, x_, cfg, i0 + j, positions=positions, masks=m
+                    p, x_, cfg, i0 + j, positions=positions, masks=m, pack=pk
                 )
                 aux_ = aux_ + a
             return x_, aux_
@@ -303,16 +320,21 @@ def lm_forward(params, cfg, batch, *, collect_states: bool = False, masks=None):
         for i0 in range(0, cfg.n_layers, g):
             ps = layer_ps[i0 : i0 + g]
             ms = layer_ms[i0 : i0 + g]
+            pks = layer_pk[i0 : i0 + g]
             x = _sp_constraint(x, cfg)
             x, aux = jax.checkpoint(
                 functools.partial(region, i0), policy=policy
-            )(ps, ms, x)
+            )(ps, ms, pks, x)
             aux_total = aux_total + aux
     else:
-        layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
+        layer_ms = _per_layer(masks)
+        layer_pk = _per_layer(pack)
         for i, p in enumerate(params["layers"]):
             x = _sp_constraint(x, cfg)
-            x, st, aux = _block(p, x, cfg, i, positions=positions, masks=layer_ms[i])
+            x, st, aux = _block(
+                p, x, cfg, i, positions=positions, masks=layer_ms[i],
+                pack=layer_pk[i],
+            )
             aux_total = aux_total + aux
             if collect_states:
                 states.append(st)
@@ -338,15 +360,17 @@ def _forward_scanned(params, cfg, x, positions):
     return x, [], aux
 
 
-def lm_loss(params, cfg, batch, masks=None):
+def lm_loss(params, cfg, batch, masks=None, pack=None):
     """Mean next-token xent (chunked over seq to bound the logits buffer).
 
     masks != None => kernel-dispatch mode: params are RAW (unmasked) and the
     sparse topology is enforced inside the matmul kernels; jax.grad of this
     w.r.t. params then yields the paper's SPARSE gradient directly (the
     custom-VJP wgrad kernels fuse the g⊙m product).
+    pack: PackState pytree (core/pack.py) — tight block_sparse grids in both
+    the forward and the custom-VJP backward kernels.
     """
-    h, _, aux = lm_forward(params, cfg, batch, masks=masks)
+    h, _, aux = lm_forward(params, cfg, batch, masks=masks, pack=pack)
     targets = batch["targets"]
     # frontend==patch: loss only over the text positions (last T slots)
     if cfg.frontend == "patch":
@@ -389,10 +413,16 @@ def init_caches(cfg, batch: int, max_len: int):
     return caches
 
 
-def lm_prefill(params, cfg, batch, max_len: int, *, masks=None):
-    """Run the prompt, return (last-position logits, filled caches)."""
+def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None):
+    """Run the prompt, return (last-position logits, filled caches).
+
+    pack: PackState pytree — prefill's block_sparse projections/MLPs run
+    tight grids (see lm_decode for the per-token decode counterpart).
+    """
     assert cfg.causal, "prefill/decode undefined for encoder-only models"
-    h, states, _ = lm_forward(params, cfg, batch, collect_states=True, masks=masks)
+    h, states, _ = lm_forward(
+        params, cfg, batch, collect_states=True, masks=masks, pack=pack
+    )
     B = h.shape[0]
     S_ = h.shape[1]
     caches = init_caches(cfg, B, max_len)
@@ -421,20 +451,25 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None):
     return logits, caches
 
 
-def lm_decode(params, cfg, caches, tokens, pos, *, masks=None):
+def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
     """One decode step. tokens: (B, 1) int32; pos: traced scalar.
 
     Returns (logits (B,1,V), new caches).  With ``masks``, projections and
     MLPs decode through the Pallas sparse kernels (cfg.sparse.kernel) — the
     serve path is weight-bound, so block skipping cuts HBM traffic by the
-    block density directly.
+    block density directly.  ``pack`` (PackState, core/pack.py) additionally
+    sizes every block_sparse grid to the true active count; it is computed
+    once per topology on the host and REUSED by every decode step — decode
+    never re-packs.
     """
     assert cfg.causal
     x = _embed_inputs(params, cfg, {"tokens": tokens})
     new_caches = []
     layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
+    layer_pk = pack["layers"] if pack is not None else [None] * cfg.n_layers
     for i, p in enumerate(params["layers"]):
         m = layer_ms[i]
+        pk = layer_pk[i]
         c = dict(caches[i])
         if cfg.block_type == "xlstm":
             h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -453,7 +488,8 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None):
         kind = cfg.layer_kind(i)
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
         attn_out, c["kv"] = A.attn_decode(
-            p["attn"], h, c["kv"], pos, cfg, kind=kind, masks=_sub(m, "attn")
+            p["attn"], h, c["kv"], pos, cfg, kind=kind, masks=_sub(m, "attn"),
+            pack=_sub(pk, "attn"),
         )
         if cfg.block_type == "hymba":
             ssm_out, c["ssm"] = S.ssm_decode(
@@ -476,6 +512,7 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None):
             ff_out = mlp(
                 p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(m, "mlp"),
                 kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+                pack=_sub(pk, "mlp"),
             )
         else:
             ff_out = 0.0

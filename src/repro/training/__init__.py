@@ -4,6 +4,7 @@ from .steps import (  # noqa: F401
     make_prune_fn,
     make_rigl_step,
     make_train_step,
+    refresh_pack,
     snip_init,
     sparsity_map,
 )

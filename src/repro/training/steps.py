@@ -37,9 +37,12 @@ from ..core import (
     SparseAlgo,
     UpdateSchedule,
     apply_masks,
+    build_pack_state,
     dense_to_sparse_grad,
     get_distribution,
     init_masks,
+    pack_mismatch,
+    refresh_pack_state,
     rigl_update,
     snip_masks,
     tree_paths,
@@ -55,6 +58,7 @@ __all__ = [
     "make_rigl_step",
     "make_prune_fn",
     "snip_init",
+    "refresh_pack",
 ]
 
 
@@ -143,9 +147,34 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
         "opt": init_opt(opt_cfg, params),
         "rng": k3,
     }
+    if sp.kernel == "block_sparse" and sp.block_shape is not None:
+        # host-packed tight-grid topology, carried in state + checkpointed.
+        # INVARIANT: pack always describes state["masks"] — every rigl_step
+        # must be followed by refresh_pack() (launch/train.py does this); the
+        # train step's pack_stale metric reports any violation.
+        state["pack"] = build_pack_state(masks, sp.block_shape)
     if sp.method == "snfs":
         state["dense_mom"] = jax.tree_util.tree_map(jnp.zeros_like, params)
     return state, axes, sparse_flags
+
+
+def refresh_pack(state, cfg):
+    """Re-pack state["pack"] from state["masks"] (host-side, amortized).
+
+    Call right after EVERY rigl/set topology-update step when
+    cfg.sparse.kernel == 'block_sparse'.  No-op for states without a pack.
+    Widths never shrink (core/pack.py), so the jitted train step only
+    retraces when a layer's max active-block count grows past its packed
+    width — bounded drift, not per-update churn.
+    """
+    if "pack" not in state:
+        return state
+    return dict(
+        state,
+        pack=refresh_pack_state(
+            state["masks"], cfg.sparse.block_shape, prev=state["pack"]
+        ),
+    )
 
 
 def make_train_step(
@@ -170,6 +199,13 @@ def make_train_step(
     the sparse backward (by design) never computes — it is rejected here;
     RigL's dense grow-scores are unaffected because make_rigl_step keeps the
     dense backward on the amortized (every delta_t) update step.
+
+    With kernel='block_sparse' the state additionally carries
+    ``state["pack"]`` (PackState, core/pack.py): the host-packed tight block
+    topology is threaded into the kernels so every grid launches the TRUE
+    active-block count instead of the worst-case padded width.  The step
+    reports a ``pack_stale`` metric — nonzero iff the pack no longer matches
+    the masks (i.e. a rigl_step ran without refresh_pack()).
     """
     dispatch = cfg.sparse.kernel not in (None, "dense")
     if dispatch:
@@ -182,19 +218,28 @@ def make_train_step(
                 "backward kernels never compute it — use sparse.kernel='dense'"
             )
     if loss_fn is None:
-        loss_fn = lambda p, b, masks=None: lm_loss(p, cfg, b, masks=masks)
+        loss_fn = lambda p, b, masks=None, pack=None: lm_loss(
+            p, cfg, b, masks=masks, pack=pack
+        )
     elif dispatch and "masks" not in inspect.signature(loss_fn).parameters:
         raise ValueError(
             "kernel dispatch needs a loss_fn accepting masks= (raw params + "
             "mask threading); got one without it"
         )
+    # PackState (tight block_sparse grids) is an optimization, not a contract:
+    # custom loss_fns without a pack= parameter just fall back to the padded
+    # traced pack.
+    loss_accepts_pack = "pack" in inspect.signature(loss_fn).parameters
     mb = max(getattr(cfg, "microbatches", 1), 1)
     acc_dt = jnp.bfloat16 if getattr(cfg, "grad_accum_dtype", "") == "bfloat16" else jnp.float32
 
-    def _grads(w_eff, batch, masks=None):
-        loss_fn_ = loss_fn if masks is None else (
-            lambda p, b: loss_fn(p, b, masks=masks)
-        )
+    def _grads(w_eff, batch, masks=None, pack=None):
+        if masks is None:
+            loss_fn_ = loss_fn
+        elif pack is not None and loss_accepts_pack:
+            loss_fn_ = lambda p, b: loss_fn(p, b, masks=masks, pack=pack)
+        else:
+            loss_fn_ = lambda p, b: loss_fn(p, b, masks=masks)
         if mb == 1:
             return jax.value_and_grad(loss_fn_)(w_eff, batch)
         # gradient accumulation: one microbatch's activations live at a time
@@ -252,7 +297,10 @@ def make_train_step(
                 src,
             )
         loss, g_dense = _grads(
-            src, batch, masks=state["masks"] if dispatch else None
+            src,
+            batch,
+            masks=state["masks"] if dispatch else None,
+            pack=state.get("pack") if dispatch else None,
         )
         g_sparse = dense_to_sparse_grad(g_dense, state["masks"])
         # weight decay on ACTIVE weights only (inactive must stay untouched).
@@ -298,7 +346,16 @@ def make_train_step(
                 for g in jax.tree_util.tree_leaves(g_sparse)
             )
         )
-        return new_state, {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        if dispatch and "pack" in state:
+            # staleness canary: #blocks where the packed topology disagrees
+            # with the masks.  Nonzero means a rigl_step ran without
+            # refresh_pack() and the kernels execute a STALE topology — cheap
+            # to compute (tiny block grids), surfaced every step.
+            metrics["pack_stale"] = pack_mismatch(
+                state["masks"], state["pack"], cfg.sparse.block_shape
+            )
+        return new_state, metrics
 
     return train_step
 

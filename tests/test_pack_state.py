@@ -1,0 +1,282 @@
+"""PackState (core/pack.py): host-packed tight-grid block topology.
+
+Covers the lifecycle documented in docs/kernels.md: build at init, bit-exact
+equivalence of tight vs padded grids, refresh-on-topology-update, checkpoint
+round-trip, decode-path pack reuse, and the loud error/staleness guards.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config
+from repro.configs.base import SparseConfig
+from repro.core import block_mask_of, tree_paths
+from repro.core.pack import (
+    build_pack_state,
+    is_pack_entry,
+    pack_entry,
+    pack_mismatch,
+    pack_stats,
+    refresh_pack_state,
+)
+from repro.data import batch_for
+from repro.kernels.block_sparse_matmul import (
+    pack_block_mask,
+    pack_block_mask_rows,
+)
+from repro.models import lm_decode, lm_forward, lm_prefill
+from repro.optim import LRSchedule, OptConfig
+from repro.training import (
+    init_train_state,
+    make_algo,
+    make_rigl_step,
+    make_train_step,
+    refresh_pack,
+)
+
+BLOCK = 16
+
+
+def _cfg(sparsity=0.8):
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    sp = SparseConfig(
+        sparsity=sparsity, method="rigl", delta_t=10, alpha=0.3,
+        kernel="block_sparse", block_shape=(BLOCK, BLOCK),
+        kernel_block=(128, BLOCK, BLOCK),
+    )
+    return dataclasses.replace(cfg, dtype="float32", sparse=sp)
+
+
+@pytest.fixture(scope="module")
+def state():
+    cfg = _cfg()
+    st, _, _ = init_train_state(
+        jax.random.PRNGKey(0), cfg, OptConfig(kind="adam")
+    )
+    return cfg, st
+
+
+# ---------------------------------------------------------------------------
+# build: entries match the host pack of each layer's block mask, widths tight
+# ---------------------------------------------------------------------------
+
+def test_build_matches_per_layer_host_pack(state):
+    cfg, st = state
+    assert "pack" in st
+    flat_m = tree_paths(st["masks"])
+    # tree_paths would flatten INTO the entry dicts; flatten with entries as
+    # leaves instead so names align with the mask leaf names
+    flat_entries, _ = jax.tree_util.tree_flatten_with_path(
+        st["pack"], is_leaf=is_pack_entry
+    )
+    from repro.core.masks import path_name
+
+    entries = {path_name(p): e for p, e in flat_entries}
+    n_packed = 0
+    for name, m in flat_m.items():
+        e = entries[name]
+        if m is None:
+            assert e is None
+            continue
+        bm = np.asarray(block_mask_of(np.asarray(m, bool), (BLOCK, BLOCK)))
+        idx_ref, cnt_ref = pack_block_mask(bm)
+        ridx_ref, rcnt_ref = pack_block_mask_rows(bm)
+        assert int(e["nnz"]) == int(bm.sum())
+        assert int(e["nkb"]) == bm.shape[0]
+        np.testing.assert_array_equal(np.asarray(e["cnt"]), np.asarray(cnt_ref))
+        # widths are TIGHT: exactly the max per-column/row count, not the
+        # worst case — both the fwd/wgrad (CSC) and dgrad (CSR) grids
+        assert e["idx"].shape[1] == int(np.asarray(cnt_ref).max())
+        np.testing.assert_array_equal(np.asarray(e["idx"]), np.asarray(idx_ref))
+        assert e["ridx"].shape[1] == int(np.asarray(rcnt_ref).max())
+        np.testing.assert_array_equal(np.asarray(e["ridx"]), np.asarray(ridx_ref))
+        np.testing.assert_array_equal(np.asarray(e["rcnt"]), np.asarray(rcnt_ref))
+        n_packed += 1
+    assert n_packed > 0
+    # at 80% block sparsity the summed grid widths must be far below padded
+    stats = pack_stats(st["pack"])
+    assert stats["grid_iters_tight"] < stats["grid_iters_padded"]
+    assert pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK)) == 0
+
+
+# ---------------------------------------------------------------------------
+# equivalence: tight grids == padded grids, bit-identical, fwd and grads
+# ---------------------------------------------------------------------------
+
+def test_tight_equals_padded_bitexact_under_jit(state):
+    cfg, st = state
+    b = batch_for(cfg, 0, 2, 32, learnable=True)
+    # masks passed as jit args are tracers => the no-pack path uses the
+    # traced, worst-case-padded pack; the pack path uses the tight grids
+    h_tight = jax.jit(
+        lambda p, m, pk: lm_forward(p, cfg, b, masks=m, pack=pk)[0]
+    )(st["params"], st["masks"], st["pack"])
+    h_padded = jax.jit(lambda p, m: lm_forward(p, cfg, b, masks=m)[0])(
+        st["params"], st["masks"]
+    )
+    np.testing.assert_array_equal(np.asarray(h_tight), np.asarray(h_padded))
+
+
+def test_tight_grads_match_padded(state):
+    from repro.models import lm_loss
+
+    cfg, st = state
+    b = batch_for(cfg, 0, 2, 32, learnable=True)
+    g_tight = jax.jit(
+        jax.grad(lambda p: lm_loss(p, cfg, b, masks=st["masks"], pack=st["pack"]))
+    )(st["params"])
+    g_padded = jax.jit(
+        jax.grad(lambda p: lm_loss(p, cfg, b, masks=st["masks"]))
+    )(st["params"])
+    ft, fp = tree_paths(g_tight), tree_paths(g_padded)
+    for name in ft:
+        np.testing.assert_allclose(
+            np.asarray(ft[name]), np.asarray(fp[name]),
+            rtol=1e-5, atol=1e-6, err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# refresh on topology update
+# ---------------------------------------------------------------------------
+
+def test_refresh_after_rigl_update_restores_sync():
+    cfg = _cfg()
+    opt = OptConfig(kind="adam", weight_decay=0.0, grad_clip=1.0)
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=2, total_steps=30)
+    st, _, _ = init_train_state(jax.random.PRNGKey(1), cfg, opt)
+    algo = make_algo(cfg, 30)
+    train = jax.jit(make_train_step(cfg, opt, lr))
+    rigl = jax.jit(make_rigl_step(cfg, algo, lr))
+
+    b = batch_for(cfg, 0, 2, 32, learnable=True)
+    st, m = train(st, b)
+    assert int(m["pack_stale"]) == 0
+    st, _ = rigl(st, batch_for(cfg, 1, 2, 32, learnable=True))
+    # topology moved, pack not yet refreshed: the canary must fire
+    stale = int(pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK)))
+    assert stale > 0, "rigl moved no blocks — test cfg too static"
+    st = refresh_pack(st, cfg)
+    assert int(pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK))) == 0
+    st, m = train(st, batch_for(cfg, 2, 2, 32, learnable=True))
+    assert int(m["pack_stale"]) == 0
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_refresh_widths_never_shrink(state):
+    cfg, st = state
+    pack2 = refresh_pack_state(
+        st["masks"], (BLOCK, BLOCK), prev=st["pack"]
+    )
+    flat1 = jax.tree_util.tree_leaves(st["pack"], is_leaf=is_pack_entry)
+    flat2 = jax.tree_util.tree_leaves(pack2, is_leaf=is_pack_entry)
+    for e1, e2 in zip(flat1, flat2):
+        if e1 is None:
+            continue
+        assert e2["idx"].shape[1] >= e1["idx"].shape[1]
+        assert e2["ridx"].shape[1] >= e1["ridx"].shape[1]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_pack(state, tmp_path):
+    cfg, st = state
+    save(st, tmp_path, 5)
+    restored, step = restore(st, tmp_path)
+    assert step == 5
+    f1 = jax.tree_util.tree_leaves(st["pack"], is_leaf=lambda x: x is None)
+    f2 = jax.tree_util.tree_leaves(restored["pack"], is_leaf=lambda x: x is None)
+    assert len(f1) == len(f2) and len(f1) > 0
+    for a, b in zip(f1, f2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the restored pack is still in sync with the restored masks
+    assert int(
+        pack_mismatch(restored["masks"], restored["pack"], (BLOCK, BLOCK))
+    ) == 0
+
+
+def test_restore_pre_packstate_checkpoint(state, tmp_path):
+    """A checkpoint saved WITHOUT a pack (pre-PackState run) restores into a
+    pack-bearing template: restore falls back to the template pack, and
+    refresh_pack makes it consistent with the restored masks."""
+    cfg, st = state
+    legacy = {k: v for k, v in st.items() if k != "pack"}
+    save(legacy, tmp_path, 3)
+    restored, step = restore(st, tmp_path)  # template HAS a pack
+    assert step == 3 and "pack" in restored
+    restored = refresh_pack(restored, cfg)
+    assert int(
+        pack_mismatch(restored["masks"], restored["pack"], (BLOCK, BLOCK))
+    ) == 0
+
+
+def test_restore_missing_real_leaf_still_raises(state, tmp_path):
+    """The pack/ fallback must not mask genuinely corrupt checkpoints."""
+    cfg, st = state
+    partial = {k: v for k, v in st.items() if k != "opt"}
+    save(partial, tmp_path, 4)
+    with pytest.raises(KeyError, match="opt"):
+        restore(st, tmp_path, step=4)
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode reuse one pack, logits unchanged
+# ---------------------------------------------------------------------------
+
+def test_decode_path_pack_reuse(state):
+    cfg, st = state
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    kw = dict(masks=st["masks"])
+    logits_np, caches_np = lm_prefill(
+        st["params"], cfg, {"tokens": tokens[:, :8]}, max_len=16, **kw
+    )
+    logits_pk, caches_pk = lm_prefill(
+        st["params"], cfg, {"tokens": tokens[:, :8]}, max_len=16,
+        pack=st["pack"], **kw
+    )
+    np.testing.assert_array_equal(np.asarray(logits_np), np.asarray(logits_pk))
+    for t in range(8, 12):
+        step_tok = tokens[:, t : t + 1]
+        logits_np, caches_np = lm_decode(
+            st["params"], cfg, caches_np, step_tok, pos=t, **kw
+        )
+        # the SAME pack object is reused every decode step — no re-packing
+        logits_pk, caches_pk = lm_decode(
+            st["params"], cfg, caches_pk, step_tok, pos=t,
+            pack=st["pack"], **kw
+        )
+        np.testing.assert_array_equal(
+            np.asarray(logits_np), np.asarray(logits_pk), err_msg=f"pos {t}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# loud errors (referenced from docs/kernels.md)
+# ---------------------------------------------------------------------------
+
+def test_pack_truncation_error_is_loud():
+    bm = np.ones((4, 2), bool)
+    with pytest.raises(ValueError, match="docs/kernels.md"):
+        pack_block_mask(bm, max_count=2)
+
+
+def test_empty_layer_error_is_loud():
+    dead = jnp.zeros((64, 64), bool)
+    with pytest.raises(ValueError, match="docs/kernels.md"):
+        pack_entry(dead, (BLOCK, BLOCK), name="layers/0/mlp/wi/w")
+
+
+def test_block_sparse_linear_requires_topology():
+    from repro.kernels.ops import block_sparse_linear
+
+    x = jnp.ones((8, 32), jnp.float32)
+    w = jnp.ones((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="docs/kernels.md"):
+        block_sparse_linear(x, w)

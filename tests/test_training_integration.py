@@ -181,6 +181,9 @@ def test_block_sparse_kernel_trains_end_to_end(monkeypatch):
     monkeypatch.setattr(steps_mod, "apply_masks", spy)
     monkeypatch.setattr(model_mod, "apply_masks", spy)
 
+    from repro.training import refresh_pack
+
+    assert "pack" in state, "block_sparse state must carry PackState"
     train = jax.jit(make_train_step(cfg, opt, lr))
     rigl = jax.jit(make_rigl_step(cfg, algo, lr))
     losses = []
@@ -188,11 +191,16 @@ def test_block_sparse_kernel_trains_end_to_end(monkeypatch):
         b = batch_for(cfg, t, 4, 32, learnable=True)
         if t > 0 and t % 10 == 0 and t < algo.schedule.t_end:
             state, m = rigl(state, b)  # dense backward, amortized — MAY apply
+            # driver contract: every topology update re-packs the tight grids
+            state = refresh_pack(state, cfg)
         else:
             n_before = calls["n"]
             state, m = train(state, b)
             assert calls["n"] == n_before, (
                 "train_step materialized w*m despite kernel dispatch"
+            )
+            assert int(m["pack_stale"]) == 0, (
+                "PackState out of sync with masks (missing refresh_pack?)"
             )
         losses.append(float(m["loss"]))
 
