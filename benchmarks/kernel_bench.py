@@ -117,6 +117,186 @@ def _tight_vs_padded_rows(key):
     return rows
 
 
+def _ssm_rows(key):
+    """SSM projection rows (hymba's in_proj/out_proj shapes, scaled down):
+    dense vs masked vs block_sparse for the newly dispatched family."""
+    M, d, d_in = 512, 256, 512  # in_proj: (d, 2*d_in) at d_in = 2*d
+    K, N = d, 2 * d_in
+    x = jax.random.normal(jax.random.fold_in(key, 20), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 21), (K, N), jnp.float32)
+    rows = []
+    t_dense = _time(jax.jit(lambda a, b: a @ b), x, w, iters=10)
+    t_dense_bwd = _time_grad(lambda a, b: a @ b, x, w, iters=5)
+    rows.append({
+        "name": "kernel/ssm_in_proj_dense",
+        "us_per_call": t_dense + t_dense_bwd,
+        "derived": {"hbm_bytes": 3 * F32 * (M * K + K * N + M * N)},
+    })
+    for density, mode in ((0.2, "masked"), (0.2, "block_sparse")):
+        if mode == "masked":
+            m = jax.random.uniform(jax.random.fold_in(key, 22), (K, N)) < density
+            t = _time(jax.jit(ref.masked_matmul_ref), x, w, m, iters=10)
+            t_bwd = _time_grad(
+                lambda a, b: ref.masked_matmul_ref(a, b, m), x, w, iters=5
+            )
+            derived = _masked_traffic(M, K, N)
+        else:
+            bm = jax.random.uniform(
+                jax.random.fold_in(key, 23), (K // 128, N // 128)
+            ) < density
+            t = _time(
+                jax.jit(lambda a, b: ref.block_sparse_matmul_ref(a, b, bm, 128, 128)),
+                x, w, iters=10,
+            )
+            t_bwd = _time_grad(
+                lambda a, b: ref.block_sparse_matmul_ref(a, b, bm, 128, 128),
+                x, w, iters=5,
+            )
+            dd = float(bm.mean())
+            derived = {
+                "block_density": round(dd, 3),
+                "mxu_flops_fraction_fwd_bwd": round(dd, 3),
+                "tpu_speedup_bound_fwd_bwd": round(1 / max(dd, 1e-3), 2),
+            }
+        rows.append({
+            "name": f"kernel/ssm_in_proj_{mode}_d{density}",
+            "us_per_call": t + t_bwd,
+            "derived": derived,
+        })
+    return rows
+
+
+def _moe_grouped_rows(key):
+    """Grouped (per-expert, one-launch) rows for the MoE expert-bank einsum
+    ecd,edf->ecf: dense vs masked vs block_sparse refs, interpret-mode parity
+    for the grouped Pallas kernels, and grouped tight-vs-padded grids."""
+    from repro.kernels.block_sparse_matmul import pack_group_mask
+    from repro.kernels.ops import (
+        grouped_block_sparse_linear,
+        grouped_masked_linear,
+    )
+
+    E, C, d, f, bkn = 4, 128, 256, 256, 128
+    x = jax.random.normal(jax.random.fold_in(key, 30), (E, C, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 31), (E, d, f), jnp.float32)
+    rows = []
+    eins = lambda a, b: jnp.einsum("ecd,edf->ecf", a, b)
+    t_dense = _time(jax.jit(eins), x, w, iters=10)
+    t_dense_bwd = _time_grad(eins, x, w, iters=5)
+    rows.append({
+        "name": "kernel/moe_grouped_dense",
+        "us_per_call": t_dense + t_dense_bwd,
+        "derived": {
+            "experts": E,
+            "hbm_bytes": 3 * F32 * E * (C * d + d * f + C * f),
+        },
+    })
+    density = 0.25
+    m = jax.random.uniform(jax.random.fold_in(key, 32), (E, d, f)) < density
+    t = _time(jax.jit(ref.grouped_masked_matmul_ref), x, w, m, iters=10)
+    t_bwd = _time_grad(
+        lambda a, b: ref.grouped_masked_matmul_ref(a, b, m), x, w, iters=5
+    )
+    per = _masked_traffic(C, d, f)
+    rows.append({
+        "name": f"kernel/moe_grouped_masked_d{density}",
+        "us_per_call": t + t_bwd,
+        "derived": {
+            "experts": E,
+            "launches": 1,  # ONE grouped launch for the whole bank
+            "fwd_bytes_fused": E * per["fwd_bytes_fused"],
+            "bwd_bytes_fused": E * per["bwd_bytes_fused"],
+            "weight_traffic_saving_fwd_bwd":
+                per["weight_traffic_saving_fwd_bwd"],
+        },
+    })
+    bm = jax.random.uniform(
+        jax.random.fold_in(key, 33), (E, d // bkn, f // bkn)
+    ) < density
+    t2 = _time(
+        jax.jit(lambda a, b: ref.grouped_block_sparse_matmul_ref(a, b, bm, bkn, bkn)),
+        x, w, iters=10,
+    )
+    t2_bwd = _time_grad(
+        lambda a, b: ref.grouped_block_sparse_matmul_ref(a, b, bm, bkn, bkn),
+        x, w, iters=5,
+    )
+    dd = float(bm.mean())
+    rows.append({
+        "name": f"kernel/moe_grouped_block_sparse_d{density}",
+        "us_per_call": t2 + t2_bwd,
+        "derived": {
+            "experts": E,
+            "launches": 1,
+            "block_density": round(dd, 3),
+            "mxu_flops_fraction_fwd_bwd": round(dd, 3),
+            "wgrad_blocks_computed": int(np.asarray(bm).sum()),
+            "wgrad_blocks_total": int(bm.size),
+            "tpu_speedup_bound_fwd_bwd": round(1 / max(dd, 1e-3), 2),
+        },
+    })
+    # grouped tight-vs-padded grids (PackState grouped entries): same kernel,
+    # same stacked topology — only the shared width differs.  Interpret-mode
+    # wall-time RATIO tracks the launched-iteration ratio (see the 2-D rows).
+    Eg, Mg, Kg, Ng, bg = 4, 128, 512, 256, 128
+    nkb = Kg // bg
+    xg = jax.random.normal(jax.random.fold_in(key, 34), (Eg, Mg, Kg), jnp.float32)
+    wg = jax.random.normal(jax.random.fold_in(key, 35), (Eg, Kg, Ng), jnp.float32)
+    for sparsity in (0.8, 0.9):
+        bmg = np.array(np.asarray(
+            jax.random.uniform(
+                jax.random.fold_in(key, int(1000 * sparsity)),
+                (Eg, nkb, Ng // bg),
+            ) < (1 - sparsity)
+        ))
+        if bmg.sum() == 0:
+            bmg[0, 0, 0] = True
+        tight = pack_group_mask(bmg)
+        padded = pack_group_mask(bmg, max_count=nkb)
+        f_tight = lambda a, b: grouped_block_sparse_linear(
+            a, b, block=(128, bg, bg), pack=tight, interpret=True
+        )
+        f_padded = lambda a, b: grouped_block_sparse_linear(
+            a, b, block=(128, bg, bg), pack=padded, interpret=True
+        )
+        t_t = _time(f_tight, xg, wg, iters=2)
+        t_p = _time(f_padded, xg, wg, iters=2)
+        width = int(tight[0].shape[-1])
+        rows.append({
+            "name": f"kernel/moe_grouped_tight_vs_padded_s{sparsity}",
+            "us_per_call": t_t,
+            "derived": {
+                "us_per_call_padded": t_p,
+                "grid_iters_tight": Eg * (Mg // 128) * (Ng // bg) * width,
+                "grid_iters_padded": Eg * (Mg // 128) * (Ng // bg) * nkb,
+                "grid_fraction": round(width / nkb, 3),
+                "active_blocks": int(bmg.sum()),
+                "bit_identical": bool(
+                    jnp.array_equal(f_tight(xg, wg), f_padded(xg, wg))
+                ),
+            },
+        })
+    # interpret-mode parity canaries for the grouped Pallas kernels
+    xs = jax.random.normal(jax.random.fold_in(key, 36), (2, 64, 128), jnp.float32)
+    ws = jax.random.normal(jax.random.fold_in(key, 37), (2, 128, 128), jnp.float32)
+    ms = jax.random.uniform(jax.random.fold_in(key, 38), (2, 128, 128)) < 0.25
+    err_m = float(jnp.max(jnp.abs(
+        grouped_masked_linear(xs, ws, ms, interpret=True)
+        - ref.grouped_masked_matmul_ref(xs, ws, ms)
+    )))
+    bms = jax.random.uniform(jax.random.fold_in(key, 39), (2, 1, 1)) < 0.5
+    err_b = float(jnp.max(jnp.abs(
+        grouped_block_sparse_linear(xs, ws, bms, block=(128, 128, 128), interpret=True)
+        - ref.grouped_block_sparse_matmul_ref(xs, ws, bms, 128, 128)
+    )))
+    rows.append({
+        "name": "kernel/grouped_pallas_parity_max_abs_err",
+        "us_per_call": 0.0,
+        "derived": {"grouped_masked": err_m, "grouped_block_sparse": err_b},
+    })
+    return rows
+
+
 def run(quick=True):
     M = K = N = 1024
     key = jax.random.PRNGKey(0)
@@ -194,6 +374,11 @@ def run(quick=True):
     # TPU the padded slots are empty iterations (no DMA/FLOPs), so the win is
     # launch overhead, not bandwidth — outputs are bit-identical either way.
     rows.extend(_tight_vs_padded_rows(key))
+    # newly dispatched families (total-dispatch PR): ssm projections and the
+    # grouped per-expert MoE einsums — dense vs masked vs block_sparse, plus
+    # grouped tight-vs-padded grids and grouped-kernel parity canaries.
+    rows.extend(_ssm_rows(key))
+    rows.extend(_moe_grouped_rows(key))
     # interpret-mode correctness canaries for the Pallas path itself (cheap
     # shapes — wall time here is NOT meaningful, only parity is)
     xs = jax.random.normal(key, (128, 256), jnp.float32)

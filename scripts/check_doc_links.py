@@ -1,12 +1,19 @@
 #!/usr/bin/env python3
-"""Doc-link check: every file referenced from README.md / docs/*.md exists.
+"""Doc-link check: every file/symbol referenced from *.md docs exists.
 
 Catches the classic docs-rot failure where a refactor moves or deletes a file
-that the docs still point at.  Two kinds of references are checked:
+(or renames a function) that the docs still point at.  Three kinds of
+references are checked:
 
   * markdown links ``[text](path)`` with a relative, non-URL target
     (resolved against the file containing the link; ``#anchors`` stripped);
-  * backticked repo paths like ``src/repro/core/pack.py`` or ``tests/``.
+  * backticked repo paths like ``src/repro/core/pack.py`` or ``tests/``;
+  * backticked code references ``path.py::symbol`` (e.g.
+    ``training/steps.py::make_train_step``): the path resolves repo-root
+    relative or ``src/repro``-relative, and ``symbol`` (its first dotted
+    component) must be defined in that file as a ``def``, ``class`` or
+    module-level assignment.  This is what keeps prose like the dispatch
+    coverage matrix in docs/kernels.md from drifting away from refactors.
 
 Exits nonzero listing every missing target.  Run via ``make docs-check`` or
 as part of ``make verify``.
@@ -26,11 +33,35 @@ CODE_PATH = re.compile(
     r"`((?:src|tests|benchmarks|examples|docs|scripts)/[A-Za-z0-9_./-]*"
     r"|[A-Za-z0-9_.-]+\.(?:md|json|txt))`"
 )
+# `path/to/file.py::symbol` (symbol may be dotted: Class.attr checks Class)
+SYM_REF = re.compile(
+    r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.py)::([A-Za-z_][A-Za-z0-9_.]*)`"
+)
 
 
 def doc_files():
     yield from sorted(ROOT.glob("*.md"))
     yield from sorted(ROOT.glob("docs/*.md"))
+
+
+def _resolve_py(path: str) -> pathlib.Path | None:
+    """Resolve a ::symbol path root-relative, then src/repro-relative."""
+    for base in (ROOT, ROOT / "src" / "repro"):
+        p = base / path
+        if p.exists():
+            return p
+    return None
+
+
+def _symbol_defined(py: pathlib.Path, symbol: str) -> bool:
+    """True iff the file defines ``symbol``'s first dotted component at the
+    top level (def/class/assignment — a regex heuristic, no import needed)."""
+    head = re.escape(symbol.split(".")[0])
+    text = py.read_text()
+    pat = re.compile(
+        rf"^(?:def\s+{head}\b|class\s+{head}\b|{head}\s*[:=])", re.M
+    )
+    return bool(pat.search(text))
 
 
 def check_file(md: pathlib.Path) -> list[str]:
@@ -47,8 +78,21 @@ def check_file(md: pathlib.Path) -> list[str]:
             missing.append(f"{md.relative_to(ROOT)}: link target {target!r}")
     for target in CODE_PATH.findall(text):
         # backticked paths are repo-root relative by convention
+        # (`path::symbol` refs never match CODE_PATH — SYM_REF handles them)
         if not (ROOT / target).exists():
             missing.append(f"{md.relative_to(ROOT)}: code path `{target}`")
+    for path, symbol in SYM_REF.findall(text):
+        py = _resolve_py(path)
+        if py is None:
+            missing.append(
+                f"{md.relative_to(ROOT)}: code ref `{path}::{symbol}` "
+                "(file not found)"
+            )
+        elif not _symbol_defined(py, symbol):
+            missing.append(
+                f"{md.relative_to(ROOT)}: code ref `{path}::{symbol}` "
+                f"(symbol not defined in {py.relative_to(ROOT)})"
+            )
     return missing
 
 

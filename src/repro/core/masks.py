@@ -63,31 +63,42 @@ def random_block_mask(key, shape, sparsity: float, block_shape, dtype=jnp.bool_)
     Required when the topology executes through the block-sparse kernel from
     step 0 — elementwise random masks are not block-aligned until the first
     block-mode RigL update, and the kernel runs whole active blocks unmasked.
-    Falls back to elementwise masks when the block doesn't tile the shape
-    (such layers must not be dispatched to the block kernel; the dispatch
-    layer's reshape fails loudly if they are).
+    3-D shapes (grouped weight banks: MoE experts (E, d, ff), xLSTM per-head
+    recurrences (nh, hd, 4hd)) draw per-group block masks over the TRAILING
+    two dims — the grouped kernels' block granularity.  Falls back to
+    elementwise masks when the block doesn't tile the (trailing) shape (such
+    layers must not be dispatched to the block kernel; init_train_state
+    rejects them loudly in block_sparse mode).
     """
     bm_, bn_ = block_shape
-    if len(shape) != 2 or shape[0] % bm_ or shape[1] % bn_:
+    if (
+        len(shape) not in (2, 3)
+        or shape[-2] % bm_
+        or shape[-1] % bn_
+    ):
         return random_mask(key, shape, sparsity, dtype)
-    blk = random_mask(key, (shape[0] // bm_, shape[1] // bn_), sparsity)
+    blk = random_mask(
+        key, (*shape[:-2], shape[-2] // bm_, shape[-1] // bn_), sparsity
+    )
     return (
-        jnp.repeat(jnp.repeat(blk, bm_, axis=0), bn_, axis=1).astype(dtype)
+        jnp.repeat(jnp.repeat(blk, bm_, axis=-2), bn_, axis=-1).astype(dtype)
     )
 
 
 def block_mask_of(mask, block_shape):
-    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask.
+    """Elementwise (..., K, N) mask -> (..., K/bk, N/bn) block-activity mask.
 
     A block is active iff ANY of its elements is active.  Works on both numpy
     (host-side PackState builds, core/pack.py) and jnp (traced consistency
     checks) arrays, returning the same kind.  block_shape is (bk, bn) — the
-    kernel's (K-tile, N-tile), i.e. ``cfg.sparse.block_shape``.
+    kernel's (K-tile, N-tile), i.e. ``cfg.sparse.block_shape``.  A leading
+    group dim (3-D weight banks) passes through: blocks tile the trailing two
+    dims per group, matching the grouped kernels.
     """
     bk, bn = block_shape
-    K, N = mask.shape
+    *lead, K, N = mask.shape
     assert K % bk == 0 and N % bn == 0, (mask.shape, block_shape)
-    return mask.reshape(K // bk, bk, N // bn, bn).any(axis=(1, 3))
+    return mask.reshape(*lead, K // bk, bk, N // bn, bn).any(axis=(-3, -1))
 
 
 def init_masks(key, params, sparsities: Mapping[str, float], block_shape=None):

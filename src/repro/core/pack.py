@@ -41,6 +41,11 @@ Entry layout (one per packable mask leaf, ``None`` elsewhere):
    "nnz":  () int32,              # total active blocks (bookkeeping/bench)
    "nkb":  () int32}              # K/bk — the CSC padded worst-case width
 
+Grouped weight banks (3-D masks: MoE per-expert (E, d, ff), xLSTM per-head
+(nh, hd, 4hd)) carry the same entry with a leading group dim on idx/cnt/
+ridx/rcnt — per-group CSC/CSR at ONE shared width, consumed by the grouped
+kernels in a single launch (docs/kernels.md#grouped-packs).
+
 Width policy: ``width = max_j cnt[j]`` (tight; same for ``row_width`` over
 ``rcnt``), but never below the width of ``prev`` when refreshing — widths only
 ever grow within a run, so jit retraces on topology updates are bounded by the
@@ -71,13 +76,15 @@ def is_pack_entry(x) -> bool:
     return x is None or (isinstance(x, dict) and "idx" in x and "cnt" in x)
 
 
-# Only these param subtrees are dispatched through layers.linear and consume
-# packs (models/model.py); ssm/xlstm/moe fall back to w*m at submodule
-# granularity (_local_masked) where an all-zero layer is well-defined, so
-# packing them would both waste host/checkpoint space and mis-fire the
-# dead-layer error below.  Extend when more submodules join kernel dispatch
-# (ROADMAP "Dispatch coverage").
-DISPATCHED_SUBTREES = ("attn", "mlp")
+# Param subtrees whose 2-D weight einsums dispatch through layers.linear /
+# layers.grouped_linear and therefore consume packs (models/).  Since the
+# total-dispatch PR this covers EVERY model family: transformer attention +
+# MLP, hymba's SSM projections, xLSTM's mLSTM/sLSTM projections (incl. the
+# grouped per-head recurrence), and MoE expert banks + shared experts
+# (grouped per-expert CSC/CSR — see docs/kernels.md#grouped-packs).  The
+# remaining non-matmul leaves (scan carries, gates, convs, routers) are dense
+# and never masked, so they have no entries by construction.
+DISPATCHED_SUBTREES = ("attn", "mlp", "ssm", "slstm", "mlstm", "moe")
 
 
 def _dispatched(name: str) -> bool:
@@ -88,9 +95,9 @@ def _packable(m, block_shape) -> bool:
     bk, bn = block_shape
     return (
         m is not None
-        and m.ndim == 2
-        and m.shape[0] % bk == 0
-        and m.shape[1] % bn == 0
+        and m.ndim in (2, 3)
+        and m.shape[-2] % bk == 0
+        and m.shape[-1] % bn == 0
     )
 
 
@@ -100,19 +107,30 @@ def pack_entry(
 ):
     """Host-pack ONE mask leaf into a PackState entry (CSC + CSR views).
 
+    2-D masks pack as before; 3-D masks (grouped weight banks — MoE experts,
+    xLSTM per-head recurrences) pack PER GROUP over the trailing two dims,
+    stacked at one shared width (``idx (G, N/bn, width)`` etc.) so the
+    grouped kernels execute the whole bank in one launch.
+
     Raises loudly (rather than packing an all-zero topology) when the layer
     has no active blocks at all: the block-sparse forward would silently
     output zeros for the whole layer, which is never what a sparsity
     distribution intends — see docs/kernels.md#empty-columns-and-dead-layers.
-    Individual all-zero COLUMNS are fine (the kernel writes zeros for them).
+    Individual all-zero COLUMNS are fine (the kernel writes zeros for them),
+    and so is an all-zero GROUP of a grouped bank: a dead expert/head outputs
+    zeros, which is semantically well-defined under MoE routing — only the
+    bank-level all-zero case raises.
     """
     from ..kernels.block_sparse_matmul import (
         pack_block_mask,
         pack_block_mask_rows,
+        pack_group_mask,
+        pack_group_mask_rows,
     )
 
     bm = np.asarray(block_mask_of(np.asarray(mask, bool), block_shape))
-    nkb, nnb = bm.shape
+    grouped = bm.ndim == 3
+    nkb, nnb = bm.shape[-2], bm.shape[-1]
     total = int(bm.sum())
     if total == 0:
         raise ValueError(
@@ -122,10 +140,14 @@ def pack_entry(
             "sparsity to a layer smaller than one block; see "
             "docs/kernels.md#empty-columns-and-dead-layers"
         )
-    width = min(max(int(bm.sum(axis=0).max()), 1, min_width), nkb)
-    row_width = min(max(int(bm.sum(axis=1).max()), 1, min_row_width), nnb)
-    idx, cnt = pack_block_mask(bm, max_count=width)
-    ridx, rcnt = pack_block_mask_rows(bm, max_count=row_width)
+    width = min(max(int(bm.sum(axis=-2).max()), 1, min_width), nkb)
+    row_width = min(max(int(bm.sum(axis=-1).max()), 1, min_row_width), nnb)
+    if grouped:
+        idx, cnt = pack_group_mask(bm, max_count=width)
+        ridx, rcnt = pack_group_mask_rows(bm, max_count=row_width)
+    else:
+        idx, cnt = pack_block_mask(bm, max_count=width)
+        ridx, rcnt = pack_block_mask_rows(bm, max_count=row_width)
     return {
         "idx": idx,
         "cnt": cnt,
@@ -159,9 +181,9 @@ def build_pack_state(masks, block_shape, *, prev=None):
         if not _packable(m, block_shape) or not _dispatched(name):
             entries.append(None)
             continue
-        min_w = int(pe["idx"].shape[1]) if pe is not None else 0
+        min_w = int(pe["idx"].shape[-1]) if pe is not None else 0
         min_rw = (
-            int(pe["ridx"].shape[1]) if pe is not None and "ridx" in pe else 0
+            int(pe["ridx"].shape[-1]) if pe is not None and "ridx" in pe else 0
         )
         entries.append(
             pack_entry(
@@ -205,7 +227,12 @@ def pack_mismatch(masks, pack, block_shape):
         if e is None or not _packable(m, block_shape):
             continue
         bm = block_mask_of(m, block_shape)
-        rec = unpack_block_mask(e["idx"], e["cnt"], bm.shape[0])
+        if e["idx"].ndim == 3:  # grouped bank: per-group reconstruction
+            rec = jax.vmap(
+                lambda i_, c_: unpack_block_mask(i_, c_, bm.shape[-2])
+            )(e["idx"], e["cnt"])
+        else:
+            rec = unpack_block_mask(e["idx"], e["cnt"], bm.shape[0])
         total = total + jnp.sum(rec != bm).astype(jnp.int32)
     return total
 
@@ -219,18 +246,20 @@ def pack_stats(pack) -> dict[str, Any]:
         if e is None:
             continue
         name = path_name(path)
-        width = int(e["idx"].shape[1])
+        width = int(e["idx"].shape[-1])
         nkb = int(e["nkb"])
+        groups = int(e["idx"].shape[0]) if e["idx"].ndim == 3 else 1
         out["layers"][name] = {
             "width": width,
             "worst_case": nkb,
             "grid_fraction": width / nkb,
-            "row_width": int(e["ridx"].shape[1]) if "ridx" in e else None,
+            "row_width": int(e["ridx"].shape[-1]) if "ridx" in e else None,
             "nnz_blocks": int(e["nnz"]),
-            "cols": int(e["cnt"].shape[0]),
+            "cols": int(e["cnt"].shape[-1]),
+            "groups": groups,
         }
-        tight += width
-        padded += nkb
+        tight += width * groups
+        padded += nkb * groups
     out["grid_iters_tight"] = tight
     out["grid_iters_padded"] = padded
     out["grid_fraction"] = tight / padded if padded else 1.0

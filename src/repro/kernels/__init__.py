@@ -6,6 +6,8 @@ per-kernel modules hold the pallas_call plumbing and backward kernels.
 from .ops import (  # noqa: F401
     auto_interpret,
     block_sparse_linear,
+    grouped_block_sparse_linear,
+    grouped_masked_linear,
     masked_linear,
     topk_threshold,
 )
@@ -13,6 +15,8 @@ from .ops import (  # noqa: F401
 __all__ = [
     "auto_interpret",
     "block_sparse_linear",
+    "grouped_block_sparse_linear",
+    "grouped_masked_linear",
     "masked_linear",
     "topk_threshold",
 ]

@@ -33,6 +33,16 @@ Packing comes in two flavours:
 
 Grid: (M/bm, N/bn, max_active_k); zero-count columns clamp to block 0 and are
 fully masked by @pl.when (the clamp keeps indices non-negative — see _clamp).
+
+Grouped variant (``grouped_block_sparse_matmul``): a leading group dim G is
+prepended to everything — x (G, M, K), w (G, K, N), stacked per-group packs
+(idx (G, N/bn, width), shared width = max over groups) — and the grid grows a
+leading G dimension, so ALL groups execute in ONE kernel launch.  This is how
+MoE's per-expert ``ecd,edf->ecf`` expert banks and xLSTM's per-head
+``bnh,nhk->bnk`` recurrent projections run block-sparse (models/moe.py,
+models/xlstm.py via layers.grouped_linear): no per-expert launch loop, no
+concatenated block-diagonal weights.  Same custom-VJP structure (grouped
+dgrad/wgrad kernels + per-group scatter).
 """
 from __future__ import annotations
 
@@ -45,10 +55,15 @@ from jax.experimental import pallas as pl
 
 __all__ = [
     "block_sparse_matmul",
+    "grouped_block_sparse_matmul",
     "pack_block_mask",
     "pack_block_mask_rows",
     "pack_block_mask_traced",
     "pack_block_mask_rows_traced",
+    "pack_group_mask",
+    "pack_group_mask_rows",
+    "pack_group_mask_traced",
+    "pack_group_mask_rows_traced",
     "unpack_block_mask",
 ]
 
@@ -124,6 +139,46 @@ def pack_block_mask_rows_traced(block_mask):
     return _pack_jnp(block_mask.T, block_mask.shape[1])
 
 
+def pack_group_mask(block_masks, max_count=None):
+    """Stacked per-group CSC pack of a (G, K/bk, N/bn) bool block-mask stack.
+
+    Returns (idx (G, N/bn, width) int32, cnt (G, N/bn) int32) with ONE shared
+    ``width`` (``max_count`` or the max active-K count over all groups and
+    columns) so a single grouped kernel grid covers every group.  Groups with
+    no active blocks at all are legal here — their counts are all zero and the
+    grouped kernel writes zeros for them (a dead MoE expert behaves like an
+    empty column, see docs/kernels.md#empty-columns-and-dead-layers); the
+    bank-level dead check lives in core.pack.pack_entry.  Like
+    ``pack_block_mask``, a ``max_count`` below some column's true count raises
+    rather than silently truncating the matmul.
+    """
+    bms = np.asarray(block_masks, bool)
+    assert bms.ndim == 3, bms.shape
+    if max_count is None:
+        max_count = max(int(bms.sum(axis=1).max(initial=0)), 1)
+    packed = [_pack_np(b, max_count) for b in bms]
+    idx = np.stack([i for i, _ in packed])
+    cnt = np.stack([c for _, c in packed])
+    return jnp.asarray(idx), jnp.asarray(cnt)
+
+
+def pack_group_mask_rows(block_masks, max_count=None):
+    """Stacked per-group CSR pack — the grouped dgrad kernel's view."""
+    return pack_group_mask(
+        np.asarray(block_masks).transpose(0, 2, 1), max_count
+    )
+
+
+def pack_group_mask_traced(block_masks):
+    """jit-safe stacked CSC pack; padded width = K/bk (static worst case)."""
+    return jax.vmap(lambda b: _pack_jnp(b, b.shape[0]))(block_masks)
+
+
+def pack_group_mask_rows_traced(block_masks):
+    """jit-safe stacked CSR pack; padded width = N/bn (static worst case)."""
+    return jax.vmap(lambda b: _pack_jnp(b.T, b.shape[1]))(block_masks)
+
+
 def unpack_block_mask(block_idx, block_cnt, n_rows: int):
     """CSC ``(idx, cnt)`` -> (n_rows, n_cols) bool block mask (traced-safe).
 
@@ -146,6 +201,13 @@ def _clamp(idx_ref, cnt_ref, row, s):
     clamp to 0 (guarded off by @pl.when in the kernel body).
     """
     return idx_ref[row, jnp.maximum(jnp.minimum(s, cnt_ref[row] - 1), 0)]
+
+
+def _gclamp(idx_ref, cnt_ref, g, row, s):
+    """_clamp for stacked (G, rows, width) packs: group g's row/slot lookup."""
+    return idx_ref[
+        g, row, jnp.maximum(jnp.minimum(s, cnt_ref[g, row] - 1), 0)
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -412,5 +474,251 @@ def block_sparse_matmul(
         bmask = unpack_block_mask(block_idx, block_cnt, K // bk)
         row_idx, row_cnt = _pack_jnp(bmask.T, N // bn)
     return _block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# grouped kernels: one grid launch for a whole (G, K, N) weight bank
+# ---------------------------------------------------------------------------
+
+def _g_fwd_kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k < cnt_ref[g, j])
+    def _accum():
+        acc_ref[...] += jnp.dot(
+            x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+def _g_dx_kernel(ridx_ref, rcnt_ref, g_ref, w_ref, o_ref, acc_ref, *, n_s: int):
+    """Grouped dgrad: dx[g] (bm, bk) += g[g] (bm, bn) @ w[g] (bk, bn)ᵀ."""
+    s = pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(s < rcnt_ref[g, k])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            g_ref[0], w_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s == n_s - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+
+
+def _g_dw_kernel(idx_ref, cnt_ref, x_ref, g_ref, o_ref, acc_ref, *, n_m: int):
+    """Grouped packed wgrad: slot (g, j, s) holds x[g]ᵀ @ g[g] for active
+    block (idx[g, j, s], j) of group g; padded slots store zeros."""
+    i = pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s < cnt_ref[g, j])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0], g_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        o_ref[...] = jnp.where(
+            s < cnt_ref[g, j], acc_ref[...], jnp.zeros_like(acc_ref)
+        ).astype(o_ref.dtype)[None, None]
+
+
+def _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+
+    G, M, K = x.shape
+    N = w.shape[2]
+    max_k = block_idx.shape[2]
+    grid = (G, M // bm, N // bn, max_k)
+
+    def x_map(g, m, n, k, idx_ref, cnt_ref):
+        return (g, m, _gclamp(idx_ref, cnt_ref, g, n, k))
+
+    def w_map(g, m, n, k, idx_ref, cnt_ref):
+        return (g, _gclamp(idx_ref, cnt_ref, g, n, k), n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), x_map),
+            pl.BlockSpec((1, bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, m, n, k, *_: (g, m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_g_fwd_kernel, n_k=max_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        interpret=interpret,
+    )(block_idx, block_cnt, x, w)
+
+
+def _g_dx_call(g_, w, row_idx, row_cnt, bm, bn, bk, interpret, out_dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    G, M, N = g_.shape
+    K = w.shape[1]
+    max_n = row_idx.shape[2]
+    grid = (G, M // bm, K // bk, max_n)
+
+    def g_map(g, m, k, s, ridx_ref, rcnt_ref):
+        return (g, m, _gclamp(ridx_ref, rcnt_ref, g, k, s))
+
+    def w_map(g, m, k, s, ridx_ref, rcnt_ref):
+        return (g, k, _gclamp(ridx_ref, rcnt_ref, g, k, s))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), g_map),
+            pl.BlockSpec((1, bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bk), lambda g, m, k, s, *_: (g, m, k)),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_g_dx_kernel, n_s=max_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, M, K), out_dtype),
+        interpret=interpret,
+    )(row_idx, row_cnt, g_, w)
+
+
+def _g_dw_call(x, g_, block_idx, block_cnt, bm, bn, bk, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+
+    G, M, K = x.shape
+    N = g_.shape[2]
+    nnb = N // bn
+    max_k = block_idx.shape[2]
+    n_m = M // bm
+    grid = (G, nnb, max_k, n_m)
+
+    def x_map(g, j, s, i, idx_ref, cnt_ref):
+        return (g, i, _gclamp(idx_ref, cnt_ref, g, j, s))
+
+    def g_map(g, j, s, i, idx_ref, cnt_ref):
+        return (g, i, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), x_map),
+            pl.BlockSpec((1, bm, bn), g_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bk, bn), lambda g, j, s, i, *_: (g, j * max_k + s, 0, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_g_dw_kernel, n_m=n_m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, nnb * max_k, bk, bn), jnp.float32),
+        interpret=interpret,
+    )(block_idx, block_cnt, x, g_)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _grouped_block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
+):
+    return _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _gbs_fwd(x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret):
+    out = _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (x, w, block_idx, block_cnt, row_idx, row_cnt)
+
+
+def _gbs_bwd(bm, bn, bk, interpret, res, g):
+    x, w, block_idx, block_cnt, row_idx, row_cnt = res
+    K, N = w.shape[1], w.shape[2]
+    nkb = K // bk
+
+    dx = _g_dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _g_dw_call(x, g, block_idx, block_cnt, bm, bn, bk, interpret)
+    dw = jax.vmap(
+        lambda p_, i_, c_: _scatter_packed_dw(p_, i_, c_, nkb, bk, bn, w.dtype)
+    )(packed, block_idx, block_cnt)
+
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, dw, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt)
+
+
+_grouped_block_sparse_matmul.defvjp(_gbs_fwd, _gbs_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    row_idx=None,
+    row_cnt=None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """Grouped x: (G, M, K) @ block-sparse w: (G, K, N) -> (G, M, N).
+
+    The grouped twin of ``block_sparse_matmul``: one kernel launch executes
+    every group's block-sparse matmul (grid gains a leading G dim), driven by
+    STACKED packs — ``block_idx (G, N/bn, width)`` / ``block_cnt (G, N/bn)``
+    from ``pack_group_mask`` (shared width = max over groups).  This is the
+    execution path for MoE expert banks (``ecd,edf->ecf``) and xLSTM per-head
+    recurrent projections (``bnh,nhk->bnk`` after moving heads to the group
+    dim) — see layers.grouped_linear.
+
+    row_idx/row_cnt: optional stacked CSR ((G, K/bk, row_width) / (G, K/bk))
+    for a tight grouped dgrad grid; derived at the worst-case width N/bn when
+    omitted (dead-code-eliminated if never differentiated).
+
+    Differentiable: grouped custom-VJP dgrad/wgrad kernels; the packed wgrad
+    blocks are scattered per group into the dense (G, K, N) cotangent.
+    """
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2, (x.shape, w.shape)
+    assert N % bn == 0 and K % bk == 0 and M % bm == 0, (M, K, N, bm, bn, bk)
+    if row_idx is None:
+        bmask = jax.vmap(
+            lambda i_, c_: unpack_block_mask(i_, c_, K // bk)
+        )(block_idx, block_cnt)
+        row_idx, row_cnt = pack_group_mask_rows_traced(bmask)
+    return _grouped_block_sparse_matmul(
         x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
     )

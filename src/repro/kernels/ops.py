@@ -19,6 +19,11 @@ concrete block mask (host-side numpy packing, tight max-count — eval /
 one-off calls); or a traced block mask (jit-safe jnp packing with a static
 worst-case count — correct anywhere, but every grid is padded to K/bk with
 empty iterations).  docs/kernels.md documents the whole path end-to-end.
+
+The ``grouped_*`` wrappers are the weight-BANK twins (leading group dim G,
+one launch for all groups): MoE per-expert einsums and xLSTM per-head
+recurrences dispatch through them (layers.grouped_linear), with the same
+three topology sources (grouped PackState entry / concrete / traced mask).
 """
 from __future__ import annotations
 
@@ -30,17 +35,24 @@ import numpy as np
 
 from .block_sparse_matmul import (
     block_sparse_matmul,
+    grouped_block_sparse_matmul,
     pack_block_mask,
     pack_block_mask_rows,
     pack_block_mask_rows_traced,
     pack_block_mask_traced,
+    pack_group_mask,
+    pack_group_mask_rows,
+    pack_group_mask_rows_traced,
+    pack_group_mask_traced,
 )
-from .masked_matmul import masked_matmul
+from .masked_matmul import grouped_masked_matmul, masked_matmul
 from .topk_threshold import N_BINS, histogram_abs
 
 __all__ = [
     "masked_linear",
     "block_sparse_linear",
+    "grouped_masked_linear",
+    "grouped_block_sparse_linear",
     "topk_threshold",
     "auto_interpret",
 ]
@@ -160,6 +172,92 @@ def block_sparse_linear(
         x2, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
     )
     return out[:M].reshape(*lead, w.shape[1])
+
+
+def grouped_masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
+    """out[g] = x[g] @ (w[g]*mask[g]) for every group g, ONE kernel launch.
+
+    x: (G, M, K); w, mask: (G, K, N) -> (G, M, N).  The grouped twin of
+    ``masked_linear`` for weight BANKS — MoE per-expert ``ecd,edf->ecf``
+    einsums (G = experts) and xLSTM per-head ``bnh,nhk->bnk`` recurrences
+    (G = heads, after layers.grouped_linear's reshape shim).  Any mask
+    pattern; per-group w*m only ever exists tile-wise in VMEM.
+    Differentiable (grouped custom-VJP dgrad/wgrad kernels); M is padded to
+    the (clamped) row tile and K/N to their tiles, exactly like
+    ``masked_linear``.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    G, M, K = x.shape
+    N = w.shape[2]
+    bm_eff, Mp = _row_tile(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+        mask = jnp.pad(mask, ((0, 0), (0, Kp - K), (0, Np - N)))
+    out = grouped_masked_matmul(
+        x, w, mask, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:, :M, :N]
+
+
+def grouped_block_sparse_linear(
+    x, w, block_mask=None, *, block=(128, 128, 128), interpret=None, pack=None
+):
+    """out[g] = x[g] @ w_blocksparse[g], one launch over the whole bank.
+
+    x: (G, M, K); w: (G, K, N) -> (G, M, N).  Topology sources mirror
+    ``block_sparse_linear``, stacked over the group dim:
+
+    pack: a grouped PackState entry (core/pack.py — ``idx (G, N/bn, width)``
+        etc., per-expert CSC + CSR at one shared width) or a bare stacked
+        ``(idx, cnt)`` tuple from ``pack_group_mask``.  Tight grids, zero
+        per-call packing cost — the hot path.
+    block_mask: (G, K/bk, N/bn) bool fallback — concrete (host numpy pack,
+        tight shared width) or traced (jit-safe, worst-case width K/bk).
+
+    A group with zero active blocks outputs zeros (a dead expert behaves like
+    an empty column — docs/kernels.md#empty-columns-and-dead-layers).
+    Differentiable; M is padded to the row tile; K and N must be
+    tile-aligned.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    G, M, K = x.shape
+    N = w.shape[2]
+    bk, bn = min(bk, K), min(bn, N)
+    ridx = rcnt = None
+    if pack is not None:
+        if isinstance(pack, dict):
+            idx, cnt = pack["idx"], pack["cnt"]
+            ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+        else:
+            idx, cnt = pack
+    elif block_mask is None:
+        raise ValueError(
+            "grouped_block_sparse_linear needs a topology: pass block_mask= "
+            "or a precomputed stacked pack=(idx, cnt) — see "
+            "docs/kernels.md#packing"
+        )
+    elif isinstance(block_mask, jax.core.Tracer):
+        idx, cnt = pack_group_mask_traced(block_mask)
+        ridx, rcnt = pack_group_mask_rows_traced(block_mask)
+    else:
+        idx, cnt = pack_group_mask(np.asarray(block_mask))
+        ridx, rcnt = pack_group_mask_rows(np.asarray(block_mask))
+    bm_eff, Mp = _row_tile(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
+    out = grouped_block_sparse_matmul(
+        x, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk,
+        interpret=interpret,
+    )
+    return out[:, :M]
 
 
 def topk_threshold(x, k: int, *, refine: bool = True, interpret=None):

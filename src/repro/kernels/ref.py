@@ -8,6 +8,8 @@ import numpy as np
 __all__ = [
     "masked_matmul_ref",
     "block_sparse_matmul_ref",
+    "grouped_masked_matmul_ref",
+    "grouped_block_sparse_matmul_ref",
     "histogram_abs_ref",
     "kth_value_ref",
 ]
@@ -22,6 +24,21 @@ def block_sparse_matmul_ref(x, w, block_mask, bk: int, bn: int):
     K, N = w.shape
     dense_mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=0), bn, axis=1)
     return (x @ (w * dense_mask.astype(w.dtype))).astype(x.dtype)
+
+
+def grouped_masked_matmul_ref(x, w, mask):
+    """x: (G, M, K); w, mask: (G, K, N) — per-group fused-mask matmul."""
+    return jnp.einsum(
+        "gmk,gkn->gmn", x, w * mask.astype(w.dtype)
+    ).astype(x.dtype)
+
+
+def grouped_block_sparse_matmul_ref(x, w, block_mask, bk: int, bn: int):
+    """block_mask: (G, K/bk, N/bn) bool expanded over (bk, bn) tiles."""
+    dense_mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=1), bn, axis=2)
+    return jnp.einsum(
+        "gmk,gkn->gmn", x, w * dense_mask.astype(w.dtype)
+    ).astype(x.dtype)
 
 
 def histogram_abs_ref(x, hi, n_bins: int = 512):

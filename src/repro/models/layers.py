@@ -19,6 +19,9 @@ __all__ = [
     "split_params",
     "linear_init",
     "linear",
+    "grouped_linear",
+    "dispatch_kw",
+    "assert_total_dispatch",
     "rmsnorm_init",
     "rmsnorm",
     "layernorm_init",
@@ -74,15 +77,16 @@ def linear_init(
 
 
 def _block_mask(mask, bk: int, bn: int):
-    """Elementwise (K, N) mask -> (K/bk, N/bn) block-activity mask.
+    """Elementwise (..., K, N) mask -> (..., K/bk, N/bn) block-activity mask.
 
     Same reduction as the host-side PackState build (one definition, so the
     traced fallback and the packed topology can never diverge); this wrapper
-    just clamps the tiles to small layer dims.
+    just clamps the tiles to small layer dims.  A leading group dim (3-D
+    weight banks) passes through, matching the grouped kernels.
     """
     from ..core.masks import block_mask_of
 
-    K, N = mask.shape
+    *_, K, N = mask.shape
     return block_mask_of(mask, (min(bk, K), min(bn, N)))
 
 
@@ -133,6 +137,100 @@ def linear(
     if "b" in p:
         y = y + p["b"].astype(dt)
     return y
+
+
+def grouped_linear(
+    w, x, compute_dtype=None, *, mask=None, kernel=None,
+    block=(128, 128, 128), pack=None,
+):
+    """Grouped matmul dispatch: x (G, M, K) @ w (G, K, N) -> (G, M, N).
+
+    The weight-BANK twin of ``linear`` — the single choke point for every
+    grouped sparsifiable einsum: MoE per-expert ``ecd,edf->ecf`` (G = experts,
+    models/moe.py) and xLSTM's per-head recurrent ``bnh,nhk->bnk`` (G = heads;
+    the caller moves the group dim leading — models/xlstm.py).  ``w`` is the
+    raw (G, K, N) weight array (some banks, e.g. sLSTM's ``r``, are bare
+    leaves without a {"w": ...} bundle).
+
+    Dispatch mirrors ``linear`` exactly:
+      kernel='masked'        per-group fused-mask matmul, one launch
+                             (ops.grouped_masked_linear)
+      kernel='block_sparse'  per-group block skipping, stacked CSC/CSR packs
+                             (ops.grouped_block_sparse_linear); ``pack`` is
+                             this bank's grouped PackState entry
+                             (idx (G, N/bn, width), ... — core/pack.py)
+      else / mask=None       jnp.einsum("gmk,gkn->gmn") on w*m (legacy path)
+    """
+    dt = compute_dtype or x.dtype
+    w = w.astype(dt)
+    if mask is not None and kernel in ("masked", "block_sparse"):
+        from ..kernels import grouped_block_sparse_linear, grouped_masked_linear
+
+        xc = x.astype(dt)
+        if kernel == "masked":
+            return grouped_masked_linear(xc, w, mask, block=block)
+        if pack is not None:
+            return grouped_block_sparse_linear(xc, w, block=block, pack=pack)
+        bm, bn, bk = block
+        return grouped_block_sparse_linear(
+            xc, w, _block_mask(mask, bk, bn), block=block
+        )
+    if mask is not None:
+        w = w * mask.astype(dt)
+    return jnp.einsum("gmk,gkn->gmn", x.astype(dt), w)
+
+
+def dispatch_kw(cfg, masks, name, pack=None):
+    """Kernel-dispatch kwargs for one sparsifiable projection/bank.
+
+    The shared helper behind every submodule's mask threading (ssm/xlstm/moe):
+    looks up the ``{"w": ...}``-bundled mask and pack leaves for ``name`` and
+    pairs them with the config's kernel selection — the exact keyword set
+    ``linear``/``grouped_linear`` dispatch on, so a new dispatch knob only
+    needs adding here.
+    """
+    return dict(
+        mask=None if masks is None else masks[name]["w"],
+        kernel=cfg.sparse.kernel,
+        block=cfg.sparse.kernel_block,
+        pack=None if pack is None else pack[name]["w"],
+    )
+
+
+def assert_total_dispatch(masks, consumed: tuple[str, ...], *, kernel=None,
+                          where: str = "?"):
+    """Loud guard against silent dense fallbacks (trace-time, free at run).
+
+    In kernel-dispatch mode (``kernel`` in {'masked', 'block_sparse'}) every
+    non-None mask leaf of a submodule's mask subtree must be consumed by a
+    kernel-dispatching matmul (``linear``/``grouped_linear``).  A leftover
+    leaf means the submodule would fall back to materializing w*m in HBM —
+    the exact failure mode the total-dispatch contract forbids — so this
+    raises instead of silently degrading.  ``consumed`` lists the subtree
+    keys the caller routes through the kernels; mask structure is static, so
+    the check runs once per trace and costs nothing per step.
+    """
+    if masks is None or kernel in (None, "dense"):
+        return
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        masks, is_leaf=lambda x: x is None
+    )
+    leftovers = sorted(
+        {
+            "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            for p, m in flat
+            if m is not None
+            and str(getattr(p[0], "key", getattr(p[0], "idx", p[0])))
+            not in consumed
+        }
+    )
+    if leftovers:
+        raise RuntimeError(
+            f"{where}: mask leaves {leftovers} have no kernel-dispatched "
+            "consumer — they would silently fall back to dense w*m. Route "
+            "them through layers.linear/grouped_linear or keep the weights "
+            "dense; see docs/kernels.md#dispatch-coverage"
+        )
 
 
 def rmsnorm_init(d: int, axes=("embed",), dtype=jnp.float32):

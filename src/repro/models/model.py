@@ -10,13 +10,18 @@ is a python list (unrolled at trace time — exact cost_analysis); ``scan_layers
 switches to a stacked lax.scan for the full-depth memory proof on homogeneous
 stacks.
 
-Sparse-kernel dispatch: ``lm_forward``/``lm_loss``/``lm_prefill``/``lm_decode``
-take an optional ``masks`` pytree mirroring params.  When given, transformer
-attention + MLP linears route through the Pallas sparse kernels selected by
-``cfg.sparse.kernel`` ('masked' fused-mask matmul, 'block_sparse' block
-skipping) with custom-VJP backward kernels — masked weights are never
-materialized in HBM, fwd or bwd.  Non-dispatched sparse submodules
-(ssm/xlstm/moe) fall back to w*m at submodule granularity.  masks=None keeps
+Sparse-kernel dispatch is TOTAL: ``lm_forward``/``lm_loss``/``lm_prefill``/
+``lm_decode`` take an optional ``masks`` pytree mirroring params.  When given,
+EVERY sparsifiable weight einsum in EVERY family — transformer attention +
+MLP, hymba SSM projections, xLSTM mLSTM/sLSTM projections (incl. the grouped
+per-head recurrence), MoE expert banks + shared experts — routes through the
+Pallas sparse kernels selected by ``cfg.sparse.kernel`` ('masked' fused-mask
+matmul, 'block_sparse' block skipping; grouped variants for weight banks)
+with custom-VJP backward kernels — masked weights are never materialized in
+HBM, fwd or bwd.  The only non-dispatched params are genuinely non-matmul
+leaves (scan carries, gates, convs, routers), which are dense and unmasked by
+construction; ``layers.assert_total_dispatch`` turns any silent w*m fallback
+into a loud error (see docs/kernels.md#dispatch-coverage).  masks=None keeps
 the legacy contract (callers pre-mask via core.apply_masks).
 
 All four entry points also take ``pack`` — a PackState pytree (core/pack.py)
@@ -145,22 +150,44 @@ def _sub(masks, key):
     return None if masks is None else masks[key]
 
 
-def _local_masked(p, masks, key):
-    """Materialize w*m for a NON-dispatched sparse submodule (ssm/xlstm/moe).
+def _local_masked(p, masks, key, *, kernel):
+    # NOTE: kernel is REQUIRED (no default) so the pre-total-dispatch call
+    # shape `_local_masked(p, masks, key)` is a TypeError, not a silent
+    # guard bypass.
+    """Materialize w*m for a sparse submodule WITHOUT kernel dispatch.
 
-    These consume their weights through einsums/scans the kernel dispatch
-    doesn't cover (yet — see ROADMAP open items), so in kernel mode they fall
-    back to the legacy apply_masks semantics at submodule granularity.
+    Since the total-dispatch PR, every matmul-bearing subtree (attn/mlp/ssm/
+    xlstm/moe) threads masks into its own ``layers.linear``/``grouped_linear``
+    calls, so this helper only remains for genuinely non-matmul leaves (scan
+    carries, gates, convs — all dense and unmasked by construction) and as the
+    loud guard: in kernel mode, routing a subtree that still carries mask
+    leaves through here would silently fall back to dense w*m in HBM — the
+    exact failure the total-dispatch contract forbids — so it raises instead.
     """
-    return p[key] if masks is None else apply_masks(p[key], masks[key])
+    if masks is None:
+        return p[key]
+    m = masks[key]
+    if kernel in ("masked", "block_sparse") and any(
+        l is not None
+        for l in jax.tree_util.tree_leaves(m, is_leaf=lambda x: x is None)
+    ):
+        raise RuntimeError(
+            f"_local_masked({key!r}): subtree carries mask leaves but "
+            "cfg.sparse.kernel is set — this would silently materialize w*m "
+            "instead of dispatching to the Pallas kernels. Thread masks= "
+            "into the submodule (see docs/kernels.md#dispatch-coverage)"
+        )
+    return apply_masks(p[key], m)
 
 
 def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux).
 
     masks: this layer's mask subtree.  None => legacy behaviour (params are
-    already w*m).  Given => attention/mlp linears dispatch to the Pallas
-    sparse kernels (cfg.sparse.kernel) and never materialize masked weights.
+    already w*m).  Given => EVERY sparsifiable matmul of the block —
+    attention, MLP, SSM, mLSTM/sLSTM (grouped recurrence) and MoE banks —
+    dispatches to the Pallas sparse kernels (cfg.sparse.kernel) and never
+    materializes masked weights.
     pack: this layer's PackState subtree (mirrors masks) — block_sparse grids
     run at the true active-block count instead of the padded worst case.
     """
@@ -168,10 +195,14 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     if cfg.block_type == "xlstm":
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
         if cfg.is_slstm(i):
-            o, state = X.slstm(_local_masked(p, masks, "slstm"), h, cfg)
+            o, state = X.slstm(
+                p["slstm"], h, cfg,
+                masks=_sub(masks, "slstm"), pack=_sub(pack, "slstm"),
+            )
         else:
             o, state = X.mlstm(
-                _local_masked(p, masks, "mlstm"), h, cfg, chunk=cfg.q_chunk
+                p["mlstm"], h, cfg, chunk=cfg.q_chunk,
+                masks=_sub(masks, "mlstm"), pack=_sub(pack, "mlstm"),
             )
         return x + o, state, aux
 
@@ -184,7 +215,8 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     state: Any = kv
     if cfg.block_type == "hymba":
         ssm_out, ssm_h = S.ssm(
-            _local_masked(p, masks, "ssm"), h, cfg, chunk=cfg.q_chunk
+            p["ssm"], h, cfg, chunk=cfg.q_chunk,
+            masks=_sub(masks, "ssm"), pack=_sub(pack, "ssm"),
         )
         attn_out = 0.5 * (
             rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
@@ -202,7 +234,10 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
         ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
 
     if cfg.n_experts:
-        ff_out, aux = moe(_local_masked(p, masks, "moe"), ff_in, cfg)
+        ff_out, aux = moe(
+            p["moe"], ff_in, cfg,
+            masks=_sub(masks, "moe"), pack=_sub(pack, "moe"),
+        )
     elif cfg.d_ff:
         ff_out = mlp(
             p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(masks, "mlp"),
@@ -427,6 +462,7 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None):
     S_ = h.shape[1]
     caches = init_caches(cfg, B, max_len)
     layer_ms = masks["layers"] if masks is not None else [None] * cfg.n_layers
+    layer_pk = pack["layers"] if pack is not None else [None] * cfg.n_layers
     for i, st in enumerate(states):
         if cfg.block_type == "xlstm":
             key = "slstm" if cfg.is_slstm(i) else "mlstm"
@@ -435,11 +471,17 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None):
         if cfg.block_type == "hymba":
             kv, ssm_h, pre = st
             caches[i]["ssm"]["h"] = ssm_h
-            # conv state: last 3 *pre-conv* inner activations
-            ssm_p = _local_masked(params["layers"][i], layer_ms[i], "ssm")
-            u_raw = linear(ssm_p["in_proj"], pre)[
-                ..., : cfg.ssm_d_inner
-            ]
+            # conv state: last 3 *pre-conv* inner activations — the in_proj
+            # recompute dispatches like any other sparse matmul
+            ssm_p = params["layers"][i]["ssm"]
+            m_ssm = _sub(layer_ms[i], "ssm")
+            pk_ssm = _sub(layer_pk[i], "ssm")
+            u_raw = linear(
+                ssm_p["in_proj"], pre,
+                mask=None if m_ssm is None else m_ssm["in_proj"]["w"],
+                kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+                pack=None if pk_ssm is None else pk_ssm["in_proj"]["w"],
+            )[..., : cfg.ssm_d_inner]
             caches[i]["ssm"]["conv"] = u_raw[:, -3:, :].astype(
                 caches[i]["ssm"]["conv"].dtype
             )
@@ -475,11 +517,13 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
             h = rmsnorm(p["ln1"], x, cfg.norm_eps)
             if cfg.is_slstm(i):
                 o, c["slstm"] = X.slstm_decode(
-                    _local_masked(p, m, "slstm"), h, c["slstm"], cfg
+                    p["slstm"], h, c["slstm"], cfg,
+                    masks=_sub(m, "slstm"), pack=_sub(pk, "slstm"),
                 )
             else:
                 o, c["mlstm"] = X.mlstm_decode(
-                    _local_masked(p, m, "mlstm"), h, c["mlstm"], cfg
+                    p["mlstm"], h, c["mlstm"], cfg,
+                    masks=_sub(m, "mlstm"), pack=_sub(pk, "mlstm"),
                 )
             x = x + o
             new_caches.append(c)
@@ -493,7 +537,8 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
         )
         if cfg.block_type == "hymba":
             ssm_out, c["ssm"] = S.ssm_decode(
-                _local_masked(p, m, "ssm"), h, c["ssm"], cfg
+                p["ssm"], h, c["ssm"], cfg,
+                masks=_sub(m, "ssm"), pack=_sub(pk, "ssm"),
             )
             attn_out = 0.5 * (
                 rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
@@ -507,7 +552,9 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
             x = x + attn_out
             ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
         if cfg.n_experts:
-            ff_out, _ = moe(_local_masked(p, m, "moe"), ff_in, cfg)
+            ff_out, _ = moe(
+                p["moe"], ff_in, cfg, masks=_sub(m, "moe"), pack=_sub(pk, "moe")
+            )
         elif cfg.d_ff:
             ff_out = mlp(
                 p["mlp"], ff_in, cfg.mlp_kind, masks=_sub(m, "mlp"),

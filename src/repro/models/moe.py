@@ -15,6 +15,17 @@ divides it (EP), otherwise on the ff dim (intra-expert TP) — grok-1 (8e on a
 
 RigL treats each expert's weight matrices as sparsifiable layers; ER/ERK
 budgets are computed from the full (E, d, ff) shapes.
+
+Sparse-kernel dispatch: the three expert banks ``wi``/``wg``/``wo`` are
+(E, d, ff)-shaped GROUPED weights — their per-expert ``ecd,edf->ecf`` einsums
+route through ``layers.grouped_linear`` onto the grouped Pallas kernels (one
+launch for all experts, stacked per-expert CSC/CSR packs in block_sparse
+mode; see docs/kernels.md#grouped-packs).  The shared experts are an ordinary
+MLP and dispatch through ``models/mlp.py``.  The router stays dense (tiny,
+routing-critical).  A fully-dead expert (all blocks dropped) outputs zeros —
+well-defined under routing; the pack build only rejects an all-zero BANK.
+``assert_total_dispatch`` makes any silent w*m fallback loud.  SNFS cannot
+run under dispatch — enforced in training/steps.py::make_train_step.
 """
 from __future__ import annotations
 
@@ -22,10 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import P, linear
+from .layers import P, assert_total_dispatch, dispatch_kw as _bank_kw, grouped_linear
 from .mlp import mlp, mlp_init
 
 __all__ = ["moe_init", "moe"]
+
+# sparse leaves routed through the kernels: the grouped expert banks plus the
+# shared-expert MLP (dispatched inside models/mlp.py)
+_DISPATCHED = ("wi", "wg", "wo", "shared")
 
 
 def moe_init(key, cfg, *, sparse: bool = True):
@@ -60,8 +75,19 @@ def moe_init(key, cfg, *, sparse: bool = True):
     return p
 
 
-def moe(p, x, cfg):
-    """x: (B, S, d) -> (B, S, d)."""
+def moe(p, x, cfg, *, masks=None, pack=None):
+    """Routed-MoE forward.  x: (B, S, d) -> ((B, S, d), aux_loss).
+
+    masks: this MoE's mask subtree (mirrors ``p``) — the expert banks
+    ``wi``/``wg``/``wo`` dispatch as GROUPED kernels (one launch over all
+    experts, per-expert topology) and the shared MLP through the 2-D kernels;
+    None keeps the legacy pre-masked contract.  pack: matching PackState
+    subtree — the banks' entries are grouped (leading expert dim, shared
+    tight width; core/pack.py), the shared MLP's are plain 2-D entries.
+    """
+    assert_total_dispatch(
+        masks, _DISPATCHED, kernel=cfg.sparse.kernel, where="moe"
+    )
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
     capacity_factor = cfg.moe_capacity_factor
@@ -95,10 +121,13 @@ def moe(p, x, cfg):
     )
     buf = buf[: E * C].reshape(E, C, d)
 
-    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"]["w"].astype(dt))
-    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"]["w"].astype(dt))
+    # batched expert GEMMs — ONE grouped launch per bank in kernel mode
+    h = grouped_linear(p["wi"]["w"], buf, dt, **_bank_kw(cfg, masks, "wi", pack))
+    g = grouped_linear(p["wg"]["w"], buf, dt, **_bank_kw(cfg, masks, "wg", pack))
     h = jax.nn.silu(g) * h
-    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"]["w"].astype(dt))
+    out_buf = grouped_linear(
+        p["wo"]["w"], h, dt, **_bank_kw(cfg, masks, "wo", pack)
+    )
 
     out_flat = out_buf.reshape(E * C, d)
     gathered = jnp.where(
@@ -109,7 +138,12 @@ def moe(p, x, cfg):
     )
 
     if "shared" in p:
-        combined = combined + mlp(p["shared"], xt, kind="swiglu")
+        combined = combined + mlp(
+            p["shared"], xt, kind="swiglu",
+            masks=None if masks is None else masks["shared"],
+            kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
+            pack=None if pack is None else pack["shared"],
+        )
 
     # load-balancing auxiliary loss (Switch-style), returned for training
     me = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(1), axis=0)

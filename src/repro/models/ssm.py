@@ -6,6 +6,16 @@ h_t = a_t * h_{t-1} + b_t is evaluated with jax.lax.associative_scan (log-depth
 DAG — counted correctly by cost_analysis, unlike while-loops).  Decode is the
 single-step recurrence (O(1) state — this is what makes long_500k decode
 feasible for the hybrid archs).
+
+Sparse-kernel dispatch: the two RigL-sparsifiable weights — ``in_proj``
+(d, 2*d_in) and ``out_proj`` (d_in, d) — route through ``layers.linear`` with
+their mask leaves, so with ``cfg.sparse.kernel`` in {'masked', 'block_sparse'}
+they execute on the Pallas kernels (fwd AND custom-VJP bwd) and w*m never
+materializes in HBM.  The selective-scan internals (``w_bc``, ``w_dt``, conv,
+gates, the recurrence itself) are dense by design (tiny, routing-critical) and
+carry no masks.  ``assert_total_dispatch`` makes any future silent fallback
+loud.  SNFS cannot run under dispatch (it needs a dense gradient every step);
+training/steps.py::make_train_step enforces that restriction for every family.
 """
 from __future__ import annotations
 
@@ -13,9 +23,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import P, conv1d_causal, conv1d_causal_init, conv1d_causal_step, linear
+from .layers import (
+    P,
+    assert_total_dispatch,
+    conv1d_causal,
+    conv1d_causal_init,
+    conv1d_causal_step,
+    dispatch_kw as _kw,
+    linear,
+)
 
 __all__ = ["ssm_init", "ssm", "ssm_decode", "init_ssm_state"]
+
+# sparse matmul leaves routed through layers.linear (the dispatch contract
+# checked by assert_total_dispatch below)
+_DISPATCHED = ("in_proj", "out_proj")
 
 
 def ssm_init(key, cfg, *, sparse: bool = True):
@@ -46,10 +68,10 @@ def ssm_init(key, cfg, *, sparse: bool = True):
     }
 
 
-def _gates(p, x, cfg):
-    """Project input -> (u, z, dt, B, C)."""
-    d_in, N = cfg.ssm_d_inner, cfg.ssm_state
-    uz = linear(p["in_proj"], x)
+def _gates(p, x, cfg, masks=None, pack=None):
+    """Project input -> (u, z)."""
+    d_in = cfg.ssm_d_inner
+    uz = linear(p["in_proj"], x, **_kw(cfg, masks, "in_proj", pack))
     u, z = uz[..., :d_in], uz[..., d_in:]
     return u, z
 
@@ -77,11 +99,21 @@ def _scan_chunk(a, b, h0):
     return h, h[:, -1]
 
 
-def ssm(p, x, cfg, *, chunk: int = 1024, h0=None):
-    """x: (B, S, d) -> (out (B,S,d), final state (B,d_in,N))."""
+def ssm(p, x, cfg, *, chunk: int = 1024, h0=None, masks=None, pack=None):
+    """Selective-SSM forward.  x: (B, S, d) -> (out (B,S,d), state (B,d_in,N)).
+
+    masks: this SSM's mask subtree (mirrors ``p``) — ``in_proj``/``out_proj``
+    dispatch to the Pallas sparse kernels per ``cfg.sparse.kernel``; None
+    keeps the legacy contract (params already pre-masked by the caller).
+    pack: matching PackState subtree (core/pack.py) — tight block_sparse
+    grids for both projections, fwd and custom-VJP bwd.
+    """
+    assert_total_dispatch(
+        masks, _DISPATCHED, kernel=cfg.sparse.kernel, where="ssm"
+    )
     B, S, _ = x.shape
     d_in, N = cfg.ssm_d_inner, cfg.ssm_state
-    u, z = _gates(p, x, cfg)
+    u, z = _gates(p, x, cfg, masks, pack)
     u = jax.nn.silu(conv1d_causal(p["conv"], u))
     a, b, Ct = _selective(p, u, cfg)
 
@@ -97,7 +129,7 @@ def ssm(p, x, cfg, *, chunk: int = 1024, h0=None):
     y = jnp.einsum("bsdn,bsn->bsd", h, Ct.astype(jnp.float32)).astype(x.dtype)
     y = y + u * p["d_skip"].astype(u.dtype)
     y = y * jax.nn.silu(z)
-    return linear(p["out_proj"], y), h0
+    return linear(p["out_proj"], y, **_kw(cfg, masks, "out_proj", pack)), h0
 
 
 def init_ssm_state(cfg, batch: int):
@@ -108,9 +140,18 @@ def init_ssm_state(cfg, batch: int):
     }
 
 
-def ssm_decode(p, x_t, state, cfg):
-    """Single-token step. x_t: (B, 1, d). state: {'h', 'conv'}."""
-    u, z = _gates(p, x_t, cfg)
+def ssm_decode(p, x_t, state, cfg, *, masks=None, pack=None):
+    """Single-token step. x_t: (B, 1, d); state: {'h', 'conv'}.
+
+    With ``masks``, ``in_proj``/``out_proj`` decode through the Pallas sparse
+    kernels — the decode path is weight-bound, so skipped blocks translate
+    directly into HBM-traffic savings.  ``pack`` is packed once per topology
+    and reused every step (see models/model.py::lm_decode).
+    """
+    assert_total_dispatch(
+        masks, _DISPATCHED, kernel=cfg.sparse.kernel, where="ssm_decode"
+    )
+    u, z = _gates(p, x_t, cfg, masks, pack)
     conv_state, u1 = conv1d_causal_step(p["conv"], state["conv"], u[:, 0])
     u = jax.nn.silu(u1)[:, None, :]
     a, b, Ct = _selective(p, u, cfg)
@@ -118,4 +159,5 @@ def ssm_decode(p, x_t, state, cfg):
     y = jnp.einsum("bdn,bn->bd", h, Ct[:, 0].astype(jnp.float32)).astype(x_t.dtype)
     y = y + u[:, 0] * p["d_skip"].astype(u.dtype)
     y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
-    return linear(p["out_proj"], y), {"h": h, "conv": conv_state}
+    out = linear(p["out_proj"], y, **_kw(cfg, masks, "out_proj", pack))
+    return out, {"h": h, "conv": conv_state}

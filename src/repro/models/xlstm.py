@@ -12,6 +12,16 @@ these layers are corrected analytically; see EXPERIMENTS.md).
 Parameter-shape adaptation vs the official code is documented in DESIGN.md §5
 (qkv are d->d; projection factor moved into the z-gate), keeping the assigned
 48L/d2048/4H config at ~1.3B params.
+
+Sparse-kernel dispatch: every RigL-sparsifiable weight here is a matmul and
+routes through the Pallas kernels when ``cfg.sparse.kernel`` != 'dense' —
+mLSTM's ``wq``/``wk``/``wv``/``wz``/``wo`` and sLSTM's ``w_in``/``wo``
+through ``layers.linear``, and sLSTM's per-head recurrent bank ``r``
+(nh, hd, 4hd) through ``layers.grouped_linear`` (the ``bnh,nhk->bnk`` einsum
+becomes one GROUPED kernel launch per scan step after moving the head dim
+leading).  Gates (``w_if``) and norms stay dense.  ``assert_total_dispatch``
+makes any silent w*m fallback loud.  SNFS cannot run under dispatch (dense
+gradient needed every step) — enforced in training/steps.py::make_train_step.
 """
 from __future__ import annotations
 
@@ -19,7 +29,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import P, linear, rmsnorm, rmsnorm_init
+from .layers import (
+    P,
+    assert_total_dispatch,
+    dispatch_kw as _kw,
+    grouped_linear,
+    linear,
+    rmsnorm,
+    rmsnorm_init,
+)
 
 __all__ = [
     "mlstm_init",
@@ -31,6 +49,10 @@ __all__ = [
     "slstm_decode",
     "init_slstm_state",
 ]
+
+# sparse matmul leaves routed through the kernels (assert_total_dispatch)
+_MLSTM_DISPATCHED = ("wq", "wk", "wv", "wz", "wo")
+_SLSTM_DISPATCHED = ("w_in", "r", "wo")
 
 
 def _lin(k, nin, nout, axes, sparse):
@@ -61,13 +83,15 @@ def mlstm_init(key, cfg, *, sparse: bool = True):
     }
 
 
-def _mlstm_qkv(p, x, cfg):
+def _mlstm_qkv(p, x, cfg, masks=None, pack=None):
     B, S, d = x.shape
     nh = cfg.n_heads
     hd = d // nh
-    q = linear(p["wq"], x).reshape(B, S, nh, hd)
-    k = linear(p["wk"], x).reshape(B, S, nh, hd) / np.sqrt(hd)
-    v = linear(p["wv"], x).reshape(B, S, nh, hd)
+    q = linear(p["wq"], x, **_kw(cfg, masks, "wq", pack)).reshape(B, S, nh, hd)
+    k = linear(p["wk"], x, **_kw(cfg, masks, "wk", pack)).reshape(
+        B, S, nh, hd
+    ) / np.sqrt(hd)
+    v = linear(p["wv"], x, **_kw(cfg, masks, "wv", pack)).reshape(B, S, nh, hd)
     gif = linear(p["w_if"], x).astype(jnp.float32)  # (B,S,2nh)
     i_pre, f_pre = gif[..., :nh], gif[..., nh:]
     logf = jax.nn.log_sigmoid(f_pre)  # (B,S,nh)
@@ -84,12 +108,21 @@ def init_mlstm_state(cfg, batch: int):
     }
 
 
-def mlstm(p, x, cfg, *, chunk: int = 1024, state=None):
-    """Chunkwise parallel mLSTM. Returns (out (B,S,d), final_state)."""
+def mlstm(p, x, cfg, *, chunk: int = 1024, state=None, masks=None, pack=None):
+    """Chunkwise parallel mLSTM. Returns (out (B,S,d), final_state).
+
+    masks: this block's mask subtree — ``wq``/``wk``/``wv``/``wz``/``wo``
+    dispatch to the Pallas sparse kernels per ``cfg.sparse.kernel`` (None =>
+    legacy pre-masked params).  pack: matching PackState subtree
+    (core/pack.py) — tight block_sparse grids, fwd and custom-VJP bwd.
+    """
+    assert_total_dispatch(
+        masks, _MLSTM_DISPATCHED, kernel=cfg.sparse.kernel, where="mlstm"
+    )
     B, S, d = x.shape
     nh = cfg.n_heads
     hd = d // nh
-    q, k, v, i_pre, logf = _mlstm_qkv(p, x, cfg)
+    q, k, v, i_pre, logf = _mlstm_qkv(p, x, cfg, masks, pack)
     if state is None:
         state = init_mlstm_state(cfg, B)
     C, n, m = state["C"], state["n"], state["m"]
@@ -142,17 +175,27 @@ def mlstm(p, x, cfg, *, chunk: int = 1024, state=None):
 
     h = jnp.concatenate(outs, axis=1)  # (B,S,nh,hd)
     h = rmsnorm(p["norm"], h)
-    h = h.reshape(B, S, d) * jax.nn.silu(linear(p["wz"], x))
-    out = linear(p["wo"], h)
+    h = h.reshape(B, S, d) * jax.nn.silu(
+        linear(p["wz"], x, **_kw(cfg, masks, "wz", pack))
+    )
+    out = linear(p["wo"], h, **_kw(cfg, masks, "wo", pack))
     return out, {"C": C, "n": n, "m": m}
 
 
-def mlstm_decode(p, x_t, state, cfg):
-    """Single-step recurrence. x_t: (B,1,d)."""
+def mlstm_decode(p, x_t, state, cfg, *, masks=None, pack=None):
+    """Single-step recurrence. x_t: (B,1,d).
+
+    With ``masks``, the five projections decode through the Pallas sparse
+    kernels (weight-bound path — skipped blocks cut HBM traffic directly);
+    ``pack`` is packed once per topology and reused by every decode step.
+    """
+    assert_total_dispatch(
+        masks, _MLSTM_DISPATCHED, kernel=cfg.sparse.kernel, where="mlstm_decode"
+    )
     B, _, d = x_t.shape
     nh = cfg.n_heads
     hd = d // nh
-    q, k, v, i_pre, logf = _mlstm_qkv(p, x_t, cfg)
+    q, k, v, i_pre, logf = _mlstm_qkv(p, x_t, cfg, masks, pack)
     q, k, v = q[:, 0], k[:, 0], v[:, 0]
     i_pre, logf = i_pre[:, 0], logf[:, 0]  # (B,nh)
 
@@ -168,8 +211,11 @@ def mlstm_decode(p, x_t, state, cfg):
     den = jnp.einsum("bnh,bnh->bn", q.astype(jnp.float32), n)
     denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
     h = (num / denom[..., None]).astype(x_t.dtype)[:, None]  # (B,1,nh,hd)
-    h = rmsnorm(p["norm"], h).reshape(B, 1, d) * jax.nn.silu(linear(p["wz"], x_t))
-    return linear(p["wo"], h), {"C": C, "n": n, "m": m_new}
+    h = rmsnorm(p["norm"], h).reshape(B, 1, d) * jax.nn.silu(
+        linear(p["wz"], x_t, **_kw(cfg, masks, "wz", pack))
+    )
+    out = linear(p["wo"], h, **_kw(cfg, masks, "wo", pack))
+    return out, {"C": C, "n": n, "m": m_new}
 
 
 # ---------------------------------------------------------------------------
@@ -201,13 +247,35 @@ def init_slstm_state(cfg, batch: int):
     return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, nh, hd), -1e30)}
 
 
-def _slstm_cell(p, state, wx_t, cfg):
+def _recurrent(p, h, cfg, masks=None, pack=None):
+    """Per-head recurrent projection: ``bnh,nhk->bnk`` on the (nh, hd, 4hd)
+    bank ``r`` — the grouped-kernel reshape shim.
+
+    The head dim moves leading ((B, nh, hd) -> (nh, B, hd)) so the einsum is
+    a grouped matmul: group g computes h[:, g] @ r[g].  One grouped Pallas
+    launch covers all heads (layers.grouped_linear -> kernels/ops.py); the
+    dense fallback is the identical einsum.  Runs once per scan step — the
+    recurrence is sequential in time, but sparse in weights.
+    """
+    rec = grouped_linear(
+        p["r"],
+        jnp.swapaxes(h, 0, 1),
+        jnp.float32,
+        mask=None if masks is None else masks["r"],
+        kernel=cfg.sparse.kernel,
+        block=cfg.sparse.kernel_block,
+        pack=None if pack is None else pack["r"],
+    )
+    return jnp.swapaxes(rec, 0, 1)  # (B, nh, 4hd)
+
+
+def _slstm_cell(p, state, wx_t, cfg, masks=None, pack=None):
     """wx_t: (B, 4d) input contribution at step t."""
     nh = cfg.n_heads
     hd = cfg.d_model // nh
     B = wx_t.shape[0]
     c, n, h, m = state["c"], state["n"], state["h"], state["m"]
-    rec = jnp.einsum("bnh,nhk->bnk", h, p["r"].astype(jnp.float32))  # (B,nh,4hd)
+    rec = _recurrent(p, h, cfg, masks, pack)  # (B,nh,4hd)
     g = wx_t.reshape(B, nh, 4 * hd).astype(jnp.float32) + rec
     z_pre, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)  # each (B,nh,hd)
     logf = jax.nn.log_sigmoid(f_pre)
@@ -221,31 +289,45 @@ def _slstm_cell(p, state, wx_t, cfg):
     return {"c": c, "n": n, "h": h_new, "m": m_new}
 
 
-def slstm(p, x, cfg, *, state=None):
-    """x: (B,S,d) -> (out, final_state). lax.scan over time."""
+def slstm(p, x, cfg, *, state=None, masks=None, pack=None):
+    """sLSTM forward.  x: (B,S,d) -> (out, final_state); lax.scan over time.
+
+    masks: this block's mask subtree — ``w_in``/``wo`` dispatch through
+    ``layers.linear`` and the per-head recurrent bank ``r`` through
+    ``layers.grouped_linear`` (grouped kernels, one launch per step).  None
+    keeps the legacy pre-masked contract.  pack: matching PackState subtree;
+    ``r``'s entry is GROUPED (leading head dim — core/pack.py).
+    """
+    assert_total_dispatch(
+        masks, _SLSTM_DISPATCHED, kernel=cfg.sparse.kernel, where="slstm"
+    )
     B, S, d = x.shape
     nh = cfg.n_heads
     hd = d // nh
-    wx = linear(p["w_in"], x)  # (B,S,4d)
+    wx = linear(p["w_in"], x, **_kw(cfg, masks, "w_in", pack))  # (B,S,4d)
     if state is None:
         state = init_slstm_state(cfg, B)
 
     def step(carry, wx_t):
-        new = _slstm_cell(p, carry, wx_t, cfg)
+        new = _slstm_cell(p, carry, wx_t, cfg, masks, pack)
         return new, new["h"]
 
     state, hs = jax.lax.scan(step, state, jnp.swapaxes(wx, 0, 1))
     h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)  # (B,S,nh,hd)
     h = rmsnorm(p["norm"], h).reshape(B, S, d)
-    return linear(p["wo"], h), state
+    return linear(p["wo"], h, **_kw(cfg, masks, "wo", pack)), state
 
 
-def slstm_decode(p, x_t, state, cfg):
+def slstm_decode(p, x_t, state, cfg, *, masks=None, pack=None):
+    """One decode step; same dispatch contract as ``slstm`` (pack reused)."""
+    assert_total_dispatch(
+        masks, _SLSTM_DISPATCHED, kernel=cfg.sparse.kernel, where="slstm_decode"
+    )
     B, _, d = x_t.shape
     nh = cfg.n_heads
     hd = d // nh
-    wx = linear(p["w_in"], x_t)[:, 0]
-    state = _slstm_cell(p, state, wx, cfg)
+    wx = linear(p["w_in"], x_t, **_kw(cfg, masks, "w_in", pack))[:, 0]
+    state = _slstm_cell(p, state, wx, cfg, masks, pack)
     h = state["h"][:, None].astype(x_t.dtype)  # (B,1,nh,hd)
     h = rmsnorm(p["norm"], h).reshape(B, 1, d)
-    return linear(p["wo"], h), state
+    return linear(p["wo"], h, **_kw(cfg, masks, "wo", pack)), state

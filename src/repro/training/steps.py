@@ -119,15 +119,18 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
             # static shape check: random_block_mask silently falls back to
             # elementwise masks on non-divisible layers, which the block
             # kernel would execute WRONGLY (whole blocks run unmasked) —
-            # fail loudly instead of training a corrupted topology.
+            # fail loudly instead of training a corrupted topology.  2-D
+            # weights dispatch through the plain kernels; 3-D weight BANKS
+            # (MoE experts, xLSTM per-head recurrences) dispatch through the
+            # grouped kernels, whose blocks tile the trailing two dims.
             bs = sp.block_shape
             flat_p = tree_paths(params)
             bad = [
                 name
                 for name in smap
-                if len(flat_p[name].shape) != 2
-                or flat_p[name].shape[0] % bs[0]
-                or flat_p[name].shape[1] % bs[1]
+                if len(flat_p[name].shape) not in (2, 3)
+                or flat_p[name].shape[-2] % bs[0]
+                or flat_p[name].shape[-1] % bs[1]
             ]
             if bad:
                 raise ValueError(

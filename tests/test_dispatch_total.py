@@ -1,0 +1,336 @@
+"""Total kernel dispatch: the ssm/xlstm/moe families on the Pallas kernels.
+
+Mirrors tests/test_pack_state.py for the model families newly ported onto the
+sparse kernels (docs/kernels.md#dispatch-coverage): grouped-kernel parity vs
+the jnp oracles, full-model fwd/grad equivalence against the dense reference
+for BOTH Pallas modes, grouped PackState entries (per-expert / per-head
+CSC+CSR), pack refresh-on-topology-update, decode-path pack reuse, and the
+loud silent-fallback guards.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SparseConfig
+from repro.core import block_mask_of, tree_paths
+from repro.core.pack import is_pack_entry, pack_mismatch, pack_stats
+from repro.data import batch_for
+from repro.kernels import (
+    grouped_block_sparse_linear,
+    grouped_masked_linear,
+)
+from repro.kernels import ref
+from repro.kernels.block_sparse_matmul import (
+    pack_group_mask,
+    pack_group_mask_rows,
+)
+from repro.models import lm_decode, lm_forward, lm_loss, lm_prefill
+from repro.optim import LRSchedule, OptConfig
+from repro.training import (
+    init_train_state,
+    make_algo,
+    make_rigl_step,
+    make_train_step,
+    refresh_pack,
+)
+
+BLOCK = 16
+ARCHS = ("hymba-1.5b", "xlstm-1.3b", "qwen2-moe-a2.7b")
+# subtrees this PR ported onto the kernels, per family
+NEW_SUBTREES = {
+    "hymba-1.5b": ("ssm",),
+    "xlstm-1.3b": ("mlstm", "slstm"),
+    "qwen2-moe-a2.7b": ("moe",),
+}
+
+
+def _sp(kernel):
+    return SparseConfig(
+        sparsity=0.8, method="rigl", delta_t=10, alpha=0.3, kernel=kernel,
+        block_shape=(BLOCK, BLOCK), kernel_block=(128, BLOCK, BLOCK),
+    )
+
+
+def _cfg(arch, kernel="block_sparse"):
+    cfg = get_config(arch, smoke=True)
+    return dataclasses.replace(cfg, dtype="float32", sparse=_sp(kernel))
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_state(request):
+    """One block_sparse train state per arch; masks/params are reused for the
+    masked and dense modes (the masks are block-aligned, which every mode
+    accepts)."""
+    cfg = _cfg(request.param)
+    st, _, _ = init_train_state(
+        jax.random.PRNGKey(0), cfg, OptConfig(kind="adam")
+    )
+    b = batch_for(cfg, 0, 2, 16, learnable=True)
+    return request.param, cfg, st, b
+
+
+@pytest.fixture(scope="module")
+def dense_ref(arch_state):
+    """Dense-reference forward + gradient on the SAME raw params + masks."""
+    arch, cfg, st, b = arch_state
+    cfg_d = dataclasses.replace(cfg, sparse=_sp("dense"))
+    h = lm_forward(st["params"], cfg_d, b, masks=st["masks"])[0]
+    g = jax.grad(lambda p: lm_loss(p, cfg_d, b, masks=st["masks"]))(
+        st["params"]
+    )
+    return h, g
+
+
+# ---------------------------------------------------------------------------
+# grouped kernels vs the jnp oracles (unit level)
+# ---------------------------------------------------------------------------
+
+def test_grouped_masked_linear_matches_ref():
+    key = jax.random.PRNGKey(0)
+    G, M, K, N = 3, 10, 64, 48
+    x = jax.random.normal(key, (G, M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (G, K, N), jnp.float32)
+    m = jax.random.uniform(jax.random.fold_in(key, 2), (G, K, N)) < 0.3
+    out = grouped_masked_linear(x, w, m, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.grouped_masked_matmul_ref(x, w, m)),
+        rtol=1e-5, atol=1e-5,
+    )
+    gx, gw = jax.grad(
+        lambda a, b: jnp.sum(grouped_masked_linear(a, b, m, interpret=True)),
+        (0, 1),
+    )(x, w)
+    rx, rw = jax.grad(
+        lambda a, b: jnp.sum(ref.grouped_masked_matmul_ref(a, b, m)), (0, 1)
+    )(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-5)
+    # the per-group wgrad cotangent is EXACTLY zero off-mask
+    assert bool(jnp.all(jnp.where(m, 0.0, gw) == 0))
+
+
+def test_grouped_block_sparse_all_topology_sources_bit_identical():
+    key = jax.random.PRNGKey(1)
+    G, M, K, N, bkn = 3, 10, 64, 48, 16
+    x = jax.random.normal(key, (G, M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (G, K, N), jnp.float32)
+    bm = np.array(np.asarray(
+        jax.random.uniform(jax.random.fold_in(key, 2), (G, K // bkn, N // bkn))
+        < 0.4
+    ))
+    bm[1] = False  # dead group: legal, outputs zeros
+    blk = (128, bkn, bkn)
+    out_mask = grouped_block_sparse_linear(
+        x, w, jnp.asarray(bm), block=blk, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_mask),
+        np.asarray(ref.grouped_block_sparse_matmul_ref(x, w, jnp.asarray(bm), bkn, bkn)),
+        rtol=1e-5, atol=1e-5,
+    )
+    assert bool(jnp.all(out_mask[1] == 0))
+    idx, cnt = pack_group_mask(bm)
+    ridx, rcnt = pack_group_mask_rows(bm)
+    entry = {"idx": idx, "cnt": cnt, "ridx": ridx, "rcnt": rcnt}
+    out_pack = grouped_block_sparse_linear(
+        x, w, block=blk, pack=entry, interpret=True
+    )
+    # tight (host-packed) grids are bit-identical to the concrete-mask pack
+    np.testing.assert_array_equal(np.asarray(out_pack), np.asarray(out_mask))
+    # ... and to the traced worst-case pack (mask is a tracer under jit)
+    out_traced = jax.jit(
+        lambda a, b, mm: grouped_block_sparse_linear(
+            a, b, mm, block=blk, interpret=True
+        )
+    )(x, w, jnp.asarray(bm))
+    np.testing.assert_array_equal(np.asarray(out_traced), np.asarray(out_mask))
+    # grads through the tight pack match the oracle
+    gx, gw = jax.grad(
+        lambda a, b: jnp.sum(grouped_block_sparse_linear(
+            a, b, block=blk, pack=entry, interpret=True
+        )),
+        (0, 1),
+    )(x, w)
+    rx, rw = jax.grad(
+        lambda a, b: jnp.sum(
+            ref.grouped_block_sparse_matmul_ref(a, b, jnp.asarray(bm), bkn, bkn)
+        ),
+        (0, 1),
+    )(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full-model equivalence: kernel modes vs the dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["masked", "block_sparse"])
+def test_forward_matches_dense_reference(arch_state, dense_ref, kernel):
+    arch, cfg, st, b = arch_state
+    cfg_k = dataclasses.replace(cfg, sparse=_sp(kernel))
+    h = lm_forward(
+        st["params"], cfg_k, b, masks=st["masks"],
+        pack=st["pack"] if kernel == "block_sparse" else None,
+    )[0]
+    np.testing.assert_allclose(
+        np.asarray(h), np.asarray(dense_ref[0]), rtol=1e-4, atol=1e-4,
+        err_msg=f"{arch}/{kernel}",
+    )
+
+
+@pytest.mark.parametrize("kernel", ["masked", "block_sparse"])
+def test_grads_match_dense_reference(arch_state, dense_ref, kernel):
+    arch, cfg, st, b = arch_state
+    cfg_k = dataclasses.replace(cfg, sparse=_sp(kernel))
+    g = jax.grad(
+        lambda p: lm_loss(
+            p, cfg_k, b, masks=st["masks"],
+            pack=st["pack"] if kernel == "block_sparse" else None,
+        )
+    )(st["params"])
+    fk, fd = tree_paths(g), tree_paths(dense_ref[1])
+    for name in fk:
+        np.testing.assert_allclose(
+            np.asarray(fk[name]), np.asarray(fd[name]), rtol=1e-4, atol=1e-4,
+            err_msg=f"{arch}/{kernel}/{name}",
+        )
+
+
+def test_tight_pack_equals_traced_fallback_bitexact(arch_state):
+    """Under jit the no-pack path uses the traced worst-case-width packs; the
+    PackState path must be bit-identical (same add order, padded slots
+    contribute nothing) — now including the grouped banks."""
+    arch, cfg, st, b = arch_state
+    h_tight = jax.jit(
+        lambda p, m, pk: lm_forward(p, cfg, b, masks=m, pack=pk)[0]
+    )(st["params"], st["masks"], st["pack"])
+    h_padded = jax.jit(lambda p, m: lm_forward(p, cfg, b, masks=m)[0])(
+        st["params"], st["masks"]
+    )
+    np.testing.assert_array_equal(np.asarray(h_tight), np.asarray(h_padded))
+
+
+# ---------------------------------------------------------------------------
+# PackState: grouped entries for the new subtrees
+# ---------------------------------------------------------------------------
+
+def test_pack_covers_new_subtrees(arch_state):
+    arch, cfg, st, b = arch_state
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        st["pack"], is_leaf=is_pack_entry
+    )
+    from repro.core.masks import path_name
+
+    entries = {path_name(p): e for p, e in flat}
+    masks = tree_paths(st["masks"])
+    for name, m in masks.items():
+        if m is None:
+            continue
+        sub = name.split("/")[2] if name.startswith("layers/") else name
+        if sub in NEW_SUBTREES[arch]:
+            e = entries[name]
+            assert e is not None, f"no pack entry for {name}"
+            assert e["idx"].ndim == (3 if m.ndim == 3 else 2), name
+            # grouped entries agree with the per-group host pack
+            if m.ndim == 3:
+                bm = np.asarray(block_mask_of(np.asarray(m, bool), (BLOCK, BLOCK)))
+                idx_ref, cnt_ref = pack_group_mask(
+                    bm, max_count=int(e["idx"].shape[-1])
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(e["idx"]), np.asarray(idx_ref), err_msg=name
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(e["cnt"]), np.asarray(cnt_ref), err_msg=name
+                )
+    assert int(pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK))) == 0
+    stats = pack_stats(st["pack"])
+    assert stats["grid_iters_tight"] < stats["grid_iters_padded"]
+    # at least one grouped entry exists for the moe/xlstm archs
+    if arch != "hymba-1.5b":
+        assert any(v["groups"] > 1 for v in stats["layers"].values())
+
+
+def test_refresh_after_rigl_update_covers_grouped_banks():
+    cfg = _cfg("qwen2-moe-a2.7b")
+    opt = OptConfig(kind="adam", weight_decay=0.0, grad_clip=1.0)
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=2, total_steps=30)
+    st, _, _ = init_train_state(jax.random.PRNGKey(1), cfg, opt)
+    train = jax.jit(make_train_step(cfg, opt, lr))
+    rigl = jax.jit(make_rigl_step(cfg, make_algo(cfg, 30), lr))
+    st, m = train(st, batch_for(cfg, 0, 2, 16, learnable=True))
+    assert int(m["pack_stale"]) == 0
+    st, _ = rigl(st, batch_for(cfg, 1, 2, 16, learnable=True))
+    stale = int(pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK)))
+    assert stale > 0, "rigl moved no blocks — test cfg too static"
+    st = refresh_pack(st, cfg)
+    assert int(pack_mismatch(st["masks"], st["pack"], (BLOCK, BLOCK))) == 0
+    st, m = train(st, batch_for(cfg, 2, 2, 16, learnable=True))
+    assert int(m["pack_stale"]) == 0
+    assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# serve: ssm/xlstm decode through the kernels, one pack reused per topology
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b"])
+def test_decode_path_pack_reuse(arch):
+    cfg = _cfg(arch)
+    st, _, _ = init_train_state(
+        jax.random.PRNGKey(2), cfg, OptConfig(kind="adam")
+    )
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0, cfg.vocab_size)
+    kw = dict(masks=st["masks"])
+    lg_n, c_n = lm_prefill(
+        st["params"], cfg, {"tokens": toks[:, :8]}, max_len=12, **kw
+    )
+    lg_p, c_p = lm_prefill(
+        st["params"], cfg, {"tokens": toks[:, :8]}, max_len=12,
+        pack=st["pack"], **kw
+    )
+    np.testing.assert_array_equal(np.asarray(lg_n), np.asarray(lg_p))
+    for t in range(8, 10):
+        step_tok = toks[:, t : t + 1]
+        lg_n, c_n = lm_decode(st["params"], cfg, c_n, step_tok, pos=t, **kw)
+        # the SAME pack object is reused every decode step — no re-packing
+        lg_p, c_p = lm_decode(
+            st["params"], cfg, c_p, step_tok, pos=t, pack=st["pack"], **kw
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lg_n), np.asarray(lg_p), err_msg=f"pos {t}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# loud guards: no silent dense fallback under kernel dispatch
+# ---------------------------------------------------------------------------
+
+def test_assert_total_dispatch_flags_unconsumed_mask():
+    from repro.models.layers import assert_total_dispatch
+
+    masks = {"wi": {"w": jnp.ones((4, 4), bool)}, "extra": {"w": jnp.ones((4, 4), bool)}}
+    # all leaves consumed: fine
+    assert_total_dispatch(masks, ("wi", "extra"), kernel="masked", where="t")
+    # dense mode never raises (w*m is the intended path there)
+    assert_total_dispatch(masks, ("wi",), kernel="dense", where="t")
+    with pytest.raises(RuntimeError, match="extra"):
+        assert_total_dispatch(masks, ("wi",), kernel="masked", where="t")
+
+
+def test_local_masked_fallback_is_loud():
+    from repro.models.model import _local_masked
+
+    p = {"sub": {"wi": {"w": jnp.ones((4, 4))}}}
+    masks = {"sub": {"wi": {"w": jnp.ones((4, 4), bool)}}}
+    # legacy modes still work
+    out = _local_masked(p, masks, "sub", kernel="dense")
+    np.testing.assert_array_equal(np.asarray(out["wi"]["w"]), np.ones((4, 4)))
+    assert _local_masked(p, None, "sub", kernel="masked") is p["sub"]
+    with pytest.raises(RuntimeError, match="dispatch"):
+        _local_masked(p, masks, "sub", kernel="block_sparse")
