@@ -4,12 +4,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test docs-check bench-kernels
+.PHONY: verify test test-kernels docs-check bench-kernels
 
 verify: test docs-check
 
 test:
 	$(PY) -m pytest -x -q
+
+# kernel tier only (marker registered in pytest.ini): interpret-mode Pallas
+# parity, custom-VJP grads, PackState/AttnSchedule machinery — the slice to
+# re-run after touching src/repro/kernels or core/{pack,attn_sched}.py
+test-kernels:
+	$(PY) -m pytest -x -q -m kernels
 
 docs-check:
 	$(PY) scripts/check_doc_links.py

@@ -14,6 +14,13 @@ Block sparsity scales HBM weight bytes AND MXU FLOPs with block density d in
 all three matmuls of a train step, so the fwd+bwd speedup bound is 1/d — the
 paper's "fixed FLOPs throughout training" realized at the kernel level.
 
+Attention rows (``kernel/flash_*``) extend the same accounting to the score
+grid: AttnSchedule-driven flash attention (core/attn_sched.py) launches only
+live KV blocks per q row, vs the padded baseline that @pl.when-guarded dead
+blocks but still DMA'd them; grid/DMA fractions are recorded AND asserted
+(tight grid fraction <= the @pl.when path's computed-block fraction, and
+<= 0.5 at Sk=4096 with window=512).
+
 ``python -m benchmarks.kernel_bench`` additionally writes BENCH_kernels.json
 (schema: {"rows": [...], "meta": {...}}) so the perf trajectory is tracked
 across PRs from this one onward.
@@ -297,6 +304,121 @@ def _moe_grouped_rows(key):
     return rows
 
 
+def _attention_rows(key):
+    """Flash-attention rows: tight (AttnSchedule) vs padded grids + the
+    wasted-DMA accounting that motivated them.
+
+    The original causal kernel launched the full Sk/bk grid and @pl.when-
+    guarded dead blocks — skipping their MXU work but still DMAing K/V for
+    every block (dma_fraction_plwhen = 1.0).  The schedule-driven kernels
+    clamp padded slots' index_map to the last live block, so K/V DMA drops to
+    the live-block fraction in BOTH modes, and tight mode additionally cuts
+    launched iterations to width/n_k.  Recorded (and asserted) orderings:
+
+      grid_fraction_tight <= compute_fraction_plwhen   (what @pl.when ran)
+      grid_fraction_tight <= 0.5 at Sk=4096, window=512 (acceptance bound)
+      live_fraction <= grid_fraction_tight             (width is a row max)
+    """
+    from repro.core.attn_sched import (
+        attn_sched_stats,
+        build_attn_schedule,
+        live_block_mask,
+    )
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    rows = []
+    # grid/DMA accounting at the serving shape the ISSUE pins: Sk=4096
+    S, b = 4096, 128
+    # NOTE: the repo's window semantics is lower-bound only (kpos > qpos -
+    # window), so window WITHOUT causal barely clips — the accounting rows
+    # are the two families that matter at serving time
+    for name, causal, window in (
+        ("causal", True, 0),
+        ("causal_w512", True, 512),
+    ):
+        sched = build_attn_schedule(S, S, b, b, causal=causal, window=window)
+        st = attn_sched_stats(sched)
+        # blocks the old @pl.when path COMPUTED (it DMA'd all of them, plus
+        # every dead block): the causal-only live set, or everything when
+        # the family has no causal term to guard on
+        plwhen_live = int(
+            live_block_mask(S, S, b, b, causal=causal, window=0).sum()
+        )
+        compute_fraction_plwhen = plwhen_live / st["grid_iters_padded"]
+        assert st["live_fraction"] <= st["grid_fraction"] + 1e-9
+        # DMA always shrinks to the live fraction (the @pl.when path DMA'd
+        # every block, fraction 1.0)
+        assert st["live_fraction"] < 1.0
+        if causal and window:
+            # causal+window rows also clip ITERATIONS below what @pl.when
+            # even computed, and below half the dense grid (acceptance
+            # bound).  Pure causal is the known exception: its last q row
+            # attends all n_k blocks, so width == n_k and only the DMA
+            # shrinks.
+            assert st["grid_fraction"] <= compute_fraction_plwhen + 1e-9, (
+                name, st["grid_fraction"], compute_fraction_plwhen,
+            )
+            assert st["grid_fraction"] <= 0.5, (name, st["grid_fraction"])
+        rows.append({
+            "name": f"kernel/flash_sched_{name}_S{S}",
+            "us_per_call": 0.0,  # accounting row: fractions are the payload
+            "derived": {
+                "grid_iters_tight": st["grid_iters_tight"],
+                "grid_iters_padded": st["grid_iters_padded"],
+                "grid_fraction_tight": round(st["grid_fraction"], 4),
+                "live_blocks": st["live_blocks"],
+                "live_fraction": round(st["live_fraction"], 4),
+                "compute_fraction_plwhen": round(compute_fraction_plwhen, 4),
+                "dma_fraction_plwhen": 1.0,  # the old kernel DMA'd every block
+                "dma_fraction_sched": round(st["live_fraction"], 4),
+            },
+        })
+    # interpret-mode wall time tight vs padded at a small windowed shape (one
+    # python kernel body per grid cell => the RATIO tracks iterations), plus
+    # fwd+bwd parity canaries vs the jnp oracle
+    Sb, d, window = 1024, 64, 256
+    q = jax.random.normal(jax.random.fold_in(key, 40), (1, Sb, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 41), (1, Sb, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 42), (1, Sb, d), jnp.float32)
+    f_tight = lambda a, b_, c: flash_attention(
+        a, b_, c, causal=True, window=window, tight=True, interpret=True
+    )
+    f_padded = lambda a, b_, c: flash_attention(
+        a, b_, c, causal=True, window=window, tight=False, interpret=True
+    )
+    t_tight = _time(f_tight, q, k, v, iters=3)
+    t_padded = _time(f_padded, q, k, v, iters=3)
+    out_t, out_p = f_tight(q, k, v), f_padded(q, k, v)
+    expect = flash_attention_ref(q, k, v, causal=True, window=window)
+    err_fwd = float(jnp.max(jnp.abs(out_t - expect)))
+    g_t = jax.grad(lambda a: jnp.sum(jnp.sin(f_tight(a, k, v))))(q)
+    g_r = jax.grad(
+        lambda a: jnp.sum(jnp.sin(flash_attention_ref(
+            a, k, v, causal=True, window=window
+        )))
+    )(q)
+    err_bwd = float(jnp.max(jnp.abs(g_t - g_r)))
+    assert err_fwd <= 1e-5 and err_bwd <= 1e-5, (err_fwd, err_bwd)
+    st = attn_sched_stats(
+        build_attn_schedule(Sb, Sb, 128, 128, causal=True, window=window)
+    )
+    rows.append({
+        "name": f"kernel/flash_tight_vs_padded_w{window}_S{Sb}",
+        "us_per_call": t_tight,
+        "derived": {
+            "us_per_call_padded": t_padded,
+            "grid_iters_tight": st["grid_iters_tight"],
+            "grid_iters_padded": st["grid_iters_padded"],
+            "grid_fraction": round(st["grid_fraction"], 4),
+            "bit_identical": bool(jnp.array_equal(out_t, out_p)),
+            "parity_max_abs_err_fwd": err_fwd,
+            "parity_max_abs_err_bwd": err_bwd,
+        },
+    })
+    return rows
+
+
 def run(quick=True):
     M = K = N = 1024
     key = jax.random.PRNGKey(0)
@@ -379,6 +501,9 @@ def run(quick=True):
     # grouped tight-vs-padded grids and grouped-kernel parity canaries.
     rows.extend(_ssm_rows(key))
     rows.extend(_moe_grouped_rows(key))
+    # attention: schedule-driven tight grids vs the padded/@pl.when baseline
+    # (grid + DMA fractions, tight-vs-padded wall time, fwd+bwd parity)
+    rows.extend(_attention_rows(key))
     # interpret-mode correctness canaries for the Pallas path itself (cheap
     # shapes — wall time here is NOT meaningful, only parity is)
     xs = jax.random.normal(key, (128, 256), jnp.float32)

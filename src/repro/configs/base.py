@@ -67,6 +67,31 @@ class SparseConfig:
                        contraction rows.  128-aligned tiles target TPU v5e;
                        for kernel='block_sparse', (bk, bn) doubles as the
                        weight-block granularity and must match block_shape.
+      pack_width_slack width hysteresis for PackState refreshes (core/pack.py):
+                       packed widths are rounded UP to the next multiple of
+                       ``ceil(slack * worst_case_width)`` (and never shrink),
+                       so drifting topologies re-trace the jitted step only
+                       when a width crosses a slack step instead of on every
+                       1-wide wiggle.  0.0 (default) keeps exact tight widths;
+                       grouped banks benefit most (one lopsided expert widens
+                       the whole bank's shared width).
+
+    Execution path for ATTENTION score blocks (independent of the weight
+    kernels above; models/attention.py dispatch):
+      attn_kernel      'dense'        pure-jnp chunked attention — scores
+                                      materialize in HBM (reference path; the
+                                      only path supporting logit_softcap).
+                       'flash'        Pallas flash attention, fwd + custom-VJP
+                                      bwd, PADDED grid: the KV loop spans the
+                                      full Sk/bk range with dead score blocks
+                                      guarded off (baseline for parity).
+                       'flash_tight'  same kernels on a host-built
+                                      AttnSchedule (core/attn_sched.py): the
+                                      grid walks only LIVE KV blocks per
+                                      q-row, so causal/sliding-window layers
+                                      skip dead blocks' DMA and iterations —
+                                      the attention twin of tight PackState
+                                      grids.
     """
 
     sparsity: float = 0.8
@@ -79,6 +104,8 @@ class SparseConfig:
     block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
     kernel: str = "dense"
     kernel_block: tuple[int, int, int] = (128, 128, 128)  # (bm, bn, bk) tiles
+    pack_width_slack: float = 0.0  # width hysteresis (0 = exact tight widths)
+    attn_kernel: str = "dense"  # dense | flash | flash_tight
 
 
 def validate_sparse_kernel(sp: SparseConfig) -> None:
@@ -90,6 +117,15 @@ def validate_sparse_kernel(sp: SparseConfig) -> None:
     """
     if sp.kernel not in ("dense", "masked", "block_sparse"):
         raise ValueError(f"unknown sparse.kernel {sp.kernel!r}")
+    if getattr(sp, "attn_kernel", "dense") not in (
+        "dense", "flash", "flash_tight"
+    ):
+        raise ValueError(f"unknown sparse.attn_kernel {sp.attn_kernel!r}")
+    if not 0.0 <= getattr(sp, "pack_width_slack", 0.0) <= 1.0:
+        raise ValueError(
+            f"sparse.pack_width_slack must be in [0, 1] "
+            f"(got {sp.pack_width_slack!r})"
+        )
     if sp.kernel == "block_sparse":
         _, bn, bk = sp.kernel_block
         if sp.block_shape is None or tuple(sp.block_shape) != (bk, bn):

@@ -15,6 +15,11 @@ from .masks import (  # noqa: F401
     random_mask,
     tree_paths,
 )
+from .attn_sched import (  # noqa: F401
+    attn_sched_stats,
+    build_attn_schedule,
+    sched_for,
+)
 from .pack import (  # noqa: F401
     build_pack_state,
     pack_mismatch,

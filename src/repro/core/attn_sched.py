@@ -1,0 +1,236 @@
+"""AttnSchedule — host-built KV-block schedules for tight flash-attention grids.
+
+The flash-attention kernel (kernels/flash_attention.py) tiles the score matrix
+into (bq x bk) blocks.  For causal and sliding-window masks most of those
+blocks are DEAD — every (q, k) position inside them is masked — yet a dense
+grid still launches (and DMAs K/V for) all of them: at Sk = 32k with a 512
+window, >90% of the score grid is dead work.  This module is the attention
+twin of core/pack.py: the set of LIVE KV blocks per query-block row is known
+STATICALLY (it depends only on shapes, block sizes and the mask family — never
+on data), so it is rasterized host-side into a CSR-style schedule
+
+  {"kv_idx": (n_q, width) int32,   # live KV-block ids per q-block, ascending
+   "kv_cnt": (n_q,) int32,         #   -> drives the fwd and dq kernel grids
+   "q_idx":  (n_k, q_width) int32, # reverse view: live q-blocks per KV-block
+   "q_cnt":  (n_k,) int32,         #   -> drives the dk/dv kernel grid
+   "n_live": () int32,             # total live score blocks
+   "n_q/n_k/bq/bk/...": python ints/bools (static metadata, see below)}
+
+and the kernel grid's third dimension becomes ``width`` (the max live count
+over q rows) instead of the worst case n_k.  Padded slots clamp to the last
+live id (no re-DMA) and are @pl.when-guarded, exactly like the block-sparse
+weight packs.
+
+Unlike PackState, a schedule is DERIVED state with no lifecycle: it never
+refreshes (RigL moves weight topology, not mask geometry), it is not
+checkpointed, and it can be (re)built at trace time for free — the arrays
+depend only on static shapes, so they fold into jit constants.  ``sched_for``
+memoizes builds per (Sq, Sk, bq, bk, causal, window, q_offset).
+
+Position convention: key/value column c sits at absolute position c; query
+row r sits at position ``q_offset + r``.  ``q_offset=None`` defaults to
+Sk - Sq (decode-style right alignment: the last query sees every key), which
+reduces to 0 for the ubiquitous Sq == Sk case.  This matches the offset
+arithmetic of models/attention.py::_make_mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = [
+    "live_block_mask",
+    "rasterize_block_mask",
+    "build_attn_schedule",
+    "sched_for",
+    "attn_sched_stats",
+    "is_attn_sched",
+]
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def is_attn_sched(x) -> bool:
+    """Leaf predicate for schedule pytrees (a schedule dict or None)."""
+    return x is None or (isinstance(x, dict) and "kv_idx" in x and "kv_cnt" in x)
+
+
+def live_block_mask(
+    sq: int,
+    sk: int,
+    bq: int,
+    bk: int,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: Optional[int] = None,
+) -> np.ndarray:
+    """(n_q, n_k) bool: block (i, j) is live iff ANY (q, k) inside it is
+    unmasked.  Computed analytically from block position ranges — O(n_q*n_k),
+    no (Sq, Sk) rasterization, so 500k-token schedules stay cheap.
+
+    A block straddling the valid-key boundary (sk not a bk multiple) counts as
+    live when its in-range columns are; columns >= sk are masked in-kernel.
+    The brute-force elementwise rasterizer (``rasterize_block_mask``) is the
+    test oracle for this function (tests/test_flash_attention.py).
+    """
+    if q_offset is None:
+        q_offset = sk - sq
+    n_q, n_k = _cdiv(sq, bq), _cdiv(sk, bk)
+    i = np.arange(n_q)
+    j = np.arange(n_k)
+    # absolute position extremes of each block's VALID rows/cols
+    q_lo = (q_offset + i * bq)[:, None]  # (n_q, 1)
+    q_hi = (q_offset + np.minimum((i + 1) * bq, sq) - 1)[:, None]
+    k_lo = (j * bk)[None, :]  # (1, n_k)
+    k_hi = np.minimum((j + 1) * bk, sk)[None, :] - 1
+    live = np.ones((n_q, n_k), bool)
+    if causal:
+        live &= k_lo <= q_hi  # some key at or below some query position
+    if window:
+        live &= k_hi > q_lo - window  # some key inside the oldest row's window
+    return live
+
+
+def rasterize_block_mask(
+    sq: int,
+    sk: int,
+    bq: int,
+    bk: int,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: Optional[int] = None,
+) -> np.ndarray:
+    """Brute-force oracle: build the full (sq, sk) elementwise mask and reduce
+    per block.  O(sq*sk) — tests only; ``live_block_mask`` is the fast path."""
+    if q_offset is None:
+        q_offset = sk - sq
+    qpos = q_offset + np.arange(sq)[:, None]
+    kpos = np.arange(sk)[None, :]
+    m = np.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    n_q, n_k = _cdiv(sq, bq), _cdiv(sk, bk)
+    out = np.zeros((n_q, n_k), bool)
+    for i in range(n_q):
+        for j in range(n_k):
+            out[i, j] = m[i * bq : (i + 1) * bq, j * bk : (j + 1) * bk].any()
+    return out
+
+
+def _pack_rows(live: np.ndarray):
+    """(R, C) bool -> (idx (R, width) int32, cnt (R,) int32): per-row active
+    column ids, ascending, padded slots 0.  Same stable-argsort packing as
+    kernels/block_sparse_matmul.py::_pack_np, transposed to the row view."""
+    cnt = live.sum(axis=1).astype(np.int32)
+    width = max(int(cnt.max(initial=0)), 1)
+    order = np.argsort(~live, axis=1, kind="stable")
+    idx = order[:, :width].astype(np.int32)
+    idx = np.where(np.arange(width)[None, :] < cnt[:, None], idx, 0)
+    return idx, cnt
+
+
+def build_attn_schedule(
+    sq: int,
+    sk: int,
+    bq: int,
+    bk: int,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: Optional[int] = None,
+) -> dict[str, Any]:
+    """Host-build the schedule dict for one (shape, mask-family) combination.
+
+    ``kv_idx``/``kv_cnt`` drive the forward and dq grids (per q-block, its
+    live KV blocks); ``q_idx``/``q_cnt`` are the transpose view driving the
+    dk/dv grid (per KV-block, its live q blocks) — the same CSC/CSR duality as
+    the weight packs in core/pack.py.  Static metadata (block sizes, mask
+    family, offsets) rides along so the kernel wrapper never re-derives it.
+
+    Degenerate inputs are first-class: window >= sk reduces to the pure-causal
+    schedule, window < bk still keeps >= 1 live block per row (the diagonal),
+    and sq = 1 (decode) yields the single-row schedule over the window's tail.
+    """
+    if q_offset is None:
+        q_offset = sk - sq
+    live = live_block_mask(
+        sq, sk, bq, bk, causal=causal, window=window, q_offset=q_offset
+    )
+    kv_idx, kv_cnt = _pack_rows(live)
+    q_idx, q_cnt = _pack_rows(live.T)
+    # NUMPY leaves on purpose: ``sched_for`` memoizes across traces, and a
+    # jnp.asarray issued INSIDE a jit trace is a tracer — caching it would
+    # leak it into later traces.  Consumers hand these to jit/pallas_call,
+    # which fold them into per-trace constants.
+    return {
+        "kv_idx": kv_idx,
+        "kv_cnt": kv_cnt,
+        "q_idx": q_idx,
+        "q_cnt": q_cnt,
+        "n_live": int(live.sum()),
+        # static metadata (python scalars — hashable, never traced)
+        "sq": sq,
+        "sk": sk,
+        "bq": bq,
+        "bk": bk,
+        "causal": bool(causal),
+        "window": int(window),
+        "q_offset": int(q_offset),
+    }
+
+
+@functools.lru_cache(maxsize=256)
+def sched_for(
+    sq: int,
+    sk: int,
+    bq: int,
+    bk: int,
+    causal: bool,
+    window: int = 0,
+    q_offset: Optional[int] = None,
+):
+    """Memoized ``build_attn_schedule`` — the lazy trace-time entry point.
+
+    Schedules are pure functions of static shapes, so models/attention.py can
+    call this inside a jit trace (numpy on static ints) and the arrays fold
+    into constants; the cache keeps retraces from re-rasterizing.  Callers
+    that want explicit threading (launch/serve.py builds once per session)
+    call this up front and pass the dict down.
+    """
+    return build_attn_schedule(
+        sq, sk, bq, bk, causal=causal, window=window, q_offset=q_offset
+    )
+
+
+def attn_sched_stats(sched) -> dict[str, Any]:
+    """Bookkeeping: tight grid length vs the padded worst case vs live blocks.
+
+    ``grid_fraction`` (launched tight iterations / dense grid) is >=
+    ``live_fraction`` (live blocks / dense grid) by construction — width is a
+    per-row MAX — and both are far below the dense-DMA fraction the padded
+    @pl.when path pays; benchmarks/kernel_bench.py records and asserts the
+    ordering.
+    """
+    kv_idx = np.asarray(sched["kv_idx"])
+    n_q, width = kv_idx.shape
+    n_k = int(np.asarray(sched["q_cnt"]).shape[0])
+    live = int(np.asarray(sched["n_live"]))
+    total = n_q * n_k
+    return {
+        "n_q": n_q,
+        "n_k": n_k,
+        "width": width,
+        "grid_iters_tight": n_q * width,
+        "grid_iters_padded": total,
+        "grid_fraction": n_q * width / total,
+        "live_blocks": live,
+        "live_fraction": live / total,
+    }

@@ -50,6 +50,13 @@ Width policy: ``width = max_j cnt[j]`` (tight; same for ``row_width`` over
 ``rcnt``), but never below the width of ``prev`` when refreshing — widths only
 ever grow within a run, so jit retraces on topology updates are bounded by the
 drift toward the worst case instead of happening on every shrink/grow wiggle.
+``SparseConfig.pack_width_slack`` adds hysteresis on top: widths round UP to
+the next multiple of ``ceil(slack * worst_case)`` (never down), so a topology
+whose per-column max wiggles by a block or two per refresh stays on ONE packed
+shape — a few padded (empty) grid iterations bought against a jit retrace per
+update.  Grouped banks feel this most: their shared width is the max over ALL
+experts/heads, so any one lopsided group used to widen (and retrace) the whole
+bank.
 """
 from __future__ import annotations
 
@@ -68,6 +75,7 @@ __all__ = [
     "pack_mismatch",
     "pack_stats",
     "is_pack_entry",
+    "slack_width",
 ]
 
 
@@ -101,9 +109,24 @@ def _packable(m, block_shape) -> bool:
     )
 
 
+def slack_width(width: int, worst: int, slack: float) -> int:
+    """Round a packed width UP to the next hysteresis step, capped at worst.
+
+    The step is ``ceil(slack * worst)`` (worst = the padded worst-case width,
+    K/bk): slack=0 keeps the exact tight width; slack=0.25 quantizes widths to
+    quarters of the dense grid, so a refresh only changes the packed SHAPE
+    (and thus retraces the jitted step) when the true width crosses a quarter
+    boundary.  Never rounds down — composing with the never-shrink floor.
+    """
+    if slack <= 0.0 or width >= worst:
+        return min(width, worst)
+    step = max(int(np.ceil(slack * worst)), 1)
+    return min(-(-width // step) * step, worst)
+
+
 def pack_entry(
     mask, block_shape, *, min_width: int = 0, min_row_width: int = 0,
-    name: str = "?",
+    slack: float = 0.0, name: str = "?",
 ):
     """Host-pack ONE mask leaf into a PackState entry (CSC + CSR views).
 
@@ -140,8 +163,12 @@ def pack_entry(
             "sparsity to a layer smaller than one block; see "
             "docs/kernels.md#empty-columns-and-dead-layers"
         )
-    width = min(max(int(bm.sum(axis=-2).max()), 1, min_width), nkb)
-    row_width = min(max(int(bm.sum(axis=-1).max()), 1, min_row_width), nnb)
+    width = slack_width(
+        max(int(bm.sum(axis=-2).max()), 1, min_width), nkb, slack
+    )
+    row_width = slack_width(
+        max(int(bm.sum(axis=-1).max()), 1, min_row_width), nnb, slack
+    )
     if grouped:
         idx, cnt = pack_group_mask(bm, max_count=width)
         ridx, rcnt = pack_group_mask_rows(bm, max_count=row_width)
@@ -158,7 +185,7 @@ def pack_entry(
     }
 
 
-def build_pack_state(masks, block_shape, *, prev=None):
+def build_pack_state(masks, block_shape, *, prev=None, slack: float = 0.0):
     """Masks pytree -> PackState pytree (same structure; entry or None leaves).
 
     masks must be CONCRETE (host) arrays — this runs outside jit, on the
@@ -166,6 +193,8 @@ def build_pack_state(masks, block_shape, *, prev=None):
     prev: a previous PackState; per-layer widths are kept >= prev's widths so
     the packed shapes (and thus the jitted train step) stay stable when a
     topology update shrinks some column's count.
+    slack: width hysteresis (SparseConfig.pack_width_slack) — widths round up
+    to the next ``slack_width`` step so drifting topologies retrace less.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         masks, is_leaf=lambda x: x is None
@@ -188,20 +217,20 @@ def build_pack_state(masks, block_shape, *, prev=None):
         entries.append(
             pack_entry(
                 m, block_shape, min_width=min_w, min_row_width=min_rw,
-                name=name,
+                slack=slack, name=name,
             )
         )
     return jax.tree_util.tree_unflatten(treedef, entries)
 
 
-def refresh_pack_state(masks, block_shape, *, prev):
+def refresh_pack_state(masks, block_shape, *, prev, slack: float = 0.0):
     """Re-pack after a topology update (call right after every rigl_step).
 
     Same as build_pack_state but prev is required — refreshing without the
     previous pack would let widths shrink and retrigger jit compilation on
     every update.
     """
-    return build_pack_state(masks, block_shape, prev=prev)
+    return build_pack_state(masks, block_shape, prev=prev, slack=slack)
 
 
 def pack_mismatch(masks, pack, block_shape):

@@ -1,15 +1,32 @@
-"""Flash attention (forward) — the structural fix for the dominant roofline
-term found in EXPERIMENTS.md §Perf: attention scores never visit HBM.
+"""Flash attention (fwd + custom-VJP bwd) on tight, schedule-driven grids.
 
 Online-softmax tiling (Dao et al., adapted to TPU): grid (batch*heads, Sq/bq,
-Sk/bk) with the KV loop innermost; running (max, sum, acc) live in VMEM
-scratch across KV steps. Causal blocks above the diagonal are skipped with
-@pl.when (their DMA is cheap relative to the saved MXU work; a production
-variant would also clip the grid per q-row).
+width) with the KV loop innermost; running (max, sum, acc) live in VMEM
+scratch across KV steps.  ``width`` is the grid-clipping piece: instead of
+launching the full Sk/bk KV range and @pl.when-guarding dead blocks (which
+still DMAs K/V for them — the wasted-DMA note of the original kernel), the
+third grid dimension walks a host-built AttnSchedule (core/attn_sched.py):
+per q-block row, only its LIVE KV blocks, scalar-prefetched so the BlockSpec
+index_map DMAs exactly the K/V tiles the mask family admits.  Causal,
+sliding-window and causal+window masks at long context thus skip both the
+grid iterations AND the DMA of dead score blocks — the same tight-grid
+machinery the weight kernels get from core/pack.py.
 
-Used as the serving-path attention on TPU; the dry-run path keeps the
-pure-jnp chunked attention (pallas cannot lower for TPU on a CPU host), with
-the HBM saving quantified analytically in EXPERIMENTS.md.
+Backward is a custom-VJP Pallas kernel pair reusing the same schedule:
+
+  dq     grid (BH, n_q, width)    — the forward schedule (per-q live KV)
+  dk/dv  grid (BH, n_k, q_width)  — the TRANSPOSED schedule (per-KV live q),
+                                    one kernel producing both cotangents
+
+with the standard flash backward recomputation: p = exp(s - lse) from the
+saved per-row logsumexp, delta = rowsum(do * o) precomputed in jnp.  Training
+therefore no longer falls back to the pure-jnp chunked attention path —
+scores never visit HBM in the forward OR the backward.
+
+The padded variant (``tight=False``) runs the SAME kernels on a schedule
+whose width is padded to the dense worst case Sk/bk — bit-identical outputs,
+longer grid — mirroring the tight-vs-padded weight-pack duality.  ``ref.py``'s
+``flash_attention_ref`` is the jnp oracle for all mask families.
 """
 from __future__ import annotations
 
@@ -21,40 +38,85 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention"]
+from ..core.attn_sched import sched_for
+from .block_sparse_matmul import _clamp
+
+__all__ = ["flash_attention", "effective_blocks"]
 
 NEG_INF = -1e30
+EPS = 1e-30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_k, bq, bk, causal, scale):
-    kb = pl.program_id(2)
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
 
-    @pl.when(kb == 0)
+
+def effective_blocks(
+    sq: int, sk: int, bq: int = 128, bk: int = 128
+) -> tuple[int, int]:
+    """The (bq, bk) ``flash_attention`` will actually run for these lengths
+    (tiles clamp to the 16-padded length for short sequences).  Schedule
+    builders must use THIS so a pre-built sched matches the kernel's grid."""
+    return min(bq, _round_up(sq, 16)), min(bk, _round_up(sk, 16))
+
+
+def _score_mask(qb, kb, *, bq, bk, causal, window, q_offset, sk):
+    """(bq, bk) bool mask for score block (qb, kb), or None when every
+    position is live (interior full-attention block on aligned shapes)."""
+    if not causal and not window and sk % bk == 0:
+        return None
+    qpos = q_offset + qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if sk % bk:  # zero-padded tail keys must never win the softmax
+        mask &= kpos < sk
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(
+    kv_idx_ref, kv_cnt_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+    m_ref, l_ref, acc_ref, *, width, bq, bk, causal, window, q_offset, sk,
+    scale,
+):
+    s_id = pl.program_id(2)
+
+    @pl.when(s_id == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     qb = pl.program_id(1)
+    kb = _clamp(kv_idx_ref, kv_cnt_ref, qb, s_id)
 
-    should_run = True
-    if causal:
-        # skip blocks strictly above the diagonal
-        should_run = kb * bk < (qb + 1) * bq
-
-    @pl.when(should_run)
+    @pl.when(s_id < kv_cnt_ref[qb])
     def _step():
         q = q_ref[0]  # (bq, d)
         k = k_ref[0]  # (bk, d)
         v = v_ref[0]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        if causal:
-            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        mask = _score_mask(
+            qb, kb, bq=bq, bk=bk, causal=causal, window=window,
+            q_offset=q_offset, sk=sk,
+        )
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
+        if mask is not None:
+            # a fully-masked ROW of a live block has s == m_new == NEG_INF,
+            # where exp(s - m_new) = 1 would corrupt l; zero masked slots so
+            # dead rows keep l == 0 (and thus output zeros, see _finish)
+            p = jnp.where(mask, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jnp.dot(
@@ -62,37 +124,366 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_k, bq, bk, c
         )
         m_ref[...] = m_new
 
-    @pl.when(kb == n_k - 1)
+    @pl.when(s_id == width - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        l_raw = l_ref[...]
+        l = jnp.maximum(l_raw, EPS)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        # per-row logsumexp residual for the backward recomputation; rows
+        # with NO live key get +1e30 so the backward's exp(s - lse) is
+        # exactly zero for them instead of overflowing
+        lse = jnp.where(l_raw > 0.0, m_ref[...] + jnp.log(l), -NEG_INF)
+        lse_ref[0, :] = lse[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128,
-                    interpret: bool = False):
-    """q, k, v: (BH, S, d) -> (BH, S, d). Scores never materialize in HBM."""
-    BH, S, d = q.shape
-    bq, bk = min(bq, S), min(bk, S)
-    assert S % bq == 0 and S % bk == 0
-    n_q, n_k = S // bq, S // bk
-    scale = float(1.0 / np.sqrt(d))
-    grid = (BH, n_q, n_k)
-    return pl.pallas_call(
-        functools.partial(
-            _kernel, n_k=n_k, bq=bq, bk=bk, causal=causal, scale=scale
-        ),
+def _dq_kernel(
+    kv_idx_ref, kv_cnt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref, acc_ref, *, width, bq, bk, causal, window, q_offset, sk, scale,
+):
+    """dq (bq, d) += (p * (do@vT - delta)) @ k * scale over live KV blocks."""
+    s_id = pl.program_id(2)
+
+    @pl.when(s_id == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    kb = _clamp(kv_idx_ref, kv_cnt_ref, qb, s_id)
+
+    @pl.when(s_id < kv_cnt_ref[qb])
+    def _step():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        do = do_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        mask = _score_mask(
+            qb, kb, bq=bq, bk=bk, causal=causal, window=window,
+            q_offset=q_offset, sk=sk,
+        )
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, :][:, None])  # masked slots: exp(-inf) = 0
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, :][:, None]) * scale
+        acc_ref[...] += jnp.dot(
+            ds.astype(k.dtype), k, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(s_id == width - 1)
+    def _finish():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_idx_ref, q_cnt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref, dk_acc, dv_acc, *, q_width, bq, bk, causal, window,
+    q_offset, sk, scale,
+):
+    """One kernel for both KV cotangents, walking the TRANSPOSED schedule:
+    dv (bk, d) += pT @ do;  dk (bk, d) += dsT @ q * scale."""
+    s_id = pl.program_id(2)
+
+    @pl.when(s_id == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    kb = pl.program_id(1)
+    qb = _clamp(q_idx_ref, q_cnt_ref, kb, s_id)
+
+    @pl.when(s_id < q_cnt_ref[kb])
+    def _step():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        do = do_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        mask = _score_mask(
+            qb, kb, bq=bq, bk=bk, causal=causal, window=window,
+            q_offset=q_offset, sk=sk,
+        )
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, :][:, None])
+        dv_acc[...] += jnp.dot(
+            p.T.astype(do.dtype), do, preferred_element_type=jnp.float32
+        )
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, :][:, None]) * scale
+        dk_acc[...] += jnp.dot(
+            ds.T.astype(q.dtype), q, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(s_id == q_width - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _fwd_call(q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk,
+              scale, interpret):
+    BH, Sqp, d = q.shape
+    width = kv_idx.shape[1]
+    n_q = Sqp // bq
+    grid = (BH, n_q, width)
+
+    def kv_map(b, qb, s, idx_ref, cnt_ref):
+        return (b, _clamp(idx_ref, cnt_ref, qb, s), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, qb, s, *_: (b, qb, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qb, s, *_: (b, qb, 0)),
+            pl.BlockSpec((1, bq), lambda b, qb, s, *_: (b, qb)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fwd_kernel, width=width, bq=bq, bk=bk, causal=causal,
+            window=window, q_offset=q_offset, sk=sk, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sqp, d), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sqp), jnp.float32),
+        ],
         interpret=interpret,
-    )(q, k, v)
+    )(kv_idx, kv_cnt, q, k, v)
+
+
+def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
+             q_offset, sk, scale, interpret):
+    BH, Sqp, d = q.shape
+    width = kv_idx.shape[1]
+    grid = (BH, Sqp // bq, width)
+
+    def q_map(b, qb, s, *_):
+        return (b, qb, 0)
+
+    def row_map(b, qb, s, *_):
+        return (b, qb)
+
+    def kv_map(b, qb, s, idx_ref, cnt_ref):
+        return (b, _clamp(idx_ref, cnt_ref, qb, s), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bq), row_map),
+            pl.BlockSpec((1, bq), row_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dq_kernel, width=width, bq=bq, bk=bk, causal=causal,
+            window=window, q_offset=q_offset, sk=sk, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, d), q.dtype),
+        interpret=interpret,
+    )(kv_idx, kv_cnt, q, k, v, do, lse, delta)
+
+
+def _dkv_call(q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
+              q_offset, sk, scale, interpret):
+    BH, Skp, d = k.shape
+    q_width = q_idx.shape[1]
+    grid = (BH, Skp // bk, q_width)
+
+    def q_map(b, kb, s, idx_ref, cnt_ref):
+        return (b, _clamp(idx_ref, cnt_ref, kb, s), 0)
+
+    def row_map(b, kb, s, idx_ref, cnt_ref):
+        return (b, _clamp(idx_ref, cnt_ref, kb, s))
+
+    def kv_map(b, kb, s, *_):
+        return (b, kb, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bq), row_map),
+            pl.BlockSpec((1, bq), row_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dkv_kernel, q_width=q_width, bq=bq, bk=bk, causal=causal,
+            window=window, q_offset=q_offset, sk=sk, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Skp, d), k.dtype),
+            jax.ShapeDtypeStruct((BH, Skp, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(q_idx, q_cnt, q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13, 14))
+def _flash(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
+           q_offset, sk, scale, interpret):
+    out, _ = _fwd_call(
+        q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
+        interpret,
+    )
+    return out
+
+
+def _flash_fwd(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
+               q_offset, sk, scale, interpret):
+    out, lse = _fwd_call(
+        q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
+        interpret,
+    )
+    return out, (q, k, v, out, lse, kv_idx, kv_cnt, q_idx, q_cnt)
+
+
+def _flash_bwd(bq, bk, causal, window, q_offset, sk, scale, interpret, res, do):
+    q, k, v, out, lse, kv_idx, kv_cnt, q_idx, q_cnt = res
+    # delta_i = sum_j p_ij * dp_ij = rowsum(do * o): O(S*d) in jnp, f32
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    )
+    dq = _dq_call(
+        q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
+        q_offset, sk, scale, interpret,
+    )
+    dk, dv = _dkv_call(
+        q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
+        q_offset, sk, scale, interpret,
+    )
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dq, dk, dv, z(kv_idx), z(kv_cnt), z(q_idx), z(q_cnt)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "interpret"
+    ),
+)
+def _flash_jit(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, *, bq, bk, causal,
+               window, q_offset, sk, scale, interpret):
+    return _flash(
+        q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
+        q_offset, sk, scale, interpret,
+    )
+
+
+def _pad_width(idx: jnp.ndarray, to: int) -> jnp.ndarray:
+    """Pad a schedule's width up to the dense worst case (padded-grid mode).
+    Slots beyond cnt are clamped by the kernels, so the fill value is inert."""
+    pad = to - idx.shape[1]
+    if pad <= 0:
+        return idx
+    return jnp.pad(idx, ((0, 0), (0, pad)))
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0, sched=None,
+    tight: bool = True, bq: int = 128, bk: int = 128, interpret=None,
+):
+    """q: (BH, Sq, d); k, v: (BH, Sk, d) -> (BH, Sq, d).  Differentiable.
+
+    Softmax attention with scores only ever materialized tile-wise in VMEM,
+    fwd and bwd (custom-VJP Pallas kernel pair).  The mask family is
+    (causal, window) with models/attention.py::_make_mask semantics: query
+    row r sits at absolute position ``Sk - Sq + r`` (right-aligned — 0 offset
+    for the ubiquitous Sq == Sk), keys at their column index; ``window`` masks
+    keys at or below ``qpos - window``.  A row with no live key (possible
+    only in degenerate window-family shapes) outputs zeros, NOT the
+    uniform-softmax artifact the NEG_INF-clamped jnp reference produces.
+
+    sched: an AttnSchedule (core/attn_sched.py) built for EXACTLY this
+    (Sq, Sk, bq, bk, causal, window); None builds one lazily (memoized,
+    trace-time — schedules are static-shape-derived, so this is free).
+    tight=True launches the schedule's tight grid (width = max live KV blocks
+    per q row); tight=False pads the width to the dense worst case Sk/bk —
+    bit-identical output, every slot beyond a row's count an empty iteration
+    (the old @pl.when-only behaviour, kept as the padded baseline).
+
+    Non-aligned Sq/Sk are zero-padded up to the (clamped) block sizes and
+    trimmed after; padded keys are masked in-kernel, padded query rows cost
+    dead rows in the boundary block only.  interpret=None auto-selects
+    (compiled on TPU, interpret elsewhere).
+    """
+    from .ops import auto_interpret
+
+    interpret = auto_interpret() if interpret is None else interpret
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    bq, bk = effective_blocks(Sq, Sk, bq, bk)
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    q_offset = Sk - Sq
+    if sched is None:
+        sched = sched_for(Sq, Sk, bq, bk, causal, window, q_offset)
+    else:
+        got = (sched["sq"], sched["sk"], sched["bq"], sched["bk"],
+               sched["causal"], sched["window"], sched["q_offset"])
+        want = (Sq, Sk, bq, bk, bool(causal), int(window), q_offset)
+        if got != want:
+            raise ValueError(
+                f"flash_attention: sched built for {got} but called with "
+                f"{want} — schedules are per (shape, blocks, mask family); "
+                "see docs/kernels.md#attention-schedules"
+            )
+    kv_idx, kv_cnt = sched["kv_idx"], sched["kv_cnt"]
+    q_idx, q_cnt = sched["q_idx"], sched["q_cnt"]
+    if not tight:  # padded baseline: dense-worst-case grid, same schedule
+        kv_idx = _pad_width(kv_idx, Skp // bk)
+        q_idx = _pad_width(q_idx, Sqp // bq)
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0)))
+    out = _flash_jit(
+        q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq=bq, bk=bk,
+        causal=bool(causal), window=int(window), q_offset=q_offset, sk=Sk,
+        scale=float(1.0 / np.sqrt(d)), interpret=interpret,
+    )
+    return out[:, :Sq]

@@ -12,6 +12,7 @@ __all__ = [
     "grouped_block_sparse_matmul_ref",
     "histogram_abs_ref",
     "kth_value_ref",
+    "flash_attention_ref",
 ]
 
 
@@ -55,16 +56,31 @@ def kth_value_ref(x, k: int):
     return a[k - 1]
 
 
-def flash_attention_ref(q, k, v, causal: bool = True):
-    """(BH, S, d) standard softmax attention oracle."""
-    import numpy as _np
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        q_offset=None):
+    """q: (BH, Sq, d); k, v: (BH, Sk, d) softmax-attention oracle.
 
+    Mask semantics match models/attention.py::_make_mask and the Pallas
+    kernel: query row r sits at absolute position ``q_offset + r`` (default
+    ``Sk - Sq`` — right-aligned, 0 when Sq == Sk), keys at their column
+    index; causal keeps ``kpos <= qpos``, window keeps ``kpos > qpos -
+    window``.  Rows with NO live key are zeroed (the kernel's convention)
+    rather than left as the uniform-softmax artifact of the -1e30 clamp.
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    if q_offset is None:
+        q_offset = sk - sq
     d = q.shape[-1]
     s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
-    s = s / _np.sqrt(d)
+    s = s / np.sqrt(d)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
     if causal:
-        S = q.shape[1]
-        mask = jnp.tril(jnp.ones((S, S), bool))
-        s = jnp.where(mask, s, -1e30)
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    w = jnp.where(mask.any(axis=-1, keepdims=True), w, 0).astype(v.dtype)
     return jnp.einsum("bqk,bkd->bqd", w, v)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..core import apply_masks
 from ..data import batch_for
-from ..models import init_caches, init_lm, lm_decode, lm_prefill
+from ..models import attn_schedules, init_caches, init_lm, lm_decode, lm_prefill
 from ..training import init_train_state
 from ..optim import OptConfig
 
@@ -51,6 +51,12 @@ def serve_session(
     topology.  Packed ONCE per topology, threaded into prefill and reused by
     every decode step, so block_sparse grids launch the true active-block
     count instead of the in-jit padded worst case.
+    With cfg.sparse.attn_kernel='flash_tight', the session also builds its
+    AttnSchedules ONCE for the prompt length (models/attention.py::
+    attn_schedules) and threads them into prefill — prefill's attention
+    launches only live KV blocks.  Decode takes no schedule: the per-token
+    step is a matvec over the ring-bounded cache (nothing block-shaped to
+    skip).
     """
     max_len = max_len or (prompt_len + gen)
     prompt = batch_for(cfg, 0, batch, prompt_len + 1, learnable=True)
@@ -58,8 +64,21 @@ def serve_session(
     if "tokens" in prompt:
         prompt["tokens"] = prompt["tokens"][:, :prompt_len]
 
+    # prefill sequence length as the model actually embeds it (mirrors
+    # models/model.py::_embed_inputs: VLM prompts prepend their patch
+    # embeddings to the text tokens; frames replace tokens outright)
+    if "tokens" in prompt:
+        s_prefill = prompt["tokens"].shape[1] + (
+            cfg.n_patches if "patches" in prompt else 0
+        )
+    else:
+        s_prefill = prompt["frames"].shape[1]
+    sched = attn_schedules(cfg, s_prefill)
+
     prefill = jax.jit(
-        lambda p, m, pk, b: lm_prefill(p, cfg, b, max_len=max_len, masks=m, pack=pk)
+        lambda p, m, pk, b: lm_prefill(
+            p, cfg, b, max_len=max_len, masks=m, pack=pk, attn_sched=sched
+        )
     )
     decode = jax.jit(
         lambda p, m, pk, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m, pack=pk),
@@ -104,9 +123,15 @@ def main():
         "--block", type=int, default=None,
         help="block edge for --kernel block_sparse (sets block_shape + tiles)",
     )
+    p.add_argument(
+        "--attn-kernel", default=None,
+        choices=["dense", "flash", "flash_tight"],
+        help="override cfg.sparse.attn_kernel: prefill attention via the "
+        "Pallas flash kernels (flash_tight = live-KV-block grids)",
+    )
     args = p.parse_args()
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.kernel is not None:
+    if args.kernel is not None or args.attn_kernel is not None:
         import dataclasses
 
         sp = cfg.sparse
@@ -116,8 +141,10 @@ def main():
                 sp, kernel="block_sparse", block_shape=(e, e),
                 kernel_block=(sp.kernel_block[0], e, e),
             )
-        else:
+        elif args.kernel is not None:
             sp = dataclasses.replace(sp, kernel=args.kernel)
+        if args.attn_kernel is not None:
+            sp = dataclasses.replace(sp, attn_kernel=args.attn_kernel)
         cfg = dataclasses.replace(cfg, sparse=sp)
     state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
     if cfg.sparse.kernel in ("masked", "block_sparse"):
@@ -135,7 +162,10 @@ def main():
         toks, stats = serve_session(
             cfg, w_eff, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen
         )
-    print(f"kernel={cfg.sparse.kernel}  generated shape: {toks.shape}")
+    print(
+        f"kernel={cfg.sparse.kernel}  attn_kernel={cfg.sparse.attn_kernel}  "
+        f"generated shape: {toks.shape}"
+    )
     for k, v in stats.items():
         print(f"  {k}: {v:.4f}")
 

@@ -1,4 +1,5 @@
 """Pure-functional JAX model zoo with RigL-sparsifiable weights."""
+from .attention import attn_schedules  # noqa: F401
 from .layers import P, split_params  # noqa: F401
 from .model import (  # noqa: F401
     init_caches,

@@ -16,7 +16,13 @@ import numpy as np
 
 from .layers import P, linear, linear_init, rmsnorm, rmsnorm_init
 
-__all__ = ["attn_init", "attention", "attn_decode", "init_kv_cache"]
+__all__ = [
+    "attn_init",
+    "attention",
+    "attn_decode",
+    "attn_schedules",
+    "init_kv_cache",
+]
 
 NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free in bf16
 
@@ -121,6 +127,71 @@ def _attend_block(q, k, v, mask, cfg):
     return o.reshape(B, Sq, H, hd)
 
 
+def attn_schedules(cfg, S: int):
+    """Host-build the per-layer-kind AttnSchedules for a length-S forward.
+
+    Returns {kind: sched} for the attention kinds the layer stack uses
+    ('global' and/or 'local'), or None when cfg.sparse.attn_kernel doesn't
+    consume schedules.  Schedules are static-shape-derived (core/attn_sched),
+    so this is a trace-time constant build — `serve_session` calls it once
+    per session for explicitness; `attention` builds lazily when not given
+    one.  Block sizes MUST match what the kernel will run, hence
+    ``effective_blocks``.
+    """
+    if getattr(cfg.sparse, "attn_kernel", "dense") != "flash_tight":
+        return None
+    if cfg.block_type == "xlstm":
+        return None  # no attention layers in the stack
+    from ..core.attn_sched import sched_for
+    from ..kernels.flash_attention import effective_blocks
+
+    kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
+    bq, bk = effective_blocks(S, S)
+    return {
+        kind: sched_for(
+            S, S, bq, bk, cfg.causal, cfg.window if kind == "local" else 0, 0
+        )
+        for kind in kinds
+    }
+
+
+def _flash_attend(q, k, v, cfg, *, causal, window, tight, sched=None):
+    """(B, S, H, hd) GQA heads -> flash kernel layout (B*H, S, hd) and back.
+
+    K/V are repeated to the full head count (jnp.repeat is differentiable:
+    the cotangent sums over the group), heads fold into the kernel's batch
+    dim.  Scores exist only tile-wise in VMEM, fwd AND bwd (custom VJP), so
+    ``attn_scores_dtype`` is moot on this path — the kernel accumulates f32.
+
+    Known cost: the repeat materializes H/KV copies of K/V in HBM (G·S·d
+    bytes — small next to the S² score traffic the kernel eliminates, but
+    not free at high G).  Folding the group mapping into the kernels'
+    index_maps instead (DMA each KV tile once per group) is the ROADMAP
+    follow-up; it needs a grid restructure of the dk/dv kernel, whose output
+    must sum over group members.
+    """
+    if cfg.logit_softcap:
+        raise ValueError(
+            "sparse.attn_kernel='flash'/'flash_tight' does not support "
+            "logit_softcap (the online softmax would need the capped scores); "
+            "use attn_kernel='dense' for softcapped configs — see "
+            "docs/kernels.md#attention-schedules"
+        )
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if H != KV:  # GQA: repeat each KV head over its query group
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    from ..kernels.flash_attention import flash_attention
+
+    o = flash_attention(
+        fold(q), fold(k), fold(v), causal=causal, window=window, sched=sched,
+        tight=tight,
+    )
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
 def attention(
     p,
     x,
@@ -131,6 +202,7 @@ def attention(
     q_chunk: int = 4096,
     masks=None,
     pack=None,
+    sched=None,
 ):
     """Full-sequence attention (train / prefill). Returns (out, (k, v)).
 
@@ -139,6 +211,11 @@ def attention(
     masks: the layer's attn mask subtree — routes wq/wk/wv/wo through the
     Pallas sparse kernels per cfg.sparse.kernel (None => legacy dense path).
     pack: matching PackState subtree — tight block_sparse grids (core/pack.py).
+    sched: this kind's AttnSchedule (core/attn_sched.py) when
+    cfg.sparse.attn_kernel == 'flash_tight'; None builds one lazily from the
+    static shapes.  With attn_kernel in {'flash', 'flash_tight'} the score
+    loop runs the Pallas flash kernels (fwd + custom-VJP bwd) instead of the
+    chunked jnp path — tight mode launches only live KV blocks per q row.
     """
     B, S, _ = x.shape
     if positions is None:
@@ -148,7 +225,18 @@ def attention(
     k = rope(k, positions, cfg.rope_theta)
 
     window = cfg.window if kind == "local" else 0
-    if S <= q_chunk:
+    attn_kernel = getattr(cfg.sparse, "attn_kernel", "dense")
+    if attn_kernel not in ("dense", "flash", "flash_tight"):
+        # validate at the point of use, not just validate_sparse_kernel
+        # (which the drivers only reach when the WEIGHT kernel is non-dense):
+        # a typo'd attn_kernel must never silently run the dense path
+        raise ValueError(f"unknown sparse.attn_kernel {attn_kernel!r}")
+    if attn_kernel in ("flash", "flash_tight"):
+        o = _flash_attend(
+            q, k, v, cfg, causal=cfg.causal, window=window,
+            tight=attn_kernel == "flash_tight", sched=sched,
+        )
+    elif S <= q_chunk:
         mask = _make_mask(S, 0, S, 0, cfg.causal, window)
         o = _attend_block(q, k, v, mask, cfg)
     else:

@@ -180,7 +180,8 @@ def _local_masked(p, masks, key, *, kernel):
     return apply_masks(p[key], m)
 
 
-def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
+def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None,
+           attn_sched=None):
     """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux).
 
     masks: this layer's mask subtree.  None => legacy behaviour (params are
@@ -190,6 +191,9 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     materializes masked weights.
     pack: this layer's PackState subtree (mirrors masks) — block_sparse grids
     run at the true active-block count instead of the padded worst case.
+    attn_sched: {kind: AttnSchedule} for cfg.sparse.attn_kernel='flash_tight'
+    (models/attention.py::attn_schedules) — shared across layers of the same
+    kind; None lets the attention build its schedule lazily at trace time.
     """
     aux = jnp.float32(0.0)
     if cfg.block_type == "xlstm":
@@ -211,6 +215,7 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None):
     attn_out, kv = A.attention(
         p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk,
         masks=_sub(masks, "attn"), pack=_sub(pack, "attn"),
+        sched=None if attn_sched is None else attn_sched.get(kind),
     )
     state: Any = kv
     if cfg.block_type == "hymba":
@@ -305,7 +310,8 @@ def _logits(params, cfg, h):
 
 
 def lm_forward(
-    params, cfg, batch, *, collect_states: bool = False, masks=None, pack=None
+    params, cfg, batch, *, collect_states: bool = False, masks=None, pack=None,
+    attn_sched=None,
 ):
     """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux).
 
@@ -313,9 +319,15 @@ def lm_forward(
     the legacy contract: callers pass pre-masked effective weights.
     pack: PackState pytree mirroring masks (core/pack.py) — block_sparse
     kernel grids are sized to the true active-block count (tight grids).
+    attn_sched: {kind: AttnSchedule} for attn_kernel='flash_tight' (see
+    models/attention.py::attn_schedules).  Unlike pack, schedules are
+    STATIC-shape-derived, so None just builds them lazily at trace time —
+    passing them is for explicit per-session threading (launch/serve.py).
     """
     x = _embed_inputs(params, cfg, batch)
     S_ = x.shape[1]
+    if attn_sched is None:
+        attn_sched = A.attn_schedules(cfg, S_)
     positions = jnp.arange(S_)
     aux_total = jnp.float32(0.0)
     states = []
@@ -347,7 +359,8 @@ def lm_forward(
             aux_ = jnp.float32(0.0)
             for j, (p, m, pk) in enumerate(zip(ps, ms, pks)):
                 x_, _, a = _block(
-                    p, x_, cfg, i0 + j, positions=positions, masks=m, pack=pk
+                    p, x_, cfg, i0 + j, positions=positions, masks=m, pack=pk,
+                    attn_sched=attn_sched,
                 )
                 aux_ = aux_ + a
             return x_, aux_
@@ -368,7 +381,7 @@ def lm_forward(
             x = _sp_constraint(x, cfg)
             x, st, aux = _block(
                 p, x, cfg, i, positions=positions, masks=layer_ms[i],
-                pack=layer_pk[i],
+                pack=layer_pk[i], attn_sched=attn_sched,
             )
             aux_total = aux_total + aux
             if collect_states:
@@ -395,7 +408,7 @@ def _forward_scanned(params, cfg, x, positions):
     return x, [], aux
 
 
-def lm_loss(params, cfg, batch, masks=None, pack=None):
+def lm_loss(params, cfg, batch, masks=None, pack=None, attn_sched=None):
     """Mean next-token xent (chunked over seq to bound the logits buffer).
 
     masks != None => kernel-dispatch mode: params are RAW (unmasked) and the
@@ -404,8 +417,13 @@ def lm_loss(params, cfg, batch, masks=None, pack=None):
     custom-VJP wgrad kernels fuse the g⊙m product).
     pack: PackState pytree (core/pack.py) — tight block_sparse grids in both
     the forward and the custom-VJP backward kernels.
+    attn_sched: flash_tight KV-block schedules ({kind: sched}); None builds
+    lazily — training with attn_kernel set runs flash fwd AND bwd (the loss
+    is differentiated through the attention custom VJP, no jnp fallback).
     """
-    h, _, aux = lm_forward(params, cfg, batch, masks=masks, pack=pack)
+    h, _, aux = lm_forward(
+        params, cfg, batch, masks=masks, pack=pack, attn_sched=attn_sched
+    )
     targets = batch["targets"]
     # frontend==patch: loss only over the text positions (last T slots)
     if cfg.frontend == "patch":
@@ -448,15 +466,23 @@ def init_caches(cfg, batch: int, max_len: int):
     return caches
 
 
-def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None):
+def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
+               attn_sched=None):
     """Run the prompt, return (last-position logits, filled caches).
 
     pack: PackState pytree — prefill's block_sparse projections/MLPs run
     tight grids (see lm_decode for the per-token decode counterpart).
+    attn_sched: flash_tight KV-block schedules for the prompt length
+    ({kind: sched}, models/attention.py::attn_schedules) — serve threads one
+    per session; None builds lazily.  Decode does NOT take schedules: a
+    single-query step is a matvec over the (already window-bounded ring)
+    cache — there is no dead score BLOCK to skip, so attn_decode stays on
+    the jnp path by design (docs/kernels.md#attention-schedules).
     """
     assert cfg.causal, "prefill/decode undefined for encoder-only models"
     h, states, _ = lm_forward(
-        params, cfg, batch, collect_states=True, masks=masks, pack=pack
+        params, cfg, batch, collect_states=True, masks=masks, pack=pack,
+        attn_sched=attn_sched,
     )
     B = h.shape[0]
     S_ = h.shape[1]

@@ -155,7 +155,9 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
         # INVARIANT: pack always describes state["masks"] — every rigl_step
         # must be followed by refresh_pack() (launch/train.py does this); the
         # train step's pack_stale metric reports any violation.
-        state["pack"] = build_pack_state(masks, sp.block_shape)
+        state["pack"] = build_pack_state(
+            masks, sp.block_shape, slack=getattr(sp, "pack_width_slack", 0.0)
+        )
     if sp.method == "snfs":
         state["dense_mom"] = jax.tree_util.tree_map(jnp.zeros_like, params)
     return state, axes, sparse_flags
@@ -169,13 +171,17 @@ def refresh_pack(state, cfg):
     Widths never shrink (core/pack.py), so the jitted train step only
     retraces when a layer's max active-block count grows past its packed
     width — bounded drift, not per-update churn.
+    ``cfg.sparse.pack_width_slack`` > 0 additionally rounds refreshed widths
+    up to the next slack step (core.pack.slack_width), trading a few padded
+    grid iterations for fewer retraces when production topologies drift.
     """
     if "pack" not in state:
         return state
     return dict(
         state,
         pack=refresh_pack_state(
-            state["masks"], cfg.sparse.block_shape, prev=state["pack"]
+            state["masks"], cfg.sparse.block_shape, prev=state["pack"],
+            slack=getattr(cfg.sparse, "pack_width_slack", 0.0),
         ),
     )
 

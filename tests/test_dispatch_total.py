@@ -38,6 +38,8 @@ from repro.training import (
     refresh_pack,
 )
 
+pytestmark = pytest.mark.kernels
+
 BLOCK = 16
 ARCHS = ("hymba-1.5b", "xlstm-1.3b", "qwen2-moe-a2.7b")
 # subtrees this PR ported onto the kernels, per family

@@ -1,0 +1,327 @@
+"""Tight-grid flash attention vs the jnp oracle (interpret mode on CPU).
+
+Covers this PR's kernel tier end to end: AttnSchedule builder vs a brute-force
+numpy mask rasterizer (incl. degenerate windows and decode Sq=1), fwd parity
+for {causal, window, causal+window} x {Sq=Sk, Sq!=Sk, non-aligned} x dtypes,
+grad-vs-reference through the custom-VJP dq / dk/dv kernels, tight==padded
+bit-identity, and the model-level attn_kernel dispatch (attention() and
+lm_loss grads with flash_tight vs the chunked jnp path).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attn_sched import (
+    attn_sched_stats,
+    build_attn_schedule,
+    live_block_mask,
+    rasterize_block_mask,
+    sched_for,
+)
+from repro.kernels import ref
+from repro.kernels.flash_attention import effective_blocks, flash_attention
+
+pytestmark = pytest.mark.kernels
+
+# (causal, window) mask families named for test ids
+FAMILIES = {
+    "causal": (True, 0),
+    "window128": (False, 128),
+    "window512": (False, 512),
+    "causal+window128": (True, 128),
+    "causal+window512": (True, 512),
+}
+
+
+def _qkv(key, bh, sq, sk, d, dtype=jnp.float32):
+    q = jax.random.normal(key, (bh, sq, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, sk, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, sk, d)).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# schedule builder vs brute-force rasterizer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "sq,sk,bq,bk",
+    [(256, 256, 128, 128), (256, 256, 64, 64), (100, 300, 64, 64),
+     (1, 512, 128, 128), (640, 640, 128, 128), (48, 48, 16, 16)],
+)
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_live_blocks_match_rasterizer(sq, sk, bq, bk, family):
+    """The analytic block-liveness exactly matches rasterizing the (sq, sk)
+    elementwise mask and reducing per block."""
+    causal, window = FAMILIES[family]
+    fast = live_block_mask(sq, sk, bq, bk, causal=causal, window=window)
+    slow = rasterize_block_mask(sq, sk, bq, bk, causal=causal, window=window)
+    np.testing.assert_array_equal(fast, slow)
+
+
+@pytest.mark.parametrize(
+    "window", [1, 7, 16, 64, 512, 10_000],  # < bk, == bk, >= sk degenerates
+)
+def test_live_blocks_degenerate_windows(window):
+    sq = sk = 192
+    bq = bk = 64
+    fast = live_block_mask(sq, sk, bq, bk, causal=True, window=window)
+    slow = rasterize_block_mask(sq, sk, bq, bk, causal=True, window=window)
+    np.testing.assert_array_equal(fast, slow)
+    if window >= sk:  # window covers everything: reduces to pure causal
+        np.testing.assert_array_equal(
+            fast, live_block_mask(sq, sk, bq, bk, causal=True, window=0)
+        )
+    if window <= bk:  # at most the diagonal + one predecessor block per row
+        assert int(fast.sum(axis=1).max()) <= 2
+
+
+def test_schedule_packing_semantics():
+    """kv_idx/kv_cnt list each q row's live KV blocks ascending (padded 0);
+    q_idx/q_cnt are the exact transpose view."""
+    sched = build_attn_schedule(512, 512, 64, 64, causal=True, window=130)
+    live = live_block_mask(512, 512, 64, 64, causal=True, window=130)
+    kv_idx, kv_cnt = np.asarray(sched["kv_idx"]), np.asarray(sched["kv_cnt"])
+    for i in range(live.shape[0]):
+        act = np.nonzero(live[i])[0]
+        assert kv_cnt[i] == len(act)
+        np.testing.assert_array_equal(kv_idx[i, : len(act)], act)
+        assert (kv_idx[i, len(act):] == 0).all()
+    q_idx, q_cnt = np.asarray(sched["q_idx"]), np.asarray(sched["q_cnt"])
+    for j in range(live.shape[1]):
+        act = np.nonzero(live[:, j])[0]
+        assert q_cnt[j] == len(act)
+        np.testing.assert_array_equal(q_idx[j, : len(act)], act)
+    assert int(sched["n_live"]) == int(live.sum())
+
+
+def test_decode_schedule_sq1():
+    """Decode-style Sq=1: one q row, right-aligned, window-tail KV blocks."""
+    sched = build_attn_schedule(1, 4096, 16, 128, causal=True, window=512)
+    assert np.asarray(sched["kv_cnt"]).shape == (1,)
+    # the single query at position 4095 sees keys (3583, 4095] — exactly
+    # blocks 28..31 (4 blocks of 128; the window lands on a block boundary)
+    assert int(sched["kv_cnt"][0]) == 4
+    np.testing.assert_array_equal(
+        np.asarray(sched["kv_idx"])[0, :4], [28, 29, 30, 31]
+    )
+    stats = attn_sched_stats(sched)
+    assert stats["grid_fraction"] == 4 / 32
+
+
+def test_sched_stats_orderings():
+    """grid_fraction >= live_fraction (width is a per-row max), and both are
+    far under the dense grid for windowed long context."""
+    sched = build_attn_schedule(4096, 4096, 128, 128, causal=True, window=512)
+    st = attn_sched_stats(sched)
+    assert st["live_fraction"] <= st["grid_fraction"] <= 0.5
+    assert st["grid_iters_tight"] == st["n_q"] * st["width"]
+    assert st["grid_iters_padded"] == st["n_q"] * st["n_k"]
+
+
+# ---------------------------------------------------------------------------
+# forward parity vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize(
+    "sq,sk",
+    [(256, 256), (128, 384), (100, 100), (96, 333)],  # =, !=, non-aligned
+)
+def test_forward_parity_f32(family, sq, sk):
+    causal, window = FAMILIES[family]
+    key = jax.random.PRNGKey(hash((family, sq, sk)) % 2**31)
+    q, k, v = _qkv(key, 2, sq, sk, 64)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, bq=64, bk=64, interpret=True
+    )
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("family", ["causal", "causal+window128"])
+def test_forward_parity_bf16(family):
+    causal, window = FAMILIES[family]
+    key = jax.random.PRNGKey(5)
+    q, k, v = _qkv(key, 2, 256, 256, 64, jnp.bfloat16)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, interpret=True
+    )
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=3e-2
+    )
+
+
+def test_tight_equals_padded_bitexact():
+    """Tight and dense-worst-case grids are the SAME kernel on the same
+    schedule — outputs bit-identical, only the grid length differs."""
+    key = jax.random.PRNGKey(7)
+    q, k, v = _qkv(key, 2, 256, 256, 64)
+    t = flash_attention(
+        q, k, v, causal=True, window=128, tight=True, bq=64, bk=64,
+        interpret=True,
+    )
+    p = flash_attention(
+        q, k, v, causal=True, window=128, tight=False, bq=64, bk=64,
+        interpret=True,
+    )
+    assert jnp.array_equal(t, p)
+
+
+def test_explicit_sched_and_mismatch_is_loud():
+    key = jax.random.PRNGKey(8)
+    q, k, v = _qkv(key, 1, 256, 256, 64)
+    bq, bk = effective_blocks(256, 256, 64, 64)
+    sched = sched_for(256, 256, bq, bk, True, 128, 0)
+    out = flash_attention(
+        q, k, v, causal=True, window=128, sched=sched, bq=64, bk=64,
+        interpret=True,
+    )
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+    with pytest.raises(ValueError, match="sched built for"):
+        flash_attention(
+            q, k, v, causal=True, window=512, sched=sched, bq=64, bk=64,
+            interpret=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# backward: custom-VJP dq / dk/dv kernels vs jax.grad of the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_grads_vs_ref(family):
+    causal, window = FAMILIES[family]
+    key = jax.random.PRNGKey(11 + hash(family) % 1000)
+    q, k, v = _qkv(key, 2, 192, 192, 64)
+
+    f_k = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(
+        q, k, v, causal=causal, window=window, bq=64, bk=64, interpret=True
+    )))
+    f_r = lambda q, k, v: jnp.sum(jnp.sin(ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window
+    )))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,sk", [(64, 256), (100, 333)])
+def test_grads_cross_length(sq, sk):
+    """Sq != Sk (right-aligned offsets) and non-aligned lengths through the
+    padding/trim path: padded rows/keys must contribute exactly nothing."""
+    key = jax.random.PRNGKey(13)
+    q, k, v = _qkv(key, 2, sq, sk, 64)
+    f_k = lambda q, k, v: jnp.sum(jnp.cos(flash_attention(
+        q, k, v, causal=True, window=96, bq=64, bk=64, interpret=True
+    )))
+    f_r = lambda q, k, v: jnp.sum(jnp.cos(ref.flash_attention_ref(
+        q, k, v, causal=True, window=96
+    )))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_grads_under_jit_tight_equals_padded():
+    key = jax.random.PRNGKey(17)
+    q, k, v = _qkv(key, 1, 128, 128, 64)
+
+    def loss(tight):
+        return jax.jit(jax.grad(lambda q: jnp.sum(flash_attention(
+            q, k, v, causal=True, window=64, tight=tight, bq=64, bk=64,
+            interpret=True,
+        ) ** 2)))(q)
+
+    np.testing.assert_array_equal(
+        np.asarray(loss(True)), np.asarray(loss(False))
+    )
+
+
+# ---------------------------------------------------------------------------
+# model-level dispatch: attention() / lm_loss with attn_kernel set
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg(attn_kernel, **kw):
+    from repro.configs import get_config
+
+    cfg = get_config("h2o-danube-1.8b", smoke=True)  # SWA stack, window > 0
+    sp = dataclasses.replace(cfg.sparse, attn_kernel=attn_kernel)
+    return dataclasses.replace(cfg, sparse=sp, dtype="float32", **kw)
+
+
+@pytest.mark.parametrize("attn_kernel", ["flash", "flash_tight"])
+def test_model_attention_matches_dense_path(attn_kernel):
+    """attention() with the flash kernels == the chunked jnp path (f32), for
+    both the local (windowed) and global layer kinds, GQA included."""
+    from repro.models.attention import attn_init, attention
+
+    cfg = _smoke_cfg(attn_kernel)
+    key = jax.random.PRNGKey(0)
+    p = jax.tree_util.tree_map(
+        lambda b: b.value, attn_init(key, cfg), is_leaf=lambda x: hasattr(x, "value")
+    )
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, cfg.d_model))
+    for kind in ("local", "global"):
+        out_f, _ = attention(p, x, cfg, kind=kind)
+        out_d, _ = attention(p, x, _smoke_cfg("dense"), kind=kind)
+        np.testing.assert_allclose(
+            np.asarray(out_f), np.asarray(out_d), atol=2e-5
+        )
+
+
+def test_lm_loss_grads_flash_vs_dense():
+    """Training parity: jax.grad(lm_loss) through the attention custom VJP
+    matches the chunked jnp path — no silent fallback, no grad gaps."""
+    from repro.models import init_lm, lm_loss
+
+    cfg = _smoke_cfg("flash_tight")
+    key = jax.random.PRNGKey(1)
+    params, _, _ = init_lm(key, cfg)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (2, 64), 0, cfg.vocab_size),
+    }
+    lf, gf = jax.value_and_grad(lambda p: lm_loss(p, cfg, batch))(params)
+    cfg_d = _smoke_cfg("dense")
+    ld, gd = jax.value_and_grad(lambda p: lm_loss(p, cfg_d, batch))(params)
+    assert abs(float(lf) - float(ld)) < 1e-4
+    for a, b in zip(
+        jax.tree_util.tree_leaves(gf), jax.tree_util.tree_leaves(gd)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=5e-4
+        )
+
+
+def test_softcap_rejected_loudly():
+    from repro.models.attention import attn_init, attention
+
+    cfg = _smoke_cfg("flash_tight")
+    cfg = dataclasses.replace(cfg, logit_softcap=30.0)
+    key = jax.random.PRNGKey(2)
+    p = jax.tree_util.tree_map(
+        lambda b: b.value, attn_init(key, cfg), is_leaf=lambda x: hasattr(x, "value")
+    )
+    x = jax.random.normal(key, (1, 32, cfg.d_model))
+    with pytest.raises(ValueError, match="logit_softcap"):
+        attention(p, x, cfg, kind="global")
+
+
+def test_validate_attn_kernel():
+    from repro.configs.base import SparseConfig, validate_sparse_kernel
+
+    with pytest.raises(ValueError, match="attn_kernel"):
+        validate_sparse_kernel(SparseConfig(attn_kernel="flashiest"))
+    with pytest.raises(ValueError, match="pack_width_slack"):
+        validate_sparse_kernel(SparseConfig(pack_width_slack=1.5))
+    validate_sparse_kernel(SparseConfig(attn_kernel="flash_tight"))

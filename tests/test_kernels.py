@@ -10,6 +10,8 @@ from _hyp import given, settings, st
 from repro.kernels import ref
 from repro.kernels.ops import block_sparse_linear, masked_linear, topk_threshold
 
+pytestmark = pytest.mark.kernels
+
 SHAPES = [(128, 128, 128), (256, 384, 128), (128, 512, 256)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 

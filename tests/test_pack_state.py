@@ -22,6 +22,7 @@ from repro.core.pack import (
     pack_mismatch,
     pack_stats,
     refresh_pack_state,
+    slack_width,
 )
 from repro.data import batch_for
 from repro.kernels.block_sparse_matmul import (
@@ -37,6 +38,8 @@ from repro.training import (
     make_train_step,
     refresh_pack,
 )
+
+pytestmark = pytest.mark.kernels
 
 BLOCK = 16
 
@@ -179,6 +182,80 @@ def test_refresh_widths_never_shrink(state):
             continue
         assert e2["idx"].shape[1] >= e1["idx"].shape[1]
         assert e2["ridx"].shape[1] >= e1["ridx"].shape[1]
+
+
+# ---------------------------------------------------------------------------
+# width hysteresis (SparseConfig.pack_width_slack)
+# ---------------------------------------------------------------------------
+
+def test_slack_width_rounds_up_never_down():
+    assert slack_width(3, 16, 0.0) == 3  # slack off: exact tight width
+    assert slack_width(3, 16, 0.25) == 4  # step = ceil(.25*16) = 4
+    assert slack_width(4, 16, 0.25) == 4
+    assert slack_width(5, 16, 0.25) == 8
+    assert slack_width(15, 16, 0.25) == 16
+    assert slack_width(16, 16, 0.25) == 16  # capped at the worst case
+    assert slack_width(1, 7, 0.5) == 4  # step = ceil(.5*7) = 4
+    for w in range(1, 17):
+        for s in (0.0, 0.1, 0.25, 0.5, 1.0):
+            out = slack_width(w, 16, s)
+            assert w <= out <= 16  # never down, never past worst case
+
+
+def test_slack_reduces_retraces_on_drifting_topology():
+    """Regression for the ROADMAP width-hysteresis item: over a refresh
+    sequence whose per-column max drifts by one block at a time, slacked
+    widths change (=> the jitted step retraces) strictly fewer times."""
+    rng = np.random.RandomState(0)
+    nkb, ncols = 16, 8
+
+    def drifting_masks(steps):
+        # start sparse, drift the per-column count upward one wiggle at a time
+        bm = rng.rand(nkb, ncols) < 0.15
+        bm[0, 0] = True
+        seq = []
+        for _ in range(steps):
+            j = rng.randint(ncols)
+            zeros = np.flatnonzero(~bm[:, j])
+            if len(zeros):
+                bm[zeros[rng.randint(len(zeros))], j] = True
+            seq.append(bm.copy())
+        return seq
+
+    seq = drifting_masks(12)
+    mask_seq = [np.repeat(np.repeat(b, BLOCK, 0), BLOCK, 1) for b in seq]
+
+    def count_retraces(slack):
+        shapes, prev = [], None
+        for m in mask_seq:
+            e = pack_entry(
+                m, (BLOCK, BLOCK), slack=slack,
+                min_width=0 if prev is None else prev["idx"].shape[-1],
+                min_row_width=0 if prev is None else prev["ridx"].shape[-1],
+            )
+            shapes.append((e["idx"].shape, e["ridx"].shape))
+            prev = e
+        # a retrace happens exactly when the packed SHAPES change
+        return sum(1 for a, b in zip(shapes, shapes[1:]) if a != b)
+
+    tight, slacked = count_retraces(0.0), count_retraces(0.25)
+    assert tight > 0, "drift produced no width growth — test rng too static"
+    assert slacked < tight, (slacked, tight)
+
+
+def test_slacked_pack_still_exact(state):
+    """Slack pads the grid width, never the topology: a slacked pack must
+    still reconstruct the masks exactly (pack_mismatch == 0)."""
+    cfg, st = state
+    pack_s = build_pack_state(st["masks"], (BLOCK, BLOCK), slack=0.5)
+    assert int(pack_mismatch(st["masks"], pack_s, (BLOCK, BLOCK))) == 0
+    for e, e0 in zip(
+        jax.tree_util.tree_leaves(pack_s, is_leaf=is_pack_entry),
+        jax.tree_util.tree_leaves(st["pack"], is_leaf=is_pack_entry),
+    ):
+        if e is None:
+            continue
+        assert e["idx"].shape[-1] >= e0["idx"].shape[-1]
 
 
 # ---------------------------------------------------------------------------
