@@ -4,9 +4,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-kernels docs-check bench-kernels
+.PHONY: verify test test-kernels test-serve docs-check bench-kernels bench-serve bench-serve-smoke
 
-verify: test docs-check
+verify: test docs-check bench-serve-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,8 +17,24 @@ test:
 test-kernels:
 	$(PY) -m pytest -x -q -m kernels
 
+# serving tier only: continuous-batching engine, per-slot decode, scheduler,
+# sampler — the slice to re-run after touching src/repro/serving or the
+# decode path (models/{attention,model}.py, launch/serve.py)
+test-serve:
+	$(PY) -m pytest -x -q -m serve
+
 docs-check:
 	$(PY) scripts/check_doc_links.py
 
 bench-kernels:
 	$(PY) -m benchmarks.kernel_bench
+
+# full serving bench: engine vs lockstep on the Poisson staggered workload;
+# regenerates BENCH_serve.json and FAILS under a 1.5x throughput speedup
+bench-serve:
+	$(PY) -m benchmarks.serve_bench
+
+# tiny smoke of the same path for `make verify` (seconds; no speedup gate —
+# fixed dispatch overheads dominate at this scale)
+bench-serve-smoke:
+	$(PY) -m benchmarks.serve_bench --smoke-bench --out /tmp/BENCH_serve_smoke.json

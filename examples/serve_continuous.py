@@ -1,0 +1,50 @@
+"""Continuous batching in ~40 lines: 8 staggered requests, 4 slots.
+
+  PYTHONPATH=src python examples/serve_continuous.py --arch h2o-danube-1.8b
+
+Eight requests with different prompt/generation lengths stream through a
+capacity-4 ServeEngine: the first four admit immediately, the rest enter as
+slots free up — no request waits for the slowest row of a fixed batch.  The
+per-request latency print shows short requests finishing (and recycling
+their slot) while long ones are still decoding.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import apply_masks
+from repro.optim import OptConfig
+from repro.serving import Request, ServeEngine
+from repro.training import init_train_state
+
+p = argparse.ArgumentParser()
+p.add_argument("--arch", default="h2o-danube-1.8b")
+p.add_argument("--capacity", type=int, default=4)
+args = p.parse_args()
+
+cfg = get_config(args.arch, smoke=True)
+state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+weights = apply_masks(state["params"], state["masks"])  # serve THROUGH the masks
+
+engine = ServeEngine(cfg, weights, capacity=args.capacity, max_len=96)
+rng = np.random.default_rng(0)
+shapes = [(4, 8), (12, 32), (6, 4), (20, 16), (8, 48), (16, 8), (5, 24), (10, 12)]
+for rid, (prompt_len, gen) in enumerate(shapes):
+    engine.submit(
+        Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab_size, size=prompt_len).astype(np.int32),
+            max_new_tokens=gen,
+        )
+    )
+
+stats = engine.run()
+print(f"arch={cfg.name}  capacity={args.capacity}  "
+      f"{stats['requests']} requests, {stats['tokens']} tokens in "
+      f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+      f"{stats['decode_steps']} decode steps)")
+for req in sorted(engine.queue.done, key=lambda r: r.rid):
+    print(f"  req {req.rid}: prompt {req.prompt_len:2d} gen "
+          f"{len(req.generated):2d}  latency {req.latency*1e3:7.1f} ms")

@@ -1,10 +1,17 @@
-"""Batched decode driver: prefill a batch of prompts, stream decode steps.
+"""Serving driver: continuous-batching engine (default) or lockstep baseline.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b --smoke \
-      --batch 4 --prompt-len 48 --gen 32 --kernel block_sparse
+      --capacity 4 --requests 16 --arrival-rate 50 --kernel block_sparse
 
 The sparse model serves through the SAME masks it was trained with — test
 FLOPs scale with (1-S) exactly as the paper's Figure 2 test columns.
+
+``main`` drives the continuous-batching ``ServeEngine``
+(serving/engine.py): a Poisson stream of staggered-length requests admitted
+into a fixed slot pool, per-slot decode, slot recycling — so throughput is
+not bottlenecked on the slowest request of a fixed batch.  ``--lockstep``
+runs the legacy fixed-batch ``serve_session`` instead (the baseline
+benchmarks/serve_bench.py compares against).
 
 With ``--kernel`` (or cfg.sparse.kernel) set, prefill and every decode step
 route the projections/MLPs through the Pallas sparse kernels instead of
@@ -12,15 +19,18 @@ pre-materializing w*m: decode is weight-bound, so block_sparse's skipped
 blocks translate ~1:1 into HBM-traffic (and so latency) savings at the
 kernel level.  block_sparse additionally threads the serve state's PackState
 (host-packed (idx, cnt), core/pack.py) through every call, so the kernel
-grids launch the TRUE active-block count — packed once, reused per token.
+grids launch the TRUE active-block count — for the engine that means packed
+ONCE at construction, reused by every prefill and decode step.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get_config
 from ..core import apply_masks
@@ -29,7 +39,32 @@ from ..models import attn_schedules, init_caches, init_lm, lm_decode, lm_prefill
 from ..training import init_train_state
 from ..optim import OptConfig
 
-__all__ = ["serve_session", "main"]
+__all__ = [
+    "serve_session",
+    "staggered_requests",
+    "configure_kernel",
+    "init_serving_state",
+    "main",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _session_fns(cfg, max_len: int, s_prefill: int):
+    """Jitted (prefill, decode) for one (config, shape) — cached at module
+    level (ModelConfig is a frozen, hashable dataclass) so REPEATED sessions
+    of the same shape reuse the compiled executables instead of re-tracing
+    per call.  The AttnSchedule is likewise built once per shape."""
+    sched = attn_schedules(cfg, s_prefill)
+    prefill = jax.jit(
+        lambda p, m, pk, b: lm_prefill(
+            p, cfg, b, max_len=max_len, masks=m, pack=pk, attn_sched=sched
+        )
+    )
+    decode = jax.jit(
+        lambda p, m, pk, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m, pack=pk),
+        donate_argnums=(3,),
+    )
+    return prefill, decode
 
 
 def serve_session(
@@ -73,17 +108,7 @@ def serve_session(
         )
     else:
         s_prefill = prompt["frames"].shape[1]
-    sched = attn_schedules(cfg, s_prefill)
-
-    prefill = jax.jit(
-        lambda p, m, pk, b: lm_prefill(
-            p, cfg, b, max_len=max_len, masks=m, pack=pk, attn_sched=sched
-        )
-    )
-    decode = jax.jit(
-        lambda p, m, pk, c, t, pos: lm_decode(p, cfg, c, t, pos, masks=m, pack=pk),
-        donate_argnums=(3,),
-    )
+    prefill, decode = _session_fns(cfg, max_len, s_prefill)
 
     t0 = time.time()
     logits, caches = prefill(params, masks, pack, prompt)
@@ -101,17 +126,102 @@ def serve_session(
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = jnp.concatenate(out, axis=1)
+    # tok_per_s counts ALL gen generated tokens — the first one is produced
+    # from the prefill logits (argmax above), so the prefill time that bought
+    # it is in the denominator; gen-1 decode steps produce the rest.
     return toks, {
         "prefill_s": t_prefill,
         "decode_s_per_tok": t_decode / max(gen - 1, 1),
-        "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
+        "tok_per_s": batch * gen / max(t_prefill + t_decode, 1e-9),
     }
+
+
+def staggered_requests(cfg, n: int, *, prompt_lens=(16, 32), gen_lens=(8, 16, 32, 64),
+                       arrival_rate: float = 0.0, seed: int = 0,
+                       temperature: float = 0.0, top_k: int = 0):
+    """Synthetic staggered-length workload for the continuous-batching engine.
+
+    Request i cycles through ``prompt_lens``/``gen_lens`` (deliberately
+    mismatched cycle lengths => a staggered mix) with Poisson arrival offsets
+    at ``arrival_rate`` req/s (0 => burst at t=0).  Shared by the serve CLI,
+    benchmarks/serve_bench.py and examples/serve_continuous.py.
+    """
+    from ..serving import Request, poisson_arrivals
+
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(n, arrival_rate, seed)
+    reqs = []
+    for i in range(n):
+        L = int(prompt_lens[i % len(prompt_lens)])
+        kw = {}
+        if cfg.frontend == "patch":
+            kw["patches"] = rng.standard_normal(
+                (cfg.n_patches, cfg.frontend_dim)
+            ).astype(np.float32)
+        reqs.append(
+            Request(
+                rid=i,
+                tokens=rng.integers(0, cfg.vocab_size, size=L).astype(np.int32),
+                max_new_tokens=int(gen_lens[i % len(gen_lens)]),
+                temperature=temperature, top_k=top_k, seed=seed + i,
+                arrival=float(arrivals[i]), **kw,
+            )
+        )
+    return reqs
+
+
+def configure_kernel(cfg, *, kernel=None, block=None, attn_kernel=None):
+    """Apply CLI kernel overrides to cfg.sparse (the one definition shared
+    by the serve CLI and benchmarks/serve_bench.py — block_sparse couples
+    block_shape to the kernel tiles, which must never be spelled twice)."""
+    if kernel is None and attn_kernel is None:
+        return cfg
+    import dataclasses
+
+    sp = cfg.sparse
+    if kernel == "block_sparse":
+        e = block or sp.kernel_block[2]
+        sp = dataclasses.replace(
+            sp, kernel="block_sparse", block_shape=(e, e),
+            kernel_block=(sp.kernel_block[0], e, e),
+        )
+    elif kernel is not None:
+        sp = dataclasses.replace(sp, kernel=kernel)
+    if attn_kernel is not None:
+        sp = dataclasses.replace(sp, attn_kernel=attn_kernel)
+    return dataclasses.replace(cfg, sparse=sp)
+
+
+def init_serving_state(cfg, seed: int = 0):
+    """Fresh weights ready to serve -> (params, masks, pack).
+
+    Kernel-dispatch modes serve RAW weights + masks (w*m never materialized;
+    block_sparse also carries the host-packed tight-grid topology built by
+    init_train_state — a restored checkpoint carries its own).  Dense mode
+    pre-masks once and serves effective weights (masks/pack None).
+    """
+    state, _, _ = init_train_state(jax.random.PRNGKey(seed), cfg, OptConfig())
+    if cfg.sparse.kernel in ("masked", "block_sparse"):
+        return state["params"], state["masks"], state.get("pack")
+    return apply_masks(state["params"], state["masks"]), None, None
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="h2o-danube-1.8b")
     p.add_argument("--smoke", action="store_true")
+    # continuous-batching engine (default mode)
+    p.add_argument("--capacity", type=int, default=4,
+                   help="engine slot-pool size (the decode batch)")
+    p.add_argument("--requests", type=int, default=16,
+                   help="number of staggered-length requests to serve")
+    p.add_argument("--arrival-rate", type=float, default=0.0,
+                   help="Poisson arrival rate, req/s (0 = burst at t=0)")
+    p.add_argument("--max-len", type=int, default=128,
+                   help="per-slot cache length (prompt + generation bound)")
+    # lockstep baseline (legacy fixed-batch driver)
+    p.add_argument("--lockstep", action="store_true",
+                   help="run the fixed-batch serve_session baseline instead")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=48)
     p.add_argument("--gen", type=int, default=32)
@@ -130,44 +240,43 @@ def main():
         "Pallas flash kernels (flash_tight = live-KV-block grids)",
     )
     args = p.parse_args()
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if args.kernel is not None or args.attn_kernel is not None:
-        import dataclasses
+    cfg = configure_kernel(
+        get_config(args.arch, smoke=args.smoke), kernel=args.kernel,
+        block=args.block, attn_kernel=args.attn_kernel,
+    )
+    params, masks, pack = init_serving_state(cfg)
 
-        sp = cfg.sparse
-        if args.kernel == "block_sparse":
-            e = args.block or sp.kernel_block[2]
-            sp = dataclasses.replace(
-                sp, kernel="block_sparse", block_shape=(e, e),
-                kernel_block=(sp.kernel_block[0], e, e),
-            )
-        elif args.kernel is not None:
-            sp = dataclasses.replace(sp, kernel=args.kernel)
-        if args.attn_kernel is not None:
-            sp = dataclasses.replace(sp, attn_kernel=args.attn_kernel)
-        cfg = dataclasses.replace(cfg, sparse=sp)
-    state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
-    if cfg.sparse.kernel in ("masked", "block_sparse"):
-        # kernel dispatch: serve RAW weights + masks; w*m never materialized.
-        # block_sparse also serves the host-packed tight-grid topology
-        # (init_train_state already built state["pack"]; a restored
-        # checkpoint carries its own).
+    if args.lockstep:
         toks, stats = serve_session(
-            cfg, state["params"], batch=args.batch,
-            prompt_len=args.prompt_len, gen=args.gen, masks=state["masks"],
-            pack=state.get("pack"),
+            cfg, params, batch=args.batch, prompt_len=args.prompt_len,
+            gen=args.gen, masks=masks, pack=pack,
         )
-    else:
-        w_eff = apply_masks(state["params"], state["masks"])
-        toks, stats = serve_session(
-            cfg, w_eff, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen
+        print(
+            f"lockstep  kernel={cfg.sparse.kernel}  "
+            f"attn_kernel={cfg.sparse.attn_kernel}  "
+            f"generated shape: {toks.shape}"
         )
+        for k, v in stats.items():
+            print(f"  {k}: {v:.4f}")
+        return
+
+    from ..serving import ServeEngine
+
+    engine = ServeEngine(
+        cfg, params, capacity=args.capacity, max_len=args.max_len,
+        masks=masks, pack=pack,
+    )
+    for req in staggered_requests(
+        cfg, args.requests, arrival_rate=args.arrival_rate
+    ):
+        engine.submit(req)
+    stats = engine.run()
     print(
-        f"kernel={cfg.sparse.kernel}  attn_kernel={cfg.sparse.attn_kernel}  "
-        f"generated shape: {toks.shape}"
+        f"engine  kernel={cfg.sparse.kernel}  "
+        f"attn_kernel={cfg.sparse.attn_kernel}  capacity={args.capacity}"
     )
     for k, v in stats.items():
-        print(f"  {k}: {v:.4f}")
+        print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
 
 
 if __name__ == "__main__":

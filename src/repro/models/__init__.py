@@ -8,4 +8,5 @@ from .model import (  # noqa: F401
     lm_forward,
     lm_loss,
     lm_prefill,
+    lm_prefill_into,
 )

@@ -304,9 +304,10 @@ def fill_kv_cache(cache, k, v, start: int = 0):
 
 
 def attn_decode(
-    p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None, pack=None
+    p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None, pack=None,
+    active=None,
 ):
-    """One decode step.  x_t: (B, 1, d); pos: traced scalar (tokens so far).
+    """One decode step.  x_t: (B, 1, d); pos: traced scalar OR (B,) vector.
 
     Windowed caches use ring addressing (softmax is permutation invariant —
     absolute positions are baked into the stored, roped keys).
@@ -315,23 +316,53 @@ def attn_decode(
     translate directly to HBM-traffic savings).  ``pack`` (PackState subtree)
     additionally shrinks each block_sparse grid to the true active count — it
     is packed once per topology and reused by every decode step.
+
+    Per-slot decode (the continuous-batching engine, serving/engine.py): a
+    ``pos`` VECTOR gives every batch row its own position — RoPE, the cache
+    write slot (ring or linear) and the validity mask are all computed
+    per-row, so rows at staggered depths step together in ONE launch.
+    ``active`` (B,) bool then marks live slots: inactive rows' cache writes
+    are dropped entirely (their k/v scatter targets an out-of-bounds slot,
+    jnp ``mode='drop'``), making a dead slot's step a provable no-op on the
+    cache — its (garbage) output is simply never read by the engine.
+    ``active`` requires vector ``pos``; the scalar form keeps the exact
+    legacy lockstep semantics (all rows share one position).
     """
     B = x_t.shape[0]
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    if active is not None and not per_slot:
+        raise ValueError("attn_decode: active-slot mask requires pos: (B,)")
     q, k, v = _qkv(p, x_t, cfg, masks, pack)
-    posv = jnp.full((1,), pos)
+    posv = pos[:, None] if per_slot else jnp.full((1,), pos)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
 
     size = cache["k"].shape[1]
-    slot = jnp.mod(pos, size) if (kind == "local" and cfg.window) else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ring = kind == "local" and cfg.window
+    if per_slot:
+        slots = jnp.mod(pos, size) if ring else pos
+        if active is not None:
+            # dead slots write out of bounds -> dropped (cache rows untouched)
+            slots = jnp.where(active, slots, size)
+        b_idx = jnp.arange(B)
+        ck = cache["k"].at[b_idx, slots].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop"
+        )
+        cv = cache["v"].at[b_idx, slots].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop"
+        )
+        valid = jnp.arange(size)[None, :] <= pos[:, None]  # (B, size)
+    else:
+        slot = jnp.mod(pos, size) if ring else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        valid = (jnp.arange(size) <= pos)[None, :]  # ring: all valid once pos >= size
 
-    valid = jnp.arange(size) <= pos  # ring: all valid once pos >= size
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     qg = q.reshape(B, 1, KV, H // KV, hd)
     s = _scores(qg, ck, cfg)  # (B, KV, G, 1, size)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv).reshape(B, 1, H * hd)
     out = linear(p["wo"], o, **_linear_kw(cfg, masks, "wo", pack))

@@ -53,6 +53,7 @@ __all__ = [
     "lm_loss",
     "init_caches",
     "lm_prefill",
+    "lm_prefill_into",
     "lm_decode",
     "stack_layer_params",
 ]
@@ -519,8 +520,62 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
     return logits, caches
 
 
-def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
-    """One decode step. tokens: (B, 1) int32; pos: traced scalar.
+def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
+                    masks=None, pack=None, attn_sched=None):
+    """Prefill ONE prompt and scatter its state into batched caches at ``slot``.
+
+    The continuous-batching admission path (serving/engine.py): ``caches`` is
+    the engine's capacity-sized cache pytree (init_caches(cfg, capacity,
+    max_len)), ``batch`` a single-prompt batch (B=1 tokens, optional patches),
+    ``slot`` a traced int32 — one jitted trace per prompt LENGTH serves every
+    slot.  Runs the ordinary ``lm_prefill`` at B=1 (so ring alignment, the
+    hymba conv-state recompute and the xLSTM carries are all the battle-tested
+    code path), then row-scatters every cache leaf into ``slot`` with a
+    dynamic_update_slice — overwriting whatever the slot's previous (finished)
+    request left behind.  Stale positions BEYOND the new prompt are not
+    cleared: attn_decode's per-row validity mask (``arange(size) <= pos``)
+    guarantees a position is never attended before the ring write that owns
+    it, so recycled slots are reuse-safe by construction (tested in
+    tests/test_serving_engine.py).
+
+    Returns (last-position logits (1, 1, V), updated caches) — the logits
+    produce the request's FIRST generated token, so a gen-N request costs
+    exactly N-1 decode steps.
+    """
+    logits, row = lm_prefill(
+        params, cfg, batch, max_len=max_len, masks=masks, pack=pack,
+        attn_sched=attn_sched,
+    )
+
+    def scatter(dst, src):
+        return jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), (slot,) + (0,) * (dst.ndim - 1)
+        )
+
+    return logits, jax.tree_util.tree_map(scatter, caches, row)
+
+
+def _gate_rows(active, new, old):
+    """Freeze inactive batch rows of a recurrent-state pytree.
+
+    ``active``: (B,) bool (None => passthrough).  Selects ``new`` rows where
+    active, ``old`` rows where not — the recurrent twin of attn_decode's
+    dropped cache writes, so a dead slot's decode step is a no-op on EVERY
+    piece of per-slot state (KV cache, SSM h/conv, m/sLSTM carries).
+    """
+    if active is None:
+        return new
+
+    def sel(n, o):
+        a = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None,
+              active=None):
+    """One decode step. tokens: (B, 1) int32; pos: traced scalar OR (B,).
 
     Returns (logits (B,1,V), new caches).  With ``masks``, projections and
     MLPs decode through the Pallas sparse kernels (cfg.sparse.kernel) — the
@@ -529,6 +584,14 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
     sizes every block_sparse grid to the true active count; it is computed
     once per topology on the host and REUSED by every decode step — decode
     never re-packs.
+
+    Per-slot decode (serving/engine.py): ``pos`` as a (B,) VECTOR steps every
+    batch row at its own depth in one launch (per-row RoPE, ring slots and
+    validity masks — see attention.py::attn_decode); ``active`` (B,) bool
+    marks live slots — inactive rows' KV writes are dropped and their
+    recurrent states (SSM/xLSTM) frozen, so a parked slot is bit-untouched
+    until a new request is admitted into it (lm_prefill_into).  The scalar
+    form is the legacy lockstep contract, unchanged.
     """
     assert cfg.causal
     x = _embed_inputs(params, cfg, {"tokens": tokens})
@@ -542,15 +605,17 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
         if cfg.block_type == "xlstm":
             h = rmsnorm(p["ln1"], x, cfg.norm_eps)
             if cfg.is_slstm(i):
-                o, c["slstm"] = X.slstm_decode(
+                o, new_st = X.slstm_decode(
                     p["slstm"], h, c["slstm"], cfg,
                     masks=_sub(m, "slstm"), pack=_sub(pk, "slstm"),
                 )
+                c["slstm"] = _gate_rows(active, new_st, c["slstm"])
             else:
-                o, c["mlstm"] = X.mlstm_decode(
+                o, new_st = X.mlstm_decode(
                     p["mlstm"], h, c["mlstm"], cfg,
                     masks=_sub(m, "mlstm"), pack=_sub(pk, "mlstm"),
                 )
+                c["mlstm"] = _gate_rows(active, new_st, c["mlstm"])
             x = x + o
             new_caches.append(c)
             continue
@@ -559,13 +624,14 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None):
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
         attn_out, c["kv"] = A.attn_decode(
             p["attn"], h, c["kv"], pos, cfg, kind=kind, masks=_sub(m, "attn"),
-            pack=_sub(pk, "attn"),
+            pack=_sub(pk, "attn"), active=active,
         )
         if cfg.block_type == "hymba":
-            ssm_out, c["ssm"] = S.ssm_decode(
+            ssm_out, new_ssm = S.ssm_decode(
                 p["ssm"], h, c["ssm"], cfg,
                 masks=_sub(m, "ssm"), pack=_sub(pk, "ssm"),
             )
+            c["ssm"] = _gate_rows(active, new_ssm, c["ssm"])
             attn_out = 0.5 * (
                 rmsnorm(p["attn_norm"], attn_out, cfg.norm_eps)
                 + rmsnorm(p["ssm_norm"], ssm_out, cfg.norm_eps)

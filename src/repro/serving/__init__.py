@@ -1,0 +1,9 @@
+"""Continuous-batching serving: slot-pool engine, scheduler, per-slot sampling.
+
+Entry point: ``ServeEngine`` (engine.py) — admits queued ``Request``s
+(queue.py) into recycled KV-cache slots and decodes all active slots in one
+jitted per-slot step.  See docs/serving.md for the end-to-end tour.
+"""
+from .engine import ServeEngine  # noqa: F401
+from .queue import Request, RequestQueue, Status, poisson_arrivals  # noqa: F401
+from .sampler import request_key, sample_tokens, step_keys  # noqa: F401

@@ -1,0 +1,288 @@
+"""Continuous-batching serving engine: per-slot decode over recycled KV slots.
+
+The lockstep driver (launch/serve.py::serve_session) steps one fixed batch
+with a single shared position — a finished row parks its KV-cache slot until
+the SLOWEST row in the batch finishes, so staggered-length traffic wastes
+decode steps on padding.  This engine removes that barrier:
+
+  * a fixed-capacity SLOT POOL owns one batched cache pytree
+    (models/model.py::init_caches at batch=capacity) for the engine's
+    lifetime — no per-request allocation, ever;
+  * queued requests are admitted into freed slots by scattering a B=1
+    prefill into the slot row (models/model.py::lm_prefill_into, one jitted
+    trace per prompt length) — the prefill logits produce the request's
+    first token, so a gen-N request costs exactly N-1 decode steps;
+  * ALL active slots step together in ONE jitted decode
+    (models/model.py::lm_decode with per-slot ``pos: (B,)`` + ``active``
+    mask): each row ropes, ring-addresses and masks at its own depth, dead
+    slots are provable no-ops on the cache;
+  * sampling (greedy / temperature / top-k, per-request PRNG streams —
+    serving/sampler.py) happens inside the same jit, so a step is exactly
+    one dispatch + one (capacity,) token fetch;
+  * sparse-kernel state threads once: ``masks`` and the host-packed
+    PackState (core/pack.py) are engine-level arguments passed to every
+    jitted call — packed once per engine, reused by every prefill and every
+    decode step, exactly the train-time tight-grid contract.
+
+Lifecycle and slot/cache layout are documented in docs/serving.md; request
+states live in serving/queue.py.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import attn_schedules, init_caches, lm_decode, lm_prefill_into
+from .queue import Request, RequestQueue, Status
+from .sampler import request_key, sample_tokens, step_keys
+
+__all__ = ["ServeEngine"]
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg):
+    """The engine's single jitted decode-step: per-slot lm_decode + in-jit
+    sampling + in-jit slot-state advance.  Cached per config at module level
+    (ModelConfig is frozen and hashable), so every engine instance for the
+    same config — including the bench's warmup/timed pairs — shares one
+    compiled executable.
+
+    The per-slot carry (tok, pos, gen_idx) advances INSIDE the jit (active
+    rows only) and is returned device-resident: between admissions a step
+    uploads nothing and downloads one (capacity,) token vector — the host's
+    only per-step work is finish detection.
+    """
+
+    def _decode(params, masks, pack, caches, tok, pos, active, base_keys,
+                gen_idx, temp, topk):
+        logits, caches = lm_decode(
+            params, cfg, caches, tok, pos, masks=masks, pack=pack,
+            active=active,
+        )
+        keys = step_keys(base_keys, gen_idx)
+        nxt = sample_tokens(logits[:, -1], keys, temp, topk)
+        tok = jnp.where(active[:, None], nxt[:, None], tok)
+        pos = pos + active
+        gen_idx = gen_idx + active
+        return nxt, caches, tok, pos, gen_idx
+
+    return jax.jit(_decode, donate_argnums=(3, 4, 5, 8))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int):
+    """Jitted prefill-into-slot + first-token sample, one trace per prompt
+    LENGTH (the slot index, like every per-request scalar, is a traced
+    argument); module-level cache as for ``_decode_fn``."""
+    sched = attn_schedules(cfg, prompt_len + n_patches)
+
+    def _prefill(params, masks, pack, caches, batch, slot, base_key, temp,
+                 topk):
+        logits, caches = lm_prefill_into(
+            params, cfg, caches, batch, slot, max_len, masks=masks,
+            pack=pack, attn_sched=sched,
+        )
+        keys = step_keys(base_key[None], jnp.zeros((1,), jnp.int32))
+        tok = sample_tokens(logits[:, -1], keys, temp[None], topk[None])[0]
+        return tok, caches
+
+    return jax.jit(_prefill, donate_argnums=(3,))
+
+
+class ServeEngine:
+    """Fixed-capacity continuous-batching engine over one cache pytree.
+
+    cfg/params as for serve_session; ``capacity`` is the slot count (the
+    decode batch), ``max_len`` the per-slot cache length (every request must
+    satisfy prompt_len [+ n_patches] + max_new_tokens <= max_len).  masks/
+    pack follow the kernel-dispatch contract (launch/serve.py): masks=None
+    expects pre-masked params; with masks, params are raw and every matmul
+    dispatches through cfg.sparse.kernel, pack carrying the tight-grid
+    topology.
+    """
+
+    def __init__(self, cfg, params, *, capacity: int, max_len: int,
+                 masks=None, pack=None):
+        if not cfg.causal:
+            raise ValueError("ServeEngine needs a causal config (no decode "
+                             "path for encoder-only models)")
+        if cfg.frontend == "frames":
+            raise ValueError("frontend='frames' has no token decode loop")
+        self.cfg = cfg
+        self.params = params
+        self.masks = masks
+        self.pack = pack
+        self.capacity = capacity
+        self.max_len = max_len
+        self._n_patches = cfg.n_patches if cfg.frontend == "patch" else 0
+
+        self.queue = RequestQueue()
+        self.caches = init_caches(cfg, capacity, max_len)
+        # per-slot host state (the scheduler's view of the pool); the decode
+        # step consumes device-resident copies, re-uploaded only when an
+        # admission/release dirties the mirrors (steady-state steps upload
+        # nothing — the carry advances in-jit)
+        self.active = np.zeros(capacity, bool)
+        self.pos = np.zeros(capacity, np.int32)
+        self.cur_tok = np.zeros(capacity, np.int32)
+        self.base_keys = np.zeros((capacity, 2), np.uint32)
+        self.gen_idx = np.zeros(capacity, np.int32)
+        self.temp = np.zeros(capacity, np.float32)
+        self.topk = np.zeros(capacity, np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * capacity
+        self._device_state: Optional[tuple] = None  # None => mirrors dirty
+        # counters (benchmarks/serve_bench.py reads these)
+        self.n_steps = 0
+        self.n_prefills = 0
+        self.slot_history: list[tuple[int, int]] = []  # (rid, slot) admissions
+        self._decode_fn = _decode_fn(cfg)
+
+    # -- admission ---------------------------------------------------------
+
+    def _prefill_for(self, prompt_len: int):
+        return _prefill_fn(self.cfg, self.max_len, prompt_len, self._n_patches)
+
+    def submit(self, req: Request) -> None:
+        need = req.prompt_len + self._n_patches + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} (+{self._n_patches} "
+                f"patches) + max_new_tokens {req.max_new_tokens} needs "
+                f"{need} > max_len {self.max_len}"
+            )
+        if self.cfg.frontend == "patch" and req.patches is None:
+            raise ValueError(
+                f"request {req.rid}: frontend='patch' configs need patches"
+            )
+        self.queue.submit(req)
+
+    def _admit(self, now: float, finished: list, clock=None) -> None:
+        while True:
+            free = np.nonzero(~self.active)[0]
+            if len(free) == 0:
+                return
+            req = self.queue.pop_ready(now)
+            if req is None:
+                return
+            s = int(free[0])
+            req.status = Status.PREFILL
+            batch = {"tokens": jnp.asarray(np.asarray(req.tokens, np.int32))[None]}
+            if req.patches is not None:
+                batch["patches"] = jnp.asarray(req.patches)[None]
+            base = request_key(req.seed)
+            tok, self.caches = self._prefill_for(req.prompt_len)(
+                self.params, self.masks, self.pack, self.caches, batch,
+                jnp.int32(s), jnp.asarray(base), jnp.float32(req.temperature),
+                jnp.int32(req.top_k),
+            )
+            self.n_prefills += 1
+            tok = int(tok)  # blocks on the prefill -> post-compute timestamps
+            t = clock() if clock is not None else now
+            req.generated.append(tok)
+            req.slot = s
+            req.status = Status.DECODE
+            req.t_admitted = t
+            self.slot_history.append((req.rid, s))
+            self.slot_req[s] = req
+            self.active[s] = True
+            self.pos[s] = req.prompt_len + self._n_patches
+            self.cur_tok[s] = tok
+            self.base_keys[s] = base
+            self.gen_idx[s] = 1
+            self.temp[s] = req.temperature
+            self.topk[s] = req.top_k
+            self._device_state = None
+            if self._is_finished(req, tok):
+                self._release(req, t)
+                finished.append(req)
+
+    def _is_finished(self, req: Request, tok: int) -> bool:
+        return len(req.generated) >= req.max_new_tokens or (
+            req.eos_id is not None and tok == req.eos_id
+        )
+
+    def _release(self, req: Request, now: float) -> None:
+        s = req.slot
+        self.queue.finish(req, now)
+        self.active[s] = False
+        self.slot_req[s] = None
+        self._device_state = None
+
+    # -- stepping ----------------------------------------------------------
+
+    def step(self, now: float = 0.0, clock=None) -> list[Request]:
+        """Admit what fits, then decode one token on every active slot.
+        Returns the requests that finished during this step.
+
+        ``now`` gates arrivals (virtual-clock friendly for tests); ``clock``,
+        when given (run() passes the wall clock), re-samples time AFTER the
+        blocking prefill/decode computes so t_admitted/t_done include the
+        work that produced them — otherwise latencies would be short by up
+        to a full step.
+        """
+        finished: list[Request] = []
+        self._admit(now, finished, clock)
+        if not self.active.any():
+            return finished
+        if self._device_state is None:  # mirrors changed: re-upload the carry
+            self._device_state = (
+                jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos),
+                jnp.asarray(self.active), jnp.asarray(self.base_keys),
+                jnp.asarray(self.gen_idx), jnp.asarray(self.temp),
+                jnp.asarray(self.topk),
+            )
+        tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d = self._device_state
+        nxt, self.caches, tok_d, pos_d, gen_d = self._decode_fn(
+            self.params, self.masks, self.pack, self.caches,
+            tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d,
+        )
+        self._device_state = (tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d)
+        self.n_steps += 1
+        nxt = np.asarray(nxt)  # blocks on the decode -> post-compute timestamp
+        t = clock() if clock is not None else now
+        for s in np.nonzero(self.active)[0]:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            self.pos[s] += 1
+            self.gen_idx[s] += 1
+            self.cur_tok[s] = tok
+            if self._is_finished(req, tok):
+                self._release(req, t)
+                finished.append(req)
+        return finished
+
+    def run(self) -> dict:
+        """Drive until the queue drains; wall-clock arrivals (request
+        ``arrival`` values are offsets from this call).  Returns summary
+        stats; per-request timings live on the Request objects
+        (queue.done)."""
+        t0 = time.monotonic()
+        clock = lambda: time.monotonic() - t0
+        while len(self.queue) or self.active.any():
+            self.step(clock(), clock)
+            if not self.active.any() and len(self.queue):
+                wait = self.queue.next_arrival() - clock()
+                if wait > 0:
+                    time.sleep(wait)
+        return self.stats(clock())
+
+    def stats(self, wall_s: float) -> dict:
+        done = self.queue.done
+        toks = sum(len(r.generated) for r in done)
+        lat = np.asarray([r.latency for r in done], np.float64)
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "wall_s": wall_s,
+            "tok_per_s": toks / max(wall_s, 1e-9),
+            "decode_steps": self.n_steps,
+            "prefills": self.n_prefills,
+            "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+        }

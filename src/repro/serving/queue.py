@@ -1,0 +1,119 @@
+"""Request lifecycle + arrival queue for the continuous-batching engine.
+
+A ``Request`` moves QUEUED -> PREFILL -> DECODE -> DONE:
+
+  QUEUED   submitted, waiting for its arrival time AND a free slot
+  PREFILL  admitted: its prompt is being scattered into a cache slot
+           (models/model.py::lm_prefill_into) — transient within one
+           engine.step(), which also samples the first token
+  DECODE   occupying a slot; one token per engine step
+  DONE     hit max_new_tokens or its eos_id; slot freed for the next request
+
+``RequestQueue`` is the engine-facing arrival buffer: FIFO over requests
+whose ``arrival`` time has passed (simulated-clock friendly — the engine
+passes ``now`` explicitly, so tests can drive a virtual clock and the bench
+can drive the wall clock).  ``poisson_arrivals`` builds the bench workload's
+arrival offsets.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Status", "Request", "RequestQueue", "poisson_arrivals"]
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its engine-side bookkeeping.
+
+    tokens: (L,) int prompt.  max_new_tokens counts EVERY generated token,
+    including the one produced from the prefill logits.  temperature <= 0 is
+    greedy; seed feeds the per-request PRNG stream (serving/sampler.py).
+    eos_id stops generation the step it is produced (the eos token itself is
+    kept in ``generated``).  patches: optional (n_patches, frontend_dim)
+    prompt embeddings for VLM (frontend='patch') configs.
+    """
+
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    patches: Optional[np.ndarray] = None
+    # engine-filled:
+    status: Status = Status.QUEUED
+    generated: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    t_admitted: Optional[float] = None  # prefill time == first-token time
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.shape(self.tokens)[0])
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Arrival -> completion (None until DONE)."""
+        return None if self.t_done is None else self.t_done - self.arrival
+
+
+class RequestQueue:
+    """Arrival-ordered admission buffer.
+
+    The waiting list is kept sorted by arrival time (stable for ties, so
+    equal-arrival requests admit in submission order) — submissions need NOT
+    arrive pre-sorted; a request submitted after one with a later arrival
+    still admits the moment its own arrival passes.
+    """
+
+    def __init__(self):
+        self._waiting: list[Request] = []
+        self.done: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+        req.status = Status.QUEUED
+        bisect.insort(self._waiting, req, key=lambda r: r.arrival)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Earliest-arrived request whose arrival time has passed, else None."""
+        if self._waiting and self._waiting[0].arrival <= now:
+            return self._waiting.pop(0)
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self._waiting[0].arrival if self._waiting else None
+
+    def finish(self, req: Request, now: float) -> None:
+        req.status = Status.DONE
+        req.t_done = now
+        req.slot = None
+        self.done.append(req)
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """(n,) cumulative arrival offsets (seconds) for a rate req/s Poisson
+    process; rate <= 0 => everything arrives at t=0 (burst)."""
+    if rate <= 0:
+        return np.zeros(n)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))

@@ -1,0 +1,65 @@
+"""Per-slot token sampling for the continuous-batching engine.
+
+One vectorized ``sample_tokens`` call samples EVERY active slot of a decode
+step in-jit: each row carries its own sampling params (temperature, top-k)
+and its own PRNG key, so requests with different sampling settings — or the
+same settings but different seeds — batch together without host round-trips.
+
+Determinism contract: a request's token stream is a pure function of
+(weights, prompt, temperature, top_k, seed) — the per-step key is
+``fold_in(request_key(seed), n_generated)`` (see ``request_key`` /
+``step_keys``), independent of which SLOT the request landed in, of the
+engine capacity, and of whatever other requests share the batch.  Slot
+recycling therefore cannot perturb sampling (tested in
+tests/test_serving_engine.py::test_sampler_determinism).
+
+temperature <= 0 selects greedy (argmax) — exactly the lockstep baseline's
+``jnp.argmax(logits, -1)``, which is what makes the engine-vs-lockstep
+token-identity tests exact.  top_k <= 0 keeps the full distribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["request_key", "step_keys", "sample_tokens"]
+
+
+def request_key(seed: int) -> np.ndarray:
+    """Host-side (2,) uint32 base key for one request (old-style PRNG key —
+    a plain array so the engine can keep a (capacity, 2) slot table)."""
+    return np.asarray(jax.random.PRNGKey(seed))
+
+
+def step_keys(base_keys, gen_idx):
+    """(B, 2) base keys + (B,) per-slot generated-token counters -> (B, 2)
+    per-step keys.  fold_in per row keeps streams independent across steps
+    AND across requests (each request has its own base key)."""
+    return jax.vmap(jax.random.fold_in)(base_keys, gen_idx)
+
+
+def sample_tokens(logits, keys, temperature, top_k):
+    """Sample one token per row.  All inputs batched, jit-friendly.
+
+    logits: (B, V) float; keys: (B, 2) uint32 per-row PRNG keys;
+    temperature: (B,) float (<= 0 => greedy); top_k: (B,) int32 (<= 0 => no
+    top-k filter).  Returns (B,) int32.
+
+    Vocab-padding note: models/model.py::_logits sets pad slots to -1e30, so
+    they survive the top-k threshold only with probability exp(-1e30) = 0 —
+    no pad token is ever sampled.
+    """
+    V = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    is_greedy = temperature <= 0.0
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # per-row top-k: keep logits >= the row's k-th largest (ties all kept)
+    sorted_desc = jnp.flip(jnp.sort(scaled, axis=-1), axis=-1)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1
+    )
+    keep = (top_k[:, None] <= 0) | (scaled >= kth)
+    filtered = jnp.where(keep, scaled, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, filtered).astype(jnp.int32)
+    return jnp.where(is_greedy, greedy_tok, sampled)
