@@ -284,14 +284,40 @@ def init_kv_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def fill_kv_cache(cache, k, v, start: int = 0):
+def fill_kv_cache(cache, k, v, start: int = 0, n_valid=None):
     """Prefill: write computed k/v (already roped) into the cache.
 
     Windowed (ring) caches store position p at slot p % size, matching
     attn_decode's ring addressing — the kept tail is rolled accordingly.
+
+    ``n_valid`` (traced int, requires start=0): positions >= n_valid are
+    prompt PADDING (the serving engine buckets prompt lengths to bound the
+    prefill trace count — serving/engine.py).  Pad writes must be dropped,
+    not just masked later: on a wrapped ring a pad position p >= n_valid
+    would land on slot p % size and clobber the still-needed K/V of true
+    position p - size.  Each slot instead gathers the LATEST valid position
+    that owns it (p ≡ slot mod size, p < n_valid), so the ring holds exactly
+    the last `size` TRUE positions — identical to an exact-length fill.
+    Slots no valid position reaches keep their prior (zero-init) contents,
+    unreachable under attn_decode's `slot <= pos` validity mask.
     """
     S = k.shape[1]
     size = cache["k"].shape[1]
+    if n_valid is not None:
+        assert start == 0, "n_valid fill assumes a fresh prefill at start=0"
+        W = min(S, size)
+        s_idx = jnp.arange(W)
+        lap = jnp.maximum((n_valid - 1 - s_idx) // size, 0)
+        src = s_idx + size * lap  # latest valid position landing on slot s
+        has = s_idx < n_valid  # n_valid >= size wraps: every slot is owned
+        m = has[None, :, None, None]
+        ck = cache["k"].at[:, :W].set(
+            jnp.where(m, k[:, src].astype(cache["k"].dtype), cache["k"][:, :W])
+        )
+        cv = cache["v"].at[:, :W].set(
+            jnp.where(m, v[:, src].astype(cache["v"].dtype), cache["v"][:, :W])
+        )
+        return {"k": ck, "v": cv}
     if S >= size:  # windowed cache: keep the last `size` positions, ring-aligned
         k, v = k[:, S - size :], v[:, S - size :]
         shift = (start + S - size) % size

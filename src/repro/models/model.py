@@ -468,7 +468,7 @@ def init_caches(cfg, batch: int, max_len: int):
 
 
 def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
-               attn_sched=None):
+               attn_sched=None, n_valid=None):
     """Run the prompt, return (last-position logits, filled caches).
 
     pack: PackState pytree — prefill's block_sparse projections/MLPs run
@@ -479,6 +479,20 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
     single-query step is a matvec over the (already window-bounded ring)
     cache — there is no dead score BLOCK to skip, so attn_decode stays on
     the jnp path by design (docs/kernels.md#attention-schedules).
+
+    n_valid (traced int): sequence positions >= n_valid are END-PADDING —
+    the serving engine buckets prompt lengths so one jitted trace serves a
+    range of lengths (serving/engine.py).  Padding is exact for causal
+    attention-only stacks: pads are strictly FUTURE positions (causal masks
+    keep them out of every true query's softmax), their K/V writes are
+    dropped by the masked fill (attention.py::fill_kv_cache — on a wrapped
+    ring a pad write would clobber still-needed true K/V), and the returned
+    logits come from position n_valid - 1, not the padded tail.  It is NOT
+    exact for recurrent carries (hymba SSM h, xLSTM states — the final carry
+    would include pad steps) or MoE routing (pad tokens would consume expert
+    capacity), so the engine only buckets plain-transformer non-MoE configs;
+    passing n_valid == S is exact for every family (and is how the engine's
+    unbucketed configs exercise this path).
     """
     assert cfg.causal, "prefill/decode undefined for encoder-only models"
     h, states, _ = lm_forward(
@@ -509,19 +523,28 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
                 kernel=cfg.sparse.kernel, block=cfg.sparse.kernel_block,
                 pack=None if pk_ssm is None else pk_ssm["in_proj"]["w"],
             )[..., : cfg.ssm_d_inner]
-            caches[i]["ssm"]["conv"] = u_raw[:, -3:, :].astype(
+            conv_src = (
+                u_raw[:, -3:, :] if n_valid is None
+                else jax.lax.dynamic_slice_in_dim(u_raw, n_valid - 3, 3, 1)
+            )
+            caches[i]["ssm"]["conv"] = conv_src.astype(
                 caches[i]["ssm"]["conv"].dtype
             )
         else:
             kv = st
         k, v = kv
-        caches[i]["kv"] = A.fill_kv_cache(caches[i]["kv"], k, v, 0)
-    logits = _logits(params, cfg, h[:, -1:])
+        caches[i]["kv"] = A.fill_kv_cache(caches[i]["kv"], k, v, 0,
+                                          n_valid=n_valid)
+    h_last = (
+        h[:, -1:] if n_valid is None
+        else jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, 1)
+    )
+    logits = _logits(params, cfg, h_last)
     return logits, caches
 
 
 def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
-                    masks=None, pack=None, attn_sched=None):
+                    masks=None, pack=None, attn_sched=None, n_valid=None):
     """Prefill ONE prompt and scatter its state into batched caches at ``slot``.
 
     The continuous-batching admission path (serving/engine.py): ``caches`` is
@@ -541,10 +564,15 @@ def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
     Returns (last-position logits (1, 1, V), updated caches) — the logits
     produce the request's FIRST generated token, so a gen-N request costs
     exactly N-1 decode steps.
+
+    ``n_valid``: traced count of TRUE (non-padding) sequence positions —
+    the engine pads prompts up to a length bucket so one trace serves a
+    range of lengths (see lm_prefill for exactness conditions and
+    serving/engine.py for the bucketing policy).
     """
     logits, row = lm_prefill(
         params, cfg, batch, max_len=max_len, masks=masks, pack=pack,
-        attn_sched=attn_sched,
+        attn_sched=attn_sched, n_valid=n_valid,
     )
 
     def scatter(dst, src):
@@ -588,10 +616,13 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None,
     Per-slot decode (serving/engine.py): ``pos`` as a (B,) VECTOR steps every
     batch row at its own depth in one launch (per-row RoPE, ring slots and
     validity masks — see attention.py::attn_decode); ``active`` (B,) bool
-    marks live slots — inactive rows' KV writes are dropped and their
-    recurrent states (SSM/xLSTM) frozen, so a parked slot is bit-untouched
-    until a new request is admitted into it (lm_prefill_into).  The scalar
-    form is the legacy lockstep contract, unchanged.
+    marks live slots — inactive rows' KV writes are dropped, their
+    recurrent states (SSM/xLSTM) frozen, and their tokens excluded from MoE
+    routing (a stale token must not consume per-expert capacity and perturb
+    active rows' logits — moe.py), so a parked slot is bit-untouched AND
+    side-effect-free until a new request is admitted into it
+    (lm_prefill_into).  The scalar form is the legacy lockstep contract,
+    unchanged.
     """
     assert cfg.causal
     x = _embed_inputs(params, cfg, {"tokens": tokens})
@@ -644,8 +675,11 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None,
             x = x + attn_out
             ff_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
         if cfg.n_experts:
+            # active threads into routing: a dead slot's stale token must not
+            # consume per-expert capacity C (cross-token state — see moe.py)
             ff_out, _ = moe(
-                p["moe"], ff_in, cfg, masks=_sub(m, "moe"), pack=_sub(pk, "moe")
+                p["moe"], ff_in, cfg, masks=_sub(m, "moe"),
+                pack=_sub(pk, "moe"), active=active,
             )
         elif cfg.d_ff:
             ff_out = mlp(

@@ -75,7 +75,7 @@ def moe_init(key, cfg, *, sparse: bool = True):
     return p
 
 
-def moe(p, x, cfg, *, masks=None, pack=None):
+def moe(p, x, cfg, *, masks=None, pack=None, active=None):
     """Routed-MoE forward.  x: (B, S, d) -> ((B, S, d), aux_loss).
 
     masks: this MoE's mask subtree (mirrors ``p``) — the expert banks
@@ -84,6 +84,18 @@ def moe(p, x, cfg, *, masks=None, pack=None):
     None keeps the legacy pre-masked contract.  pack: matching PackState
     subtree — the banks' entries are grouped (leading expert dim, shared
     tight width; core/pack.py), the shared MLP's are plain 2-D entries.
+
+    active: optional (B,) bool — the continuous-batching live-slot mask
+    (models/model.py::lm_decode).  Routing has cross-token state: every
+    (token, slot) assignment competes for the finite per-expert capacity C,
+    rank priority going to lower row indices.  Without masking, a PARKED
+    slot's stale token could push an active request's token out of capacity
+    and silently change the active request's logits.  With ``active``,
+    inactive rows' assignments are relabeled to the sentinel expert id E
+    before the stable rank sort — they order after every real expert run
+    (active tokens' ranks are exactly what they would be in an
+    active-tokens-only batch) and are force-dropped, so dead slots are
+    routing no-ops and contribute zero output.
     """
     assert_total_dispatch(
         masks, _DISPATCHED, kernel=cfg.sparse.kernel, where="moe"
@@ -106,6 +118,11 @@ def moe(p, x, cfg, *, masks=None, pack=None):
     C = max(int(np.ceil(T * K / E * capacity_factor)), min(T, 4))
     # Rank each (token, slot) within its expert: stable argsort of expert ids.
     flat_e = eidx.reshape(-1)  # (T*K,)
+    if active is not None:
+        # dead slots route to the sentinel expert E: sorted past every real
+        # run (no capacity consumed) and force-dropped below
+        tok_act = jnp.broadcast_to(active[:, None], (B, S)).reshape(T)
+        flat_e = jnp.where(jnp.repeat(tok_act, K), flat_e, E)
     order = jnp.argsort(flat_e, stable=True)
     # position within the sorted run of each expert id:
     sorted_e = flat_e[order]
@@ -114,7 +131,7 @@ def moe(p, x, cfg, *, masks=None, pack=None):
     rank_sorted = pos_in_sorted - run_start[sorted_e]
     rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)  # (T*K,)
 
-    keep = rank < C
+    keep = (rank < C) & (flat_e < E)  # flat_e == E: inactive-row sentinel
     dest = jnp.where(keep, flat_e * C + rank, E * C)  # overflow -> scratch row
     buf = jnp.zeros((E * C + 1, d), dt).at[dest].set(
         jnp.repeat(xt, K, axis=0), mode="drop"

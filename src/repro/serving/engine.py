@@ -10,7 +10,9 @@ decode steps on padding.  This engine removes that barrier:
     lifetime — no per-request allocation, ever;
   * queued requests are admitted into freed slots by scattering a B=1
     prefill into the slot row (models/model.py::lm_prefill_into, one jitted
-    trace per prompt length) — the prefill logits produce the request's
+    trace per prompt-length BUCKET — lengths pad to the next power of two
+    where exact, so arbitrary-length traffic compiles O(log max_len) traces,
+    not one per distinct length) — the prefill logits produce the request's
     first token, so a gen-N request costs exactly N-1 decode steps;
   * ALL active slots step together in ONE jitted decode
     (models/model.py::lm_decode with per-slot ``pos: (B,)`` + ``active``
@@ -18,7 +20,8 @@ decode steps on padding.  This engine removes that barrier:
     slots are provable no-ops on the cache;
   * sampling (greedy / temperature / top-k, per-request PRNG streams —
     serving/sampler.py) happens inside the same jit, so a step is exactly
-    one dispatch + one (capacity,) token fetch;
+    one dispatch + one (capacity,) token fetch; steps where every active
+    slot is greedy dispatch an argmax-only variant (no sort, no sampler);
   * sparse-kernel state threads once: ``masks`` and the host-packed
     PackState (core/pack.py) are engine-level arguments passed to every
     jitted call — packed once per engine, reused by every prefill and every
@@ -45,12 +48,20 @@ __all__ = ["ServeEngine"]
 
 
 @functools.lru_cache(maxsize=None)
-def _decode_fn(cfg):
-    """The engine's single jitted decode-step: per-slot lm_decode + in-jit
-    sampling + in-jit slot-state advance.  Cached per config at module level
+def _decode_fn(cfg, greedy: bool):
+    """The engine's jitted decode-step: per-slot lm_decode + in-jit sampling
+    + in-jit slot-state advance.  Cached per (config, greedy) at module level
     (ModelConfig is frozen and hashable), so every engine instance for the
     same config — including the bench's warmup/timed pairs — shares one
     compiled executable.
+
+    ``greedy``: when every ACTIVE slot is greedy (temperature <= 0, the CLI
+    default) the step picks tokens with a plain argmax — no (B, V) sort, no
+    categorical draw whose result jnp.where would discard.  The engine
+    chooses the variant per step from its host temp mirror, so all-greedy
+    traffic never pays the O(V log V) sampler; one stochastic slot in the
+    batch selects the full sampler for everyone (the per-row is_greedy
+    select inside sample_tokens keeps greedy rows exact).
 
     The per-slot carry (tok, pos, gen_idx) advances INSIDE the jit (active
     rows only) and is returned device-resident: between admissions a step
@@ -64,8 +75,11 @@ def _decode_fn(cfg):
             params, cfg, caches, tok, pos, masks=masks, pack=pack,
             active=active,
         )
-        keys = step_keys(base_keys, gen_idx)
-        nxt = sample_tokens(logits[:, -1], keys, temp, topk)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            keys = step_keys(base_keys, gen_idx)
+            nxt = sample_tokens(logits[:, -1], keys, temp, topk)
         tok = jnp.where(active[:, None], nxt[:, None], tok)
         pos = pos + active
         gen_idx = gen_idx + active
@@ -74,21 +88,37 @@ def _decode_fn(cfg):
     return jax.jit(_decode, donate_argnums=(3, 4, 5, 8))
 
 
+def _bucket_len(n: int, floor: int = 8) -> int:
+    """Next power of two >= n (with a small floor): the prefill trace-cache
+    key, so arbitrary real-traffic prompt lengths compile O(log max_len)
+    traces instead of one per distinct length."""
+    return max(floor, 1 << (n - 1).bit_length())
+
+
 @functools.lru_cache(maxsize=None)
-def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int):
+def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
+                greedy: bool):
     """Jitted prefill-into-slot + first-token sample, one trace per prompt
-    LENGTH (the slot index, like every per-request scalar, is a traced
-    argument); module-level cache as for ``_decode_fn``."""
+    length BUCKET (the slot index and the true length n_valid, like every
+    per-request scalar, are traced arguments); module-level cache as for
+    ``_decode_fn``.  ``prompt_len`` here is the PADDED token count — the
+    engine buckets lengths to the next power of two where padding is exact
+    (ServeEngine._prefill_for), bounding both the number of XLA compiles and
+    this cache's growth under arbitrary-length traffic.  ``greedy`` requests
+    skip the sampler exactly as in ``_decode_fn``."""
     sched = attn_schedules(cfg, prompt_len + n_patches)
 
-    def _prefill(params, masks, pack, caches, batch, slot, base_key, temp,
-                 topk):
+    def _prefill(params, masks, pack, caches, batch, slot, n_valid, base_key,
+                 temp, topk):
         logits, caches = lm_prefill_into(
             params, cfg, caches, batch, slot, max_len, masks=masks,
-            pack=pack, attn_sched=sched,
+            pack=pack, attn_sched=sched, n_valid=n_valid,
         )
-        keys = step_keys(base_key[None], jnp.zeros((1,), jnp.int32))
-        tok = sample_tokens(logits[:, -1], keys, temp[None], topk[None])[0]
+        if greedy:
+            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        else:
+            keys = step_keys(base_key[None], jnp.zeros((1,), jnp.int32))
+            tok = sample_tokens(logits[:, -1], keys, temp[None], topk[None])[0]
         return tok, caches
 
     return jax.jit(_prefill, donate_argnums=(3,))
@@ -121,6 +151,14 @@ class ServeEngine:
         self.max_len = max_len
         self._n_patches = cfg.n_patches if cfg.frontend == "patch" else 0
 
+        # prompt-length bucketing is exact only where end-padding cannot
+        # leak into state: causal attention treats pads as never-attended
+        # future positions and the masked fill drops their K/V writes, but
+        # recurrent carries (hymba SSM h, xLSTM) would integrate pad steps
+        # and MoE routing would let pad tokens consume expert capacity —
+        # those families trace per exact length (see lm_prefill)
+        self._pad_prompts = cfg.block_type == "transformer" and not cfg.n_experts
+
         self.queue = RequestQueue()
         self.caches = init_caches(cfg, capacity, max_len)
         # per-slot host state (the scheduler's view of the pool); the decode
@@ -138,14 +176,27 @@ class ServeEngine:
         self._device_state: Optional[tuple] = None  # None => mirrors dirty
         # counters (benchmarks/serve_bench.py reads these)
         self.n_steps = 0
+        self.n_greedy_steps = 0  # steps that took the argmax-only fast path
         self.n_prefills = 0
         self.slot_history: list[tuple[int, int]] = []  # (rid, slot) admissions
-        self._decode_fn = _decode_fn(cfg)
+        # both sampler variants bound once: the per-step dispatch is a dict
+        # lookup, not a ModelConfig re-hash through the lru_cache
+        self._decode = {g: _decode_fn(cfg, g) for g in (False, True)}
 
     # -- admission ---------------------------------------------------------
 
-    def _prefill_for(self, prompt_len: int):
-        return _prefill_fn(self.cfg, self.max_len, prompt_len, self._n_patches)
+    def _padded_len(self, prompt_len: int) -> int:
+        """Token count the prefill trace is compiled for: the next power of
+        two where padding is exact (bounding compiles under arbitrary-length
+        traffic), the exact length otherwise; always capped so the padded
+        sequence still fits the cache rows."""
+        if not self._pad_prompts:
+            return prompt_len
+        return min(_bucket_len(prompt_len), self.max_len - self._n_patches)
+
+    def _prefill_for(self, prompt_len: int, greedy: bool):
+        return _prefill_fn(self.cfg, self.max_len, self._padded_len(prompt_len),
+                           self._n_patches, greedy)
 
     def submit(self, req: Request) -> None:
         need = req.prompt_len + self._n_patches + req.max_new_tokens
@@ -171,13 +222,18 @@ class ServeEngine:
                 return
             s = int(free[0])
             req.status = Status.PREFILL
-            batch = {"tokens": jnp.asarray(np.asarray(req.tokens, np.int32))[None]}
+            toks = np.zeros(self._padded_len(req.prompt_len), np.int32)
+            toks[: req.prompt_len] = np.asarray(req.tokens, np.int32)
+            batch = {"tokens": jnp.asarray(toks)[None]}
             if req.patches is not None:
                 batch["patches"] = jnp.asarray(req.patches)[None]
             base = request_key(req.seed)
-            tok, self.caches = self._prefill_for(req.prompt_len)(
+            tok, self.caches = self._prefill_for(
+                req.prompt_len, req.temperature <= 0.0
+            )(
                 self.params, self.masks, self.pack, self.caches, batch,
-                jnp.int32(s), jnp.asarray(base), jnp.float32(req.temperature),
+                jnp.int32(s), jnp.int32(req.prompt_len + self._n_patches),
+                jnp.asarray(base), jnp.float32(req.temperature),
                 jnp.int32(req.top_k),
             )
             self.n_prefills += 1
@@ -237,12 +293,15 @@ class ServeEngine:
                 jnp.asarray(self.topk),
             )
         tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d = self._device_state
-        nxt, self.caches, tok_d, pos_d, gen_d = self._decode_fn(
+        # all-greedy steps skip the sampler entirely (argmax, no (B, V) sort)
+        greedy = not bool(np.any(self.temp[self.active] > 0.0))
+        nxt, self.caches, tok_d, pos_d, gen_d = self._decode[greedy](
             self.params, self.masks, self.pack, self.caches,
             tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d,
         )
         self._device_state = (tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d)
         self.n_steps += 1
+        self.n_greedy_steps += greedy
         nxt = np.asarray(nxt)  # blocks on the decode -> post-compute timestamp
         t = clock() if clock is not None else now
         for s in np.nonzero(self.active)[0]:

@@ -13,6 +13,16 @@ engine capacity, and of whatever other requests share the batch.  Slot
 recycling therefore cannot perturb sampling (tested in
 tests/test_serving_engine.py::test_sampler_determinism).
 
+MoE caveat: the PRNG stream is always batch-independent, but the LOGITS a
+key samples from are not perfectly so for routed-MoE configs — expert
+capacity C scales with the decode batch, so when C binds, ACTIVE requests
+sharing a step can contend for expert slots in a way a solo session would
+not (dead slots never contend: lm_decode forces them out of routing,
+moe.py).  Engine-vs-lockstep token identity for MoE is therefore exact
+only while capacity is non-binding (see
+tests/test_serving_engine.py::test_per_slot_decode_recurrent_and_moe_families
+and docs/serving.md).
+
 temperature <= 0 selects greedy (argmax) — exactly the lockstep baseline's
 ``jnp.argmax(logits, -1)``, which is what makes the engine-vs-lockstep
 token-identity tests exact.  top_k <= 0 keeps the full distribution.

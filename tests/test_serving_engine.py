@@ -145,7 +145,16 @@ def test_active_mask_requires_vector_pos():
 @pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b", "qwen2-moe-a2.7b"])
 def test_per_slot_decode_recurrent_and_moe_families(arch):
     """Vector-pos + active decode matches scalar sessions for the SSM-hybrid,
-    xLSTM (recurrent states gated per-row) and MoE families."""
+    xLSTM (recurrent states gated per-row) and MoE families.
+
+    moe_capacity_factor=16.0 makes expert capacity NON-binding: capacity C
+    scales with the decode batch, so when C binds, ACTIVE requests batched
+    together can contend for expert slots in a way their solo lockstep
+    sessions cannot — batch-vs-solo token identity for MoE holds only while
+    capacity doesn't bind (docs/serving.md).  Dead-slot isolation is the
+    separate, unconditional invariant: see
+    test_moe_dead_slots_cannot_contend_expert_capacity.
+    """
     cfg = dataclasses.replace(
         get_config(arch, smoke=True), dtype="float32", moe_capacity_factor=16.0
     )
@@ -180,6 +189,63 @@ def test_per_slot_decode_recurrent_and_moe_families(arch):
             outs[s].append(int(nxt[s]))
     for s in range(2):
         assert outs[s] == refs[s], f"{arch}: slot {s} diverged"
+
+
+def test_moe_dead_slots_cannot_contend_expert_capacity():
+    """Dead slots must be MoE-routing no-ops at the DEFAULT capacity factor.
+
+    Expert capacity C is shared by every row of the decode batch with rank
+    priority to lower indices, so without masking a parked slot's stale
+    token at a LOW index could push an active request's token out of
+    capacity and change its logits (the regression this pins down: active
+    logits shifted by ~1 and flipped argmax).  lm_decode threads ``active``
+    into moe(), forcing dead rows out of routing entirely — active logits
+    must be bit-identical no matter what garbage dead slots hold."""
+    cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b", smoke=True),
+                              dtype="float32")
+    params = _params(cfg)
+    cap, max_len = 8, 16
+    # sanity: capacity binds at this batch (one expert CAN overflow) — at a
+    # non-binding C this test would pass vacuously
+    C = max(
+        int(np.ceil(cap * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor)),
+        min(cap, 4),
+    )
+    assert C < cap, "default-capacity config drifted: C no longer binds"
+
+    caches = init_caches(cfg, cap, max_len)
+    pos = np.zeros(cap, np.int32)
+    active = np.zeros(cap, bool)
+    cur = np.zeros(cap, np.int32)
+    for i in range(4):  # active requests in HIGH slots 4..7; 0..3 stay dead
+        s = 4 + i
+        t = _prompt(cfg, 4, seed=40 + i)
+        logits, caches = lm_prefill_into(
+            params, cfg, caches, {"tokens": jnp.asarray(t)[None]},
+            jnp.int32(s), max_len,
+        )
+        cur[s] = int(jnp.argmax(logits[0, -1]))
+        pos[s], active[s] = 4, True
+
+    def active_logits(dead_tok, dead_pos):
+        tok = cur.copy()
+        tok[:4] = dead_tok
+        p = pos.copy()
+        p[:4] = dead_pos
+        logits, _ = lm_decode(
+            params, cfg, caches, jnp.asarray(tok)[:, None],
+            pos=jnp.asarray(p), active=jnp.asarray(active),
+        )
+        return np.asarray(logits[4:, -1])
+
+    ref = active_logits(0, 0)
+    for dead_tok, dead_pos in ((1, 0), (97, 3), (cfg.vocab_size - 1, 9)):
+        got = active_logits(dead_tok, dead_pos)
+        np.testing.assert_array_equal(
+            got, ref,
+            err_msg="dead-slot contents leaked into active rows' logits "
+                    "(expert-capacity contention)",
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +355,96 @@ def test_engine_respects_arrival_times():
     assert late.status is Status.QUEUED and not engine.active.any()
     engine.step(now=2e9)
     assert late.status in (Status.DECODE, Status.DONE)
+
+
+# ---------------------------------------------------------------------------
+# prefill bucketing + greedy fast path
+# ---------------------------------------------------------------------------
+
+def test_padded_prefill_into_matches_exact_with_ring_wrap():
+    """Bucketed prefill (end-padding + masked fill + n_valid logits) must
+    match the exact-length path — including when the padding wraps a ring
+    cache (L=20, window=16, padded to 32: unmasked pad writes would clobber
+    still-needed true K/V at slots p % 16, a CATASTROPHIC >O(1) error).
+
+    Tolerance note: the padded trace reduces attention softmaxes over a
+    different (larger, masked) extent, so XLA's reduction order differs and
+    float32 results carry ~1e-7 noise vs the exact trace — mathematically
+    identical, not bit-identical.  Greedy TOKEN identity (the engine's
+    observable contract) is asserted engine-vs-lockstep in
+    test_engine_buckets_prompt_lengths_to_bounded_traces."""
+    cfg = _cfg()
+    params = _params(cfg)
+    t = _prompt(cfg, 20, seed=9)
+    max_len = 48
+    ca = init_caches(cfg, 2, max_len)
+    la, ca = lm_prefill_into(
+        params, cfg, ca, {"tokens": jnp.asarray(t)[None]}, jnp.int32(1),
+        max_len,
+    )
+    padded = np.zeros(32, np.int32)
+    padded[:20] = t
+    cb = init_caches(cfg, 2, max_len)
+    lb, cb = lm_prefill_into(
+        params, cfg, cb, {"tokens": jnp.asarray(padded)[None]}, jnp.int32(1),
+        max_len, n_valid=jnp.int32(20),
+    )
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=1e-4, atol=1e-5)
+    for x, y in zip(jax.tree_util.tree_leaves(ca), jax.tree_util.tree_leaves(cb)):
+        np.testing.assert_allclose(
+            np.asarray(x[1]), np.asarray(y[1]), rtol=1e-4, atol=1e-5,
+            err_msg="padded prefill produced a different slot cache",
+        )
+
+
+def test_engine_buckets_prompt_lengths_to_bounded_traces():
+    """Real traffic has arbitrary prompt lengths: the engine pads each to a
+    power-of-two bucket, so many distinct lengths share one jitted prefill
+    trace (bounded compile count + bounded lru_cache) AND still match their
+    lockstep references exactly."""
+    from repro.serving.engine import _prefill_fn
+
+    cfg = _cfg()
+    params = _params(cfg)
+    max_len = 96  # unique cache key: isolates this test's miss count
+    reqs = [
+        Request(rid=i, tokens=_prompt(cfg, L, seed=50 + i), max_new_tokens=3)
+        for i, L in enumerate((5, 6, 7, 8))  # all bucket to 8
+    ]
+    refs = {
+        r.rid: _lockstep_tokens(cfg, params, r.tokens, r.max_new_tokens, max_len)
+        for r in reqs
+    }
+    engine = ServeEngine(cfg, params, capacity=2, max_len=max_len)
+    before = _prefill_fn.cache_info().misses
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert _prefill_fn.cache_info().misses - before == 1, (
+        "4 prompt lengths in one bucket must share one prefill trace"
+    )
+    assert engine.n_prefills == 4
+    for r in reqs:
+        assert r.generated == refs[r.rid], f"request {r.rid} diverged"
+
+
+def test_greedy_steps_take_argmax_fast_path():
+    """All-greedy traffic (the CLI default) must dispatch the argmax-only
+    decode variant on every step; a stochastic slot in the batch selects the
+    full sampler."""
+    cfg = _cfg()
+    params = _params(cfg)
+    e1 = ServeEngine(cfg, params, capacity=2, max_len=32)
+    e1.submit(Request(rid=0, tokens=_prompt(cfg, 4, seed=0), max_new_tokens=6))
+    e1.run()
+    assert e1.n_steps > 0 and e1.n_greedy_steps == e1.n_steps
+
+    e2 = ServeEngine(cfg, params, capacity=2, max_len=32)
+    e2.submit(Request(rid=0, tokens=_prompt(cfg, 4, seed=0), max_new_tokens=6,
+                      temperature=0.8, seed=1))
+    e2.run()
+    assert e2.n_steps > 0 and e2.n_greedy_steps == 0
 
 
 # ---------------------------------------------------------------------------
