@@ -4,9 +4,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-kernels test-serve docs-check bench-kernels bench-serve bench-serve-smoke
+.PHONY: verify test test-kernels test-serve test-chaos docs-check bench-kernels bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke
 
-verify: test docs-check bench-serve-smoke
+verify: test docs-check bench-serve-smoke bench-chaos-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,3 +38,18 @@ bench-serve:
 # fixed dispatch overheads dominate at this scale)
 bench-serve-smoke:
 	$(PY) -m benchmarks.serve_bench --smoke-bench --out /tmp/BENCH_serve_smoke.json
+
+# fault-tolerance tier only: quarantine isolation, shedding/backpressure,
+# pack-integrity and torn-checkpoint guards — re-run after touching the
+# failure paths (serving/{engine,queue,faults}.py, checkpoint, train guard)
+test-chaos:
+	$(PY) -m pytest -x -q -m chaos
+
+# chaos harness: fault-injected serving must degrade, never corrupt —
+# regenerates BENCH_chaos.json and FAILS on any isolation/shedding
+# invariant violation (the robustness analogue of bench-serve's gate)
+bench-chaos:
+	$(PY) -m benchmarks.chaos_bench
+
+bench-chaos-smoke:
+	$(PY) -m benchmarks.chaos_bench --smoke-bench --out /tmp/BENCH_chaos_smoke.json

@@ -1,0 +1,254 @@
+"""Chaos harness: fault-injected serving must degrade, never corrupt.
+
+  PYTHONPATH=src python -m benchmarks.chaos_bench            # writes BENCH_chaos.json
+  PYTHONPATH=src python -m benchmarks.chaos_bench --smoke-bench --out /tmp/c.json
+
+Two deterministic scenarios against the continuous-batching ServeEngine
+(serving/engine.py), both driven by a VIRTUAL clock so every run replays
+bit-identically:
+
+  isolation   a reference fault-free run records every request's token
+              stream; then the same workload runs with a seeded
+              FaultInjector (serving/faults.py) poisoning random
+              (step, slot) logits rows to NaN.
+                * with max_retries=0: every poisoned request must land
+                  FAILED, and every UNTOUCHED request's stream must be
+                  bit-identical to the reference — quarantine is per-slot,
+                  corruption does not leak through the shared cache/batch;
+                * with retries: EVERY request (poisoned ones included) must
+                  complete with the reference stream — sampling is a pure
+                  function of (weights, prompt, seed), so a retry replays
+                  the fault-free tokens exactly.
+  shedding    a burst storm (serving/faults.py::burst_storm) of more
+              requests than the pool can clear within their deadline, on a
+              bounded queue: some must SHED (backpressure is real), some
+              must complete, none may sit past its admission deadline, and
+              the books must balance (done + shed == submitted + rejected).
+
+The process EXITS NONZERO if any invariant is violated — this is the
+robustness analogue of serve_bench's speedup gate.  Results land in
+BENCH_chaos.json.  ``--smoke-bench`` shrinks the workload for make verify.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.launch.serve import configure_kernel, init_serving_state
+from repro.serving import FaultInjector, ServeEngine, Status, burst_storm
+
+
+def _drain(engine, *, dt: float = 1.0, max_steps: int = 10_000) -> float:
+    """Step under a virtual clock until the engine is idle; returns the
+    final virtual time.  dt=1.0 per step makes deadline math exact in
+    test-land: a ttl of K means 'admitted within K steps'."""
+    now = 0.0
+    steps = 0
+    while len(engine.queue) or engine.active.any():
+        engine.step(now)
+        now += dt
+        steps += 1
+        if steps > max_steps:
+            raise SystemExit("chaos_bench: engine failed to drain (livelock?)")
+    return now
+
+
+def _streams(engine) -> dict[int, list[int]]:
+    return {
+        r.rid: list(r.generated)
+        for r in engine.queue.done
+        if r.status is Status.DONE
+    }
+
+
+def run_isolation(cfg, params, masks, pack, *, capacity, max_len, n_requests,
+                  n_faults, seed) -> dict:
+    def fresh_reqs():
+        return burst_storm(cfg, n_requests, prompt_len=8, max_new_tokens=8,
+                           seed=seed)
+
+    def run(faults=None, max_retries=0):
+        engine = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                             masks=masks, pack=pack, max_retries=max_retries,
+                             faults=faults)
+        for r in fresh_reqs():
+            engine.submit(r)
+        _drain(engine)
+        return engine
+
+    ref = _streams(run())
+
+    violations = []
+
+    # no-retry: poisoned requests FAIL, everyone else is bit-identical
+    inj = FaultInjector(seed)
+    pairs = inj.poison_random(n_faults, max_step=n_requests * 4,
+                              capacity=capacity)
+    eng = run(faults=inj, max_retries=0)
+    got = _streams(eng)
+    failed = {r.rid for r in eng.queue.done if r.status is Status.FAILED}
+    if eng.n_quarantined != len(failed):
+        violations.append(
+            f"no-retry: {eng.n_quarantined} quarantines but {len(failed)} "
+            "FAILED requests (each detection should be terminal here)"
+        )
+    for rid, toks in got.items():
+        if toks != ref[rid]:
+            violations.append(
+                f"ISOLATION BROKEN: request {rid} completed but its stream "
+                f"differs from the fault-free run ({toks} != {ref[rid]})"
+            )
+    if len(got) + len(failed) != n_requests:
+        violations.append(
+            f"no-retry books don't balance: {len(got)} done + {len(failed)} "
+            f"failed != {n_requests} submitted"
+        )
+
+    # with retries: EVERYONE completes with the reference stream
+    inj2 = FaultInjector(seed)
+    inj2.poison_random(n_faults, max_step=n_requests * 4, capacity=capacity)
+    eng2 = run(faults=inj2, max_retries=3)
+    got2 = _streams(eng2)
+    if len(got2) != n_requests:
+        bad = [r.rid for r in eng2.queue.done if r.status is not Status.DONE]
+        violations.append(
+            f"retry: {len(got2)}/{n_requests} completed (non-DONE rids {bad})"
+        )
+    for rid, toks in got2.items():
+        if toks != ref[rid]:
+            violations.append(
+                f"RETRY NOT EXACT: request {rid} retried but its stream "
+                f"differs from the fault-free run"
+            )
+
+    return {
+        "requests": n_requests,
+        "planned_faults": len(pairs),
+        "no_retry": {"done": len(got), "failed": len(failed),
+                     "quarantined": eng.n_quarantined},
+        "with_retry": {"done": len(got2), "quarantined": eng2.n_quarantined,
+                       "retries": eng2.n_retries_total},
+        "violations": violations,
+    }
+
+
+def run_shedding(cfg, params, masks, pack, *, capacity, max_len, n_requests,
+                 seed) -> dict:
+    # every request wants admission within `ttl` virtual seconds; the pool
+    # can only clear ~capacity requests per (prompt 8 + gen 8) window, so a
+    # storm of n >> capacity MUST shed the tail
+    ttl = 10.0
+    engine = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                         masks=masks, pack=pack,
+                         queue_limit=n_requests // 2, deadline=ttl)
+    rejected = 0
+    for r in burst_storm(cfg, n_requests, prompt_len=8, max_new_tokens=8,
+                         seed=seed):
+        if not engine.submit(r):
+            rejected += 1
+    _drain(engine)
+    stats = engine.stats(0.0)
+
+    violations = []
+    done = [r for r in engine.queue.done if r.status is Status.DONE]
+    shed = [r for r in engine.queue.done if r.status is Status.SHED]
+    if rejected == 0:
+        violations.append(
+            f"backpressure never fired: queue_limit {n_requests // 2} "
+            f"absorbed all {n_requests} burst submissions"
+        )
+    if not shed or not done:
+        violations.append(
+            f"expected BOTH sheds and completions under the storm, got "
+            f"{len(shed)} shed / {len(done)} done"
+        )
+    if len(done) + len(shed) != n_requests:
+        violations.append(
+            f"books don't balance: {len(done)} done + {len(shed)} shed "
+            f"!= {n_requests} submitted"
+        )
+    late = [r.rid for r in done
+            if r.t_admitted is not None and r.t_admitted - r.arrival > ttl]
+    if late:
+        violations.append(
+            f"deadline violated: rids {late} admitted past ttl={ttl}"
+        )
+    return {
+        "requests": n_requests,
+        "queue_limit": n_requests // 2,
+        "ttl": ttl,
+        "rejected_at_submit": rejected,
+        "done": len(done),
+        "shed": len(shed),
+        "queue_wait_p95_s": stats["queue_wait_p95_s"],
+        "violations": violations,
+    }
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="h2o-danube-1.8b")
+    p.add_argument("--capacity", type=int, default=3)
+    p.add_argument("--requests", type=int, default=12)
+    p.add_argument("--faults", type=int, default=3)
+    p.add_argument("--max-len", type=int, default=32)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--kernel", default=None,
+                   choices=["dense", "masked", "block_sparse"])
+    p.add_argument("--block", type=int, default=16)
+    p.add_argument("--out", default="BENCH_chaos.json")
+    p.add_argument("--smoke-bench", action="store_true",
+                   help="tiny workload for make verify (seconds, not minutes)")
+    args = p.parse_args()
+
+    if args.smoke_bench:
+        args.requests = min(args.requests, 6)
+        args.faults = min(args.faults, 2)
+
+    cfg = configure_kernel(
+        get_config(args.arch, smoke=True), kernel=args.kernel, block=args.block
+    )
+    params, masks, pack = init_serving_state(cfg)
+
+    iso = run_isolation(cfg, params, masks, pack, capacity=args.capacity,
+                        max_len=args.max_len, n_requests=args.requests,
+                        n_faults=args.faults, seed=args.seed)
+    storm = run_shedding(cfg, params, masks, pack, capacity=args.capacity,
+                         max_len=args.max_len, n_requests=args.requests * 2,
+                         seed=args.seed)
+
+    violations = iso["violations"] + storm["violations"]
+    out = {
+        "meta": {
+            "arch": cfg.name,
+            "kernel": cfg.sparse.kernel,
+            "capacity": args.capacity,
+            "seed": args.seed,
+            "smoke_bench": bool(args.smoke_bench),
+        },
+        "isolation": iso,
+        "shedding": storm,
+        "ok": not violations,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"isolation: {iso['no_retry']['done']} done / "
+          f"{iso['no_retry']['failed']} failed (no retry); "
+          f"{iso['with_retry']['done']}/{iso['requests']} done with retries "
+          f"({iso['with_retry']['retries']} retries)")
+    print(f"shedding:  {storm['done']} done / {storm['shed']} shed / "
+          f"{storm['rejected_at_submit']} rejected at submit "
+          f"(queue wait p95 {storm['queue_wait_p95_s']:.1f}s, "
+          f"ttl {storm['ttl']:.0f}s)")
+    print(f"-> {args.out}")
+    if violations:
+        for v in violations:
+            print(f"VIOLATION: {v}")
+        raise SystemExit(f"chaos_bench: {len(violations)} invariant "
+                         "violation(s) — see above")
+    print("all chaos invariants hold")
+
+
+if __name__ == "__main__":
+    main()

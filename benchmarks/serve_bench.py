@@ -176,6 +176,10 @@ def main():
             "repeats": args.repeats,
             "seed": args.seed,
             "smoke_bench": bool(args.smoke_bench),
+            # engine decode now also reduces the per-slot finite flag in-jit
+            # (NaN-slot quarantine, docs/serving.md#failure-model) — recorded
+            # so regressions in this number can be attributed to it
+            "finite_check": True,
         },
         "lockstep": lock,
         "engine": eng,

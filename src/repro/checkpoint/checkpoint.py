@@ -1,11 +1,17 @@
 """Fault-tolerant checkpointing.
 
-- Atomic: write to <dir>/tmp-<step>, fsync, rename to <dir>/step-<n>.
+- Crash-atomic: write into <dir>/tmp-<step> staging, fsync every file AND
+  the directory entries, then rename to <dir>/step-<n> — a crash at any
+  instant leaves either the complete old set or the complete new set, never
+  a half-written step dir visible under the final name.  The manifest is
+  written LAST (after the array blob is durable) and records the blob's
+  byte size, so a torn write is detectable, not just unlucky.
 - Self-describing: one .npz of flattened (path -> array) leaves + manifest.
 - Masks are bit-packed (np.packbits): 1 bit/connection on disk (8x smaller
   than bool, 32x smaller than f32 — the sparse topology is cheap to persist).
-- keep_last_k garbage collection; corrupted/partial checkpoints are skipped
-  on restore (falls back to the newest valid one).
+- keep_last_k garbage collection (also sweeps stray tmp-* staging dirs left
+  by crashes); corrupted/partial/torn checkpoints are skipped on restore
+  (``latest_step``/``restore`` fall back to the newest VALID one).
 - Elastic restarts: restore() takes an optional tree of NamedShardings and
   device_puts every leaf with them — the same checkpoint reloads onto a
   different mesh/device count (checkpoints store *logical* arrays).
@@ -14,9 +20,11 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -59,11 +67,19 @@ def save(state, ckpt_dir, step: int, *, keep_last_k: int = 3, background: bool =
             shutil.rmtree(tmp)
         tmp.mkdir()
         np.savez(tmp / "arrays.npz", **{k.replace("/", "|"): v for k, v in host.items()})
+        _fsync_file(tmp / "arrays.npz")
+        # manifest goes LAST, after the blob is durable, carrying the blob's
+        # byte size — a manifest that exists and matches implies a complete
+        # array file (restore/_valid check this)
+        meta["arrays_bytes"] = (tmp / "arrays.npz").stat().st_size
         (tmp / "manifest.json").write_text(json.dumps(meta))
+        _fsync_file(tmp / "manifest.json")
+        _fsync_dir(tmp)
         final = ckpt_dir / f"step-{step:010d}"
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)
+        _fsync_dir(ckpt_dir)  # make the rename itself durable
         _gc(ckpt_dir, keep_last_k)
 
     if background:
@@ -74,14 +90,50 @@ def save(state, ckpt_dir, step: int, *, keep_last_k: int = 3, background: bool =
     return None
 
 
+def _fsync_file(p: pathlib.Path) -> None:
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(p: pathlib.Path) -> None:
+    try:
+        fd = os.open(p, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:
+        return  # filesystems without directory fds (exotic mounts): best-effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _gc(ckpt_dir: pathlib.Path, keep: int):
     steps = sorted(ckpt_dir.glob("step-*"))
     for old in steps[:-keep]:
         shutil.rmtree(old, ignore_errors=True)
+    for stray in ckpt_dir.glob("tmp-*"):  # staging dirs orphaned by a crash
+        shutil.rmtree(stray, ignore_errors=True)
 
 
 def _valid(d: pathlib.Path) -> bool:
-    return (d / "manifest.json").exists() and (d / "arrays.npz").exists()
+    """True iff ``d`` holds a COMPLETE checkpoint: manifest parses, and the
+    array blob both exists and has the byte size the manifest recorded at
+    write time (manifests predating the size field fall back to existence).
+    Torn/partial dirs — crash mid-save, truncated copy — report False and
+    are skipped by latest_step/restore."""
+    man, blob = d / "manifest.json", d / "arrays.npz"
+    if not (man.exists() and blob.exists()):
+        return False
+    try:
+        meta = json.loads(man.read_text())
+    except (json.JSONDecodeError, OSError):
+        return False
+    want = meta.get("arrays_bytes")
+    if want is not None and blob.stat().st_size != want:
+        return False
+    return True
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
@@ -99,13 +151,29 @@ def restore(like, ckpt_dir, *, step: Optional[int] = None, shardings=None):
 
     shardings: optional pytree (same structure) of NamedSharding — enables
     restoring onto a different mesh than the one that saved (elastic restart).
+
+    With ``step=None`` this walks step dirs NEWEST-FIRST and skips any that
+    are torn or unreadable (_valid size check, then zip/json decode errors
+    at load time), so a crash during the most recent save costs one
+    checkpoint interval, never the run.  An explicit ``step`` is a caller
+    decision: errors propagate.
     """
     ckpt_dir = pathlib.Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
-    d = ckpt_dir / f"step-{step:010d}"
+    if step is not None:
+        return _restore_dir(like, ckpt_dir / f"step-{step:010d}", shardings), step
+    if ckpt_dir.exists():
+        for d in sorted(ckpt_dir.glob("step-*"), reverse=True):
+            if not _valid(d):
+                continue
+            try:
+                got = _restore_dir(like, d, shardings)
+            except (zipfile.BadZipFile, json.JSONDecodeError, OSError, ValueError):
+                continue  # torn past the size check (e.g. corrupt zip member)
+            return got, int(d.name.split("-")[1])
+    raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
+
+
+def _restore_dir(like, d: pathlib.Path, shardings):
     meta = json.loads((d / "manifest.json").read_text())
     data = np.load(d / "arrays.npz")
     arrays: dict[str, np.ndarray] = {}
@@ -135,11 +203,12 @@ def restore(like, ckpt_dir, *, step: Optional[int] = None, shardings=None):
             continue
         arr = arrays.get(name)
         if arr is None:
-            if name.startswith("pack/"):
-                # pre-PackState checkpoint: the pack is derived state
-                # (rebuildable from the masks), so fall back to the template
-                # leaf — callers MUST refresh_pack() after restoring so it
-                # matches the restored masks (launch/train.py does).
+            if name.startswith("pack/") or name == "nonfinite_steps":
+                # pre-PackState / pre-guard checkpoint: the pack is derived
+                # state (rebuildable from the masks — callers MUST
+                # refresh_pack() after restoring, launch/train.py does) and
+                # nonfinite_steps is a telemetry counter that restarts at
+                # the template value; fall back to the template leaf.
                 arr = leaf
             else:
                 raise KeyError(f"checkpoint {d} is missing leaf {name!r}")
@@ -147,7 +216,7 @@ def restore(like, ckpt_dir, *, step: Optional[int] = None, shardings=None):
             leaves.append(jax.device_put(arr, sh))
         else:
             leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 class Checkpointer:

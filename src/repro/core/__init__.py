@@ -21,10 +21,12 @@ from .attn_sched import (  # noqa: F401
     sched_for,
 )
 from .pack import (  # noqa: F401
+    PackIntegrityError,
     build_pack_state,
     pack_mismatch,
     pack_stats,
     refresh_pack_state,
+    validate_pack,
 )
 from .pruning import PruningSchedule, prune_step, snip_masks  # noqa: F401
 from .rigl import SparseAlgo, dense_to_sparse_grad, rigl_update, rigl_update_layer  # noqa: F401

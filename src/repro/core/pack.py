@@ -76,7 +76,20 @@ __all__ = [
     "pack_stats",
     "is_pack_entry",
     "slack_width",
+    "validate_pack",
+    "PackIntegrityError",
 ]
+
+
+class PackIntegrityError(ValueError):
+    """A PackState entry violates its CSC/CSR structural invariants.
+
+    Raised by ``validate_pack`` — a corrupted pack (truncated rows,
+    out-of-range block ids, count/nnz drift) would otherwise make the
+    block-sparse kernels silently execute the WRONG topology: wrong answers
+    with no error, the exact failure the serving engine's integrity guard
+    (docs/serving.md#failure-model) exists to make loud.
+    """
 
 
 def is_pack_entry(x) -> bool:
@@ -264,6 +277,88 @@ def pack_mismatch(masks, pack, block_shape):
             rec = unpack_block_mask(e["idx"], e["cnt"], bm.shape[0])
         total = total + jnp.sum(rec != bm).astype(jnp.int32)
     return total
+
+
+def validate_pack(pack, *, where: str = "pack") -> int:
+    """Host-side CSC/CSR integrity check over every PackState entry.
+
+    Verifies, per packed leaf (2-D and grouped 3-D entries alike):
+
+      * shape coherence — ``cnt`` matches ``idx`` minus its width dim, same
+        for ``rcnt``/``ridx``, and the CSR view has one row per K-block
+        (``ridx.shape[-2] == nkb``);
+      * counts within capacity — ``0 <= cnt <= width`` and
+        ``0 <= rcnt <= row_width`` (a truncated pack shows up as a count
+        claiming more slots than the index rows hold);
+      * live indices in range — every index slot BELOW its column's count
+        holds a block id inside the grid (``idx`` in ``[0, nkb)``, ``ridx``
+        in ``[0, nnb)``); padded slots beyond the count are ignored;
+      * nnz consistency — ``sum(cnt) == nnz == sum(rcnt)`` (the CSC and CSR
+        views must describe the SAME topology).
+
+    Raises ``PackIntegrityError`` naming the layer and the violated
+    invariant; returns the number of entries checked.  Cost is O(block
+    grid) numpy on the host — nothing per-token: callers run it at engine
+    construction and after every ``refresh_pack`` (training/steps.py), the
+    same amortized points that build packs in the first place.
+    """
+    if pack is None:
+        return 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(pack, is_leaf=is_pack_entry)
+    checked = 0
+    for path, e in flat:
+        if e is None:
+            continue
+        name = f"{where}:{path_name(path)}"
+
+        def fail(msg):
+            raise PackIntegrityError(
+                f"PackState integrity violation at {name}: {msg} — the "
+                "block-sparse kernels would execute a corrupted topology "
+                "(silent wrong answers); see docs/serving.md#failure-model"
+            )
+
+        for k in ("idx", "cnt", "ridx", "rcnt", "nnz", "nkb"):
+            if k not in e:
+                fail(f"entry is missing field {k!r}")
+        idx = np.asarray(e["idx"])
+        cnt = np.asarray(e["cnt"])
+        ridx = np.asarray(e["ridx"])
+        rcnt = np.asarray(e["rcnt"])
+        nnz = int(e["nnz"])
+        nkb = int(e["nkb"])
+        if idx.shape[:-1] != cnt.shape:
+            fail(f"idx {idx.shape} does not extend cnt {cnt.shape}")
+        if ridx.shape[:-1] != rcnt.shape:
+            fail(f"ridx {ridx.shape} does not extend rcnt {rcnt.shape}")
+        if ridx.shape[-2] != nkb:
+            fail(f"CSR has {ridx.shape[-2]} rows, expected nkb={nkb}")
+        width, row_width = idx.shape[-1], ridx.shape[-1]
+        nnb = cnt.shape[-1]
+        if cnt.size and (cnt.min() < 0 or cnt.max() > width):
+            fail(
+                f"cnt out of range [0, width={width}] "
+                f"(max {int(cnt.max())} — truncated pack?)"
+            )
+        if rcnt.size and (rcnt.min() < 0 or rcnt.max() > row_width):
+            fail(
+                f"rcnt out of range [0, row_width={row_width}] "
+                f"(max {int(rcnt.max())} — truncated pack?)"
+            )
+        live = np.arange(width) < cnt[..., None]
+        if np.any(live & ((idx < 0) | (idx >= nkb))):
+            fail(f"live CSC index outside the K-block grid [0, {nkb})")
+        rlive = np.arange(row_width) < rcnt[..., None]
+        if np.any(rlive & ((ridx < 0) | (ridx >= nnb))):
+            fail(f"live CSR index outside the N-block grid [0, {nnb})")
+        csum, rsum = int(cnt.sum()), int(rcnt.sum())
+        if csum != nnz or rsum != nnz:
+            fail(
+                f"nnz inconsistency: sum(cnt)={csum}, sum(rcnt)={rsum}, "
+                f"recorded nnz={nnz}"
+            )
+        checked += 1
+    return checked
 
 
 def pack_stats(pack) -> dict[str, Any]:

@@ -219,6 +219,16 @@ def main():
                    help="Poisson arrival rate, req/s (0 = burst at t=0)")
     p.add_argument("--max-len", type=int, default=128,
                    help="per-slot cache length (prompt + generation bound)")
+    # fault-tolerance knobs (docs/serving.md#failure-model)
+    p.add_argument("--queue-limit", type=int, default=None,
+                   help="max queued requests before submit sheds (backpressure; "
+                   "default unbounded)")
+    p.add_argument("--deadline", type=float, default=None,
+                   help="admission deadline in seconds from arrival; requests "
+                   "still queued past it are SHED (default none)")
+    p.add_argument("--max-retries", type=int, default=0,
+                   help="quarantine-retry budget per request: non-finite slots "
+                   "re-queue with backoff this many times before FAILED")
     # lockstep baseline (legacy fixed-batch driver)
     p.add_argument("--lockstep", action="store_true",
                    help="run the fixed-batch serve_session baseline instead")
@@ -264,12 +274,18 @@ def main():
 
     engine = ServeEngine(
         cfg, params, capacity=args.capacity, max_len=args.max_len,
-        masks=masks, pack=pack,
+        masks=masks, pack=pack, queue_limit=args.queue_limit,
+        deadline=args.deadline, max_retries=args.max_retries,
     )
+    n_shed_at_submit = 0
     for req in staggered_requests(
         cfg, args.requests, arrival_rate=args.arrival_rate
     ):
-        engine.submit(req)
+        if not engine.submit(req):
+            n_shed_at_submit += 1  # backpressure: bounded queue said no
+    if n_shed_at_submit:
+        print(f"backpressure: {n_shed_at_submit} requests shed at submit "
+              f"(--queue-limit {args.queue_limit})")
     stats = engine.run()
     print(
         f"engine  kernel={cfg.sparse.kernel}  "

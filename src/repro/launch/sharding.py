@@ -118,6 +118,8 @@ def state_shardings(state, axes_tree, mesh, *, fsdp: bool = False):
         "opt": opt_sh,
         "rng": rep,
     }
+    if "nonfinite_steps" in state:
+        out["nonfinite_steps"] = rep
     if "dense_mom" in state:
         out["dense_mom"] = p_sh
     return out

@@ -9,4 +9,5 @@ from .model import (  # noqa: F401
     lm_loss,
     lm_prefill,
     lm_prefill_into,
+    logits_all_finite,
 )

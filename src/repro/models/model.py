@@ -55,6 +55,7 @@ __all__ = [
     "lm_prefill",
     "lm_prefill_into",
     "lm_decode",
+    "logits_all_finite",
     "stack_layer_params",
 ]
 
@@ -581,6 +582,21 @@ def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
         )
 
     return logits, jax.tree_util.tree_map(scatter, caches, row)
+
+
+def logits_all_finite(logits):
+    """Per-row all-finite reduction over a step's logits — the serving
+    engine's in-flight failure detector (docs/serving.md#failure-model).
+
+    logits: (B, V) or (B, 1, V) float.  Returns (B,) bool — True iff every
+    logit of the row is finite.  Vocab-padding slots are masked to the
+    FINITE sentinel -1e30 by ``_logits`` (never -inf), so a healthy forward
+    is all-finite by construction and any NaN/Inf in a row is a real
+    numerical fault on that slot.  Computed INSIDE the engine's jitted
+    decode/prefill (serving/engine.py::_decode_fn) so the fast path stays
+    one dispatch; the host reads one extra (B,) bool per step.
+    """
+    return jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
 
 
 def _gate_rows(active, new, old):

@@ -2,8 +2,12 @@
 
 Entry point: ``ServeEngine`` (engine.py) — admits queued ``Request``s
 (queue.py) into recycled KV-cache slots and decodes all active slots in one
-jitted per-slot step.  See docs/serving.md for the end-to-end tour.
+jitted per-slot step.  Failure edges (deadline shedding, NaN-slot
+quarantine, bounded retries) and the deterministic chaos harness
+(``FaultInjector``, faults.py) are documented in
+docs/serving.md#failure-model.  See docs/serving.md for the end-to-end tour.
 """
 from .engine import ServeEngine  # noqa: F401
+from .faults import FaultInjector, burst_storm, truncate_pack  # noqa: F401
 from .queue import Request, RequestQueue, Status, poisson_arrivals  # noqa: F401
 from .sampler import request_key, sample_tokens, step_keys  # noqa: F401

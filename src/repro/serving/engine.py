@@ -27,6 +27,30 @@ decode steps on padding.  This engine removes that barrier:
     jitted call — packed once per engine, reused by every prefill and every
     decode step, exactly the train-time tight-grid contract.
 
+The step loop is a small state machine with explicit FAILURE edges, not a
+happy path (docs/serving.md#failure-model):
+
+  * **backpressure** — the queue is depth-bounded (``queue_limit``) and
+    ``submit`` returns False (request SHED) instead of growing without
+    bound; queued requests carry admission deadlines (``deadline`` / per-
+    request ``ttl``) and are shed IN-QUEUE the step they expire — a
+    structured terminal status, never an exception;
+  * **in-flight detection & quarantine** — every jitted decode/prefill also
+    returns a per-slot ``finite`` flag (models/model.py::logits_all_finite,
+    reduced in-jit so the fast path stays one dispatch).  A non-finite row
+    quarantines ONLY that request: its garbage token is discarded, its slot
+    scrubbed (freed — the next admission's lm_prefill_into overwrites the
+    full cache row) and the request either re-queues with exponential
+    backoff (bounded ``max_retries``) or lands FAILED.  Every other slot's
+    stream is bit-identical to a fault-free run (the chaos isolation
+    invariant, enforced by benchmarks/chaos_bench.py);
+  * **topology integrity** — a PackState passed at construction is checked
+    against its CSC/CSR invariants (core/pack.py::validate_pack) so a
+    corrupted pack is a loud PackIntegrityError, not silent wrong answers;
+  * **fault injection** — an optional serving/faults.py::FaultInjector
+    corrupts chosen (step, slot) logits in-jit and delays prefills, so the
+    failure edges above are exercised deterministically by chaos tests.
+
 Lifecycle and slot/cache layout are documented in docs/serving.md; request
 states live in serving/queue.py.
 """
@@ -40,7 +64,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import attn_schedules, init_caches, lm_decode, lm_prefill_into
+from ..core.pack import validate_pack
+from ..models import (
+    attn_schedules,
+    init_caches,
+    lm_decode,
+    lm_prefill_into,
+    logits_all_finite,
+)
+from .faults import FaultInjector
 from .queue import Request, RequestQueue, Status
 from .sampler import request_key, sample_tokens, step_keys
 
@@ -48,12 +80,12 @@ __all__ = ["ServeEngine"]
 
 
 @functools.lru_cache(maxsize=None)
-def _decode_fn(cfg, greedy: bool):
-    """The engine's jitted decode-step: per-slot lm_decode + in-jit sampling
-    + in-jit slot-state advance.  Cached per (config, greedy) at module level
-    (ModelConfig is frozen and hashable), so every engine instance for the
-    same config — including the bench's warmup/timed pairs — shares one
-    compiled executable.
+def _decode_fn(cfg, greedy: bool, faulty: bool = False):
+    """The engine's jitted decode-step: per-slot lm_decode + in-jit finite
+    flag + in-jit sampling + in-jit slot-state advance.  Cached per
+    (config, greedy, faulty) at module level (ModelConfig is frozen and
+    hashable), so every engine instance for the same config — including the
+    bench's warmup/timed pairs — shares one compiled executable.
 
     ``greedy``: when every ACTIVE slot is greedy (temperature <= 0, the CLI
     default) the step picks tokens with a plain argmax — no (B, V) sort, no
@@ -63,27 +95,41 @@ def _decode_fn(cfg, greedy: bool):
     batch selects the full sampler for everyone (the per-row is_greedy
     select inside sample_tokens keeps greedy rows exact).
 
+    ``faulty``: chaos-only variant taking (fault_mask (B,), fault_val (B,))
+    and overwriting masked rows' logits BEFORE the finite reduction and the
+    sampler — fault injection sees exactly the path a real non-finite
+    forward would take, and fault-free engines never compile it.
+
+    The per-slot ``finite`` flag (models/model.py::logits_all_finite) is
+    reduced in-jit over each slot's logits row, so failure detection costs
+    no extra dispatch — the host reads one extra (capacity,) bool.
+
     The per-slot carry (tok, pos, gen_idx) advances INSIDE the jit (active
     rows only) and is returned device-resident: between admissions a step
     uploads nothing and downloads one (capacity,) token vector — the host's
-    only per-step work is finish detection.
+    only per-step work is finish/quarantine detection.
     """
 
     def _decode(params, masks, pack, caches, tok, pos, active, base_keys,
-                gen_idx, temp, topk):
+                gen_idx, temp, topk, *fault):
         logits, caches = lm_decode(
             params, cfg, caches, tok, pos, masks=masks, pack=pack,
             active=active,
         )
+        last = logits[:, -1]
+        if faulty:
+            fmask, fval = fault
+            last = jnp.where(fmask[:, None], fval[:, None], last)
+        finite = logits_all_finite(last)
         if greedy:
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
         else:
             keys = step_keys(base_keys, gen_idx)
-            nxt = sample_tokens(logits[:, -1], keys, temp, topk)
+            nxt = sample_tokens(last, keys, temp, topk)
         tok = jnp.where(active[:, None], nxt[:, None], tok)
         pos = pos + active
         gen_idx = gen_idx + active
-        return nxt, caches, tok, pos, gen_idx
+        return nxt, finite, caches, tok, pos, gen_idx
 
     return jax.jit(_decode, donate_argnums=(3, 4, 5, 8))
 
@@ -97,7 +143,7 @@ def _bucket_len(n: int, floor: int = 8) -> int:
 
 @functools.lru_cache(maxsize=None)
 def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
-                greedy: bool):
+                greedy: bool, faulty: bool = False):
     """Jitted prefill-into-slot + first-token sample, one trace per prompt
     length BUCKET (the slot index and the true length n_valid, like every
     per-request scalar, are traced arguments); module-level cache as for
@@ -105,21 +151,27 @@ def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
     engine buckets lengths to the next power of two where padding is exact
     (ServeEngine._prefill_for), bounding both the number of XLA compiles and
     this cache's growth under arbitrary-length traffic.  ``greedy`` requests
-    skip the sampler exactly as in ``_decode_fn``."""
+    skip the sampler exactly as in ``_decode_fn``.  Also returns the
+    request's scalar ``finite`` flag (and, with ``faulty``, applies the
+    injected corruption first) — see ``_decode_fn``."""
     sched = attn_schedules(cfg, prompt_len + n_patches)
 
     def _prefill(params, masks, pack, caches, batch, slot, n_valid, base_key,
-                 temp, topk):
+                 temp, topk, *fault):
         logits, caches = lm_prefill_into(
             params, cfg, caches, batch, slot, max_len, masks=masks,
             pack=pack, attn_sched=sched, n_valid=n_valid,
         )
+        last = logits[:, -1]
+        if faulty:
+            last = jnp.where(fault[0], fault[1], last)
+        finite = logits_all_finite(last)[0]
         if greedy:
-            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            tok = jnp.argmax(last[0]).astype(jnp.int32)
         else:
             keys = step_keys(base_key[None], jnp.zeros((1,), jnp.int32))
-            tok = sample_tokens(logits[:, -1], keys, temp[None], topk[None])[0]
-        return tok, caches
+            tok = sample_tokens(last, keys, temp[None], topk[None])[0]
+        return tok, finite, caches
 
     return jax.jit(_prefill, donate_argnums=(3,))
 
@@ -133,11 +185,22 @@ class ServeEngine:
     pack follow the kernel-dispatch contract (launch/serve.py): masks=None
     expects pre-masked params; with masks, params are raw and every matmul
     dispatches through cfg.sparse.kernel, pack carrying the tight-grid
-    topology.
+    topology (validated at construction — core/pack.py::validate_pack).
+
+    Fault-tolerance knobs (docs/serving.md#failure-model):
+      queue_limit    max queued (un-admitted) requests; submit on a full
+                     queue sheds (returns False) instead of growing
+      deadline       default admission TTL (seconds from arrival) applied
+                     to requests that did not set their own ``ttl``
+      max_retries    default quarantine-retry budget for requests that did
+                     not set their own ``max_retries``
+      faults         optional serving/faults.py::FaultInjector — chaos hooks
     """
 
     def __init__(self, cfg, params, *, capacity: int, max_len: int,
-                 masks=None, pack=None):
+                 masks=None, pack=None, queue_limit: Optional[int] = None,
+                 deadline: Optional[float] = None, max_retries: int = 0,
+                 faults: Optional[FaultInjector] = None):
         if not cfg.causal:
             raise ValueError("ServeEngine needs a causal config (no decode "
                              "path for encoder-only models)")
@@ -147,8 +210,14 @@ class ServeEngine:
         self.params = params
         self.masks = masks
         self.pack = pack
+        # integrity guard: a corrupted pack would make every kernel of every
+        # request execute the wrong topology — fail at construction, loudly
+        validate_pack(pack, where="ServeEngine.pack")
         self.capacity = capacity
         self.max_len = max_len
+        self.deadline = deadline
+        self.max_retries = max_retries
+        self.faults = faults
         self._n_patches = cfg.n_patches if cfg.frontend == "patch" else 0
 
         # prompt-length bucketing is exact only where end-padding cannot
@@ -159,7 +228,7 @@ class ServeEngine:
         # those families trace per exact length (see lm_prefill)
         self._pad_prompts = cfg.block_type == "transformer" and not cfg.n_experts
 
-        self.queue = RequestQueue()
+        self.queue = RequestQueue(max_depth=queue_limit)
         self.caches = init_caches(cfg, capacity, max_len)
         # per-slot host state (the scheduler's view of the pool); the decode
         # step consumes device-resident copies, re-uploaded only when an
@@ -174,13 +243,18 @@ class ServeEngine:
         self.topk = np.zeros(capacity, np.int32)
         self.slot_req: list[Optional[Request]] = [None] * capacity
         self._device_state: Optional[tuple] = None  # None => mirrors dirty
-        # counters (benchmarks/serve_bench.py reads these)
+        # counters (benchmarks/serve_bench.py + chaos_bench.py read these)
         self.n_steps = 0
         self.n_greedy_steps = 0  # steps that took the argmax-only fast path
         self.n_prefills = 0
+        self.n_quarantined = 0   # non-finite detections (decode + prefill)
+        self.n_retries_total = 0
         self.slot_history: list[tuple[int, int]] = []  # (rid, slot) admissions
+        self.quarantine_log: list[tuple[int, int, int]] = []  # (step, rid, slot)
         # both sampler variants bound once: the per-step dispatch is a dict
-        # lookup, not a ModelConfig re-hash through the lru_cache
+        # lookup, not a ModelConfig re-hash through the lru_cache (the chaos
+        # ``faulty`` variants are looked up lazily — fault-free engines never
+        # compile them)
         self._decode = {g: _decode_fn(cfg, g) for g in (False, True)}
 
     # -- admission ---------------------------------------------------------
@@ -194,11 +268,16 @@ class ServeEngine:
             return prompt_len
         return min(_bucket_len(prompt_len), self.max_len - self._n_patches)
 
-    def _prefill_for(self, prompt_len: int, greedy: bool):
+    def _prefill_for(self, prompt_len: int, greedy: bool, faulty: bool = False):
         return _prefill_fn(self.cfg, self.max_len, self._padded_len(prompt_len),
-                           self._n_patches, greedy)
+                           self._n_patches, greedy, faulty)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request.  Returns True if accepted; False if the queue
+        is at its depth limit (the request is SHED — structured
+        backpressure, not an exception).  Invalid requests (oversize,
+        missing patches, max_new_tokens < 1) still raise: those are caller
+        bugs, not load."""
         need = req.prompt_len + self._n_patches + req.max_new_tokens
         if need > self.max_len:
             raise ValueError(
@@ -210,7 +289,9 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: frontend='patch' configs need patches"
             )
-        self.queue.submit(req)
+        if req.ttl is None:
+            req.ttl = self.deadline  # engine-wide default admission deadline
+        return self.queue.submit(req)
 
     def _admit(self, now: float, finished: list, clock=None) -> None:
         while True:
@@ -228,17 +309,31 @@ class ServeEngine:
             if req.patches is not None:
                 batch["patches"] = jnp.asarray(req.patches)[None]
             base = request_key(req.seed)
-            tok, self.caches = self._prefill_for(
-                req.prompt_len, req.temperature <= 0.0
-            )(
+            fval = self.faults.prefill_fault(req.rid) if self.faults else None
+            if self.faults and clock is not None:
+                delay = self.faults.prefill_delay(req.rid)
+                if delay > 0:
+                    time.sleep(delay)  # wall-clock chaos only (run())
+            args = (
                 self.params, self.masks, self.pack, self.caches, batch,
                 jnp.int32(s), jnp.int32(req.prompt_len + self._n_patches),
                 jnp.asarray(base), jnp.float32(req.temperature),
                 jnp.int32(req.top_k),
             )
+            if fval is not None:
+                args = args + (jnp.bool_(True), jnp.float32(fval))
+            tok, fin, self.caches = self._prefill_for(
+                req.prompt_len, req.temperature <= 0.0, fval is not None
+            )(*args)
             self.n_prefills += 1
             tok = int(tok)  # blocks on the prefill -> post-compute timestamps
             t = clock() if clock is not None else now
+            if not bool(fin):
+                # prefill produced non-finite logits: the slot was written
+                # but never activated — quarantine before the request exists
+                # anywhere but the queue's books
+                self._quarantine(req, s, t, finished, where="prefill")
+                continue
             req.generated.append(tok)
             req.slot = s
             req.status = Status.DECODE
@@ -269,11 +364,44 @@ class ServeEngine:
         self.slot_req[s] = None
         self._device_state = None
 
+    def _quarantine(self, req: Request, slot: int, now: float,
+                    finished: list, *, where: str) -> None:
+        """Non-finite logits on ``req``'s slot: discard the garbage token,
+        scrub and recycle the slot (the row is fully overwritten by the next
+        admission's lm_prefill_into, so nothing stale survives), then either
+        re-queue with exponential backoff or land the request FAILED.  Every
+        OTHER slot is untouched — quarantine is per-request by construction.
+        """
+        self.n_quarantined += 1
+        self.quarantine_log.append((self.n_steps, req.rid, slot))
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self._device_state = None
+        limit = self.max_retries if req.max_retries is None else req.max_retries
+        if req.n_retries < limit:
+            req.n_retries += 1
+            self.n_retries_total += 1
+            req.generated = []  # the retry restarts the stream from scratch
+            req.slot = None
+            req.t_admitted = None
+            req.retry_at = now + req.retry_backoff * (2 ** (req.n_retries - 1))
+            self.queue.requeue(req)
+        else:
+            self.queue.fail(
+                req, now,
+                f"non-finite logits during {where} "
+                f"(after {req.n_retries} retries)",
+            )
+            finished.append(req)
+
     # -- stepping ----------------------------------------------------------
 
     def step(self, now: float = 0.0, clock=None) -> list[Request]:
-        """Admit what fits, then decode one token on every active slot.
-        Returns the requests that finished during this step.
+        """Shed expired queue entries, admit what fits, then decode one
+        token on every active slot.  Returns the requests that reached a
+        TERMINAL status (DONE, SHED or FAILED) during this step.  Never
+        raises on in-flight faults: non-finite rows quarantine, expired
+        requests shed — failure is data, not control flow.
 
         ``now`` gates arrivals (virtual-clock friendly for tests); ``clock``,
         when given (run() passes the wall clock), re-samples time AFTER the
@@ -282,6 +410,7 @@ class ServeEngine:
         to a full step.
         """
         finished: list[Request] = []
+        finished.extend(self.queue.shed_expired(now))
         self._admit(now, finished, clock)
         if not self.active.any():
             return finished
@@ -295,17 +424,28 @@ class ServeEngine:
         tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d = self._device_state
         # all-greedy steps skip the sampler entirely (argmax, no (B, V) sort)
         greedy = not bool(np.any(self.temp[self.active] > 0.0))
-        nxt, self.caches, tok_d, pos_d, gen_d = self._decode[greedy](
+        fault = (
+            self.faults.decode_fault(self.n_steps, self.capacity)
+            if self.faults else None
+        )
+        if fault is None:
+            fn, extra = self._decode[greedy], ()
+        else:
+            fn = _decode_fn(self.cfg, greedy, True)
+            extra = (jnp.asarray(fault[0]), jnp.asarray(fault[1]))
+        nxt, finite, self.caches, tok_d, pos_d, gen_d = fn(
             self.params, self.masks, self.pack, self.caches,
-            tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d,
+            tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d, *extra,
         )
         self._device_state = (tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d)
-        self.n_steps += 1
-        self.n_greedy_steps += greedy
         nxt = np.asarray(nxt)  # blocks on the decode -> post-compute timestamp
+        finite = np.asarray(finite)
         t = clock() if clock is not None else now
         for s in np.nonzero(self.active)[0]:
             req = self.slot_req[s]
+            if not finite[s]:
+                self._quarantine(req, int(s), t, finished, where="decode")
+                continue
             tok = int(nxt[s])
             req.generated.append(tok)
             self.pos[s] += 1
@@ -314,34 +454,62 @@ class ServeEngine:
             if self._is_finished(req, tok):
                 self._release(req, t)
                 finished.append(req)
+        # counted AFTER the host loop so quarantine_log records the SAME
+        # step index the FaultInjector keys on (the pre-increment counter
+        # the fault lookup above used)
+        self.n_steps += 1
+        self.n_greedy_steps += greedy
         return finished
 
     def run(self) -> dict:
         """Drive until the queue drains; wall-clock arrivals (request
         ``arrival`` values are offsets from this call).  Returns summary
-        stats; per-request timings live on the Request objects
-        (queue.done)."""
+        stats — ``wall_s`` is stamped even when every request was shed
+        before admission and the loop never ran; per-request timings live
+        on the Request objects (queue.done)."""
         t0 = time.monotonic()
         clock = lambda: time.monotonic() - t0
         while len(self.queue) or self.active.any():
             self.step(clock(), clock)
             if not self.active.any() and len(self.queue):
-                wait = self.queue.next_arrival() - clock()
-                if wait > 0:
-                    time.sleep(wait)
+                nxt = self.queue.next_arrival()
+                if nxt is not None:
+                    wait = nxt - clock()
+                    if wait > 0:
+                        time.sleep(wait)
         return self.stats(clock())
 
     def stats(self, wall_s: float) -> dict:
-        done = self.queue.done
+        """Aggregate summary.  Safe on EMPTY populations: zero completed /
+        all-shed runs report 0.0 percentiles instead of indexing empty
+        arrays, and ``wall_s`` is whatever the caller measured (run()
+        stamps it unconditionally)."""
+        by = lambda st: [r for r in self.queue.done if r.status is st]
+        done = by(Status.DONE)
+        shed = by(Status.SHED)
+        failed = by(Status.FAILED)
         toks = sum(len(r.generated) for r in done)
-        lat = np.asarray([r.latency for r in done], np.float64)
+        lat = np.asarray(
+            [r.latency for r in done if r.latency is not None], np.float64
+        )
+        waits = np.asarray(
+            [r.t_admitted - r.arrival for r in self.queue.done
+             if r.t_admitted is not None], np.float64
+        )
+        pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
         return {
             "requests": len(done),
+            "shed": len(shed),
+            "failed": len(failed),
+            "quarantined": self.n_quarantined,
+            "retries": self.n_retries_total,
             "tokens": toks,
             "wall_s": wall_s,
             "tok_per_s": toks / max(wall_s, 1e-9),
             "decode_steps": self.n_steps,
             "prefills": self.n_prefills,
-            "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-            "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "queue_wait_p50_s": pct(waits, 50),
+            "queue_wait_p95_s": pct(waits, 95),
         }

@@ -26,6 +26,18 @@ and docs/serving.md).
 temperature <= 0 selects greedy (argmax) — exactly the lockstep baseline's
 ``jnp.argmax(logits, -1)``, which is what makes the engine-vs-lockstep
 token-identity tests exact.  top_k <= 0 keeps the full distribution.
+
+Non-finite logits contract: the sampler NEVER sees a row the engine will
+keep — the in-jit finite flag (models/model.py::logits_all_finite) is
+computed on the same logits the sampler consumes, and the host discards the
+token of any non-finite row when it quarantines that slot
+(serving/engine.py::ServeEngine, docs/serving.md#failure-model).  A NaN row
+still produces *some* token here (argmax/categorical on NaN is garbage but
+defined — no exception escapes the jit), which is exactly why detection is a
+data flag rather than a try/except.  Because the per-step key depends only
+on (seed, n_generated) and retries restart the stream at n_generated=0, a
+quarantined request that re-queues re-samples IDENTICAL tokens on its retry
+— bit-equal to a fault-free run.
 """
 from __future__ import annotations
 

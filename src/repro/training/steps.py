@@ -46,6 +46,7 @@ from ..core import (
     rigl_update,
     snip_masks,
     tree_paths,
+    validate_pack,
 )
 from ..core.pruning import PruningSchedule, prune_step
 from ..models import init_lm, lm_loss
@@ -149,6 +150,10 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
         "masks": masks,
         "opt": init_opt(opt_cfg, params),
         "rng": k3,
+        # lifetime count of steps whose loss/grads were non-finite and whose
+        # optimizer update was therefore SKIPPED (params bit-unchanged) —
+        # see make_train_step; checkpointed so restarts keep the tally
+        "nonfinite_steps": jnp.zeros((), jnp.int32),
     }
     if sp.kernel == "block_sparse" and sp.block_shape is not None:
         # host-packed tight-grid topology, carried in state + checkpointed.
@@ -177,13 +182,15 @@ def refresh_pack(state, cfg):
     """
     if "pack" not in state:
         return state
-    return dict(
-        state,
-        pack=refresh_pack_state(
-            state["masks"], cfg.sparse.block_shape, prev=state["pack"],
-            slack=getattr(cfg.sparse, "pack_width_slack", 0.0),
-        ),
+    pack = refresh_pack_state(
+        state["masks"], cfg.sparse.block_shape, prev=state["pack"],
+        slack=getattr(cfg.sparse, "pack_width_slack", 0.0),
     )
+    # integrity guard (core/pack.py::validate_pack): a refresh that produced
+    # inconsistent CSC/CSR books would make every subsequent kernel launch
+    # execute the wrong topology — cheap host-side check, loud failure
+    validate_pack(pack, where="refresh_pack")
+    return dict(state, pack=pack)
 
 
 def make_train_step(
@@ -333,29 +340,52 @@ def make_train_step(
                     lambda g, w: g + wd * w.astype(g.dtype), g_sparse, src
                 )
         lr = lr_sched(state["step"])
-        opt_nowd = dataclasses.replace(opt_cfg, weight_decay=0.0)
-        new_params, new_opt = apply_opt(
-            opt_nowd, g_sparse, state["opt"], state["params"], lr
-        )
-        new_state = dict(
-            state,
-            step=state["step"] + 1,
-            params=new_params,
-            opt=new_opt,
-        )
-        if "dense_mom" in state:  # SNFS tracks dense-gradient momentum
-            new_state["dense_mom"] = jax.tree_util.tree_map(
-                lambda m, g: snfs_momentum * m + g.astype(m.dtype),
-                state["dense_mom"],
-                g_dense,
-            )
         gnorm = jnp.sqrt(
             sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree_util.tree_leaves(g_sparse)
             )
         )
-        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        # non-finite guard: a NaN/Inf loss or gradient must not touch the
+        # params — one poisoned batch would otherwise destroy the run (and
+        # under kernel dispatch, silently corrupt the sparse topology's
+        # weights).  gnorm is finite iff every grad leaf is, so one scalar
+        # decides; the update is SELECTED rather than branched so the step
+        # stays a single XLA program (the skip costs one where() per leaf).
+        ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        opt_nowd = dataclasses.replace(opt_cfg, weight_decay=0.0)
+        new_params, new_opt = apply_opt(
+            opt_nowd, g_sparse, state["opt"], state["params"], lr
+        )
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(ok, n, o), new, old
+        )
+        nonfinite_steps = (
+            state.get("nonfinite_steps", jnp.zeros((), jnp.int32))
+            + (~ok).astype(jnp.int32)
+        )
+        new_state = dict(
+            state,
+            step=state["step"] + 1,  # the step index advances regardless
+            params=keep(new_params, state["params"]),
+            opt=keep(new_opt, state["opt"]),
+            nonfinite_steps=nonfinite_steps,
+        )
+        if "dense_mom" in state:  # SNFS tracks dense-gradient momentum
+            new_state["dense_mom"] = keep(
+                jax.tree_util.tree_map(
+                    lambda m, g: snfs_momentum * m + g.astype(m.dtype),
+                    state["dense_mom"],
+                    g_dense,
+                ),
+                state["dense_mom"],
+            )
+        metrics = {
+            "loss": loss,
+            "lr": lr,
+            "grad_norm": gnorm,
+            "nonfinite_steps": nonfinite_steps,
+        }
         if dispatch and "pack" in state:
             # staleness canary: #blocks where the packed topology disagrees
             # with the masks.  Nonzero means a rigl_step ran without

@@ -1,0 +1,390 @@
+"""Chaos tests: the serving failure model (docs/serving.md#failure-model).
+
+The invariant under attack in every test: a fault touches EXACTLY the work
+it was injected into.  A NaN slot quarantines one request (every other
+stream bit-identical to a fault-free run); an expired request sheds in-queue
+(a status, not an exception); a corrupted pack is rejected before it can
+serve; a torn checkpoint dir is skipped, never restored; a non-finite loss
+skips one optimizer update, bit-preserving the params.
+"""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import SparseConfig, get_config
+from repro.core import PackIntegrityError, validate_pack
+from repro.data import batch_for
+from repro.models import init_lm, lm_loss, logits_all_finite
+from repro.optim import LRSchedule, OptConfig
+from repro.serving import (
+    FaultInjector,
+    Request,
+    RequestQueue,
+    ServeEngine,
+    Status,
+    burst_storm,
+    truncate_pack,
+)
+from repro.training import init_train_state, make_train_step
+
+pytestmark = pytest.mark.chaos
+
+BLOCK = 16
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True), dtype="float32"
+    )
+
+
+def _params(cfg, seed=0):
+    params, _, _ = init_lm(jax.random.PRNGKey(seed), cfg)
+    return params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("capacity", 3)
+    kw.setdefault("max_len", 32)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _drain(engine, dt=1.0, max_steps=2000):
+    """Virtual-clock drive until idle; returns final virtual time."""
+    now = 0.0
+    for _ in range(max_steps):
+        if not (len(engine.queue) or engine.active.any()):
+            return now
+        engine.step(now)
+        now += dt
+    raise AssertionError("engine failed to drain")
+
+
+def _streams(engine):
+    return {r.rid: list(r.generated) for r in engine.queue.done
+            if r.status is Status.DONE}
+
+
+def _reqs(cfg, n, gen=6, **kw):
+    return burst_storm(cfg, n, prompt_len=8, max_new_tokens=gen, **kw)
+
+
+# ---------------------------------------------------------------------------
+# units: finite flag, injector determinism, queue backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_logits_all_finite_rowwise():
+    x = jnp.ones((4, 3, 7))
+    x = x.at[1, 2, 0].set(jnp.nan).at[3, 0, 4].set(jnp.inf)
+    np.testing.assert_array_equal(
+        np.asarray(logits_all_finite(x)), [True, False, True, False]
+    )
+
+
+def test_injector_and_storm_deterministic():
+    a = FaultInjector(seed=5).poison_random(4, max_step=50, capacity=4)
+    b = FaultInjector(seed=5).poison_random(4, max_step=50, capacity=4)
+    assert a == b
+    cfg = _cfg()
+    s1, s2 = _reqs(cfg, 3, seed=9), _reqs(cfg, 3, seed=9)
+    for r1, r2 in zip(s1, s2):
+        np.testing.assert_array_equal(r1.tokens, r2.tokens)
+        assert r1.arrival == r2.arrival == 0.0
+
+
+def test_queue_backpressure_sheds_at_submit():
+    q = RequestQueue(max_depth=2)
+    reqs = [Request(rid=i, tokens=np.zeros(4, np.int32), max_new_tokens=2)
+            for i in range(3)]
+    assert q.submit(reqs[0]) and q.submit(reqs[1])
+    assert not q.submit(reqs[2])
+    assert reqs[2].status is Status.SHED
+    assert "queue full" in reqs[2].error
+    assert reqs[2] in q.done and len(q) == 2
+    # retries are depth-limit exempt: a quarantined request always re-enters
+    q.requeue(Request(rid=9, tokens=np.zeros(4, np.int32), max_new_tokens=2))
+    assert len(q) == 3
+
+
+def test_engine_queue_limit_and_deadline_default():
+    cfg = _cfg()
+    eng = _engine(cfg, _params(cfg), queue_limit=1, deadline=7.5)
+    r0, r1 = _reqs(cfg, 2)
+    assert eng.submit(r0) is True
+    assert eng.submit(r1) is False and r1.status is Status.SHED
+    assert r0.ttl == 7.5  # engine default stamped at submit
+    explicit = _reqs(cfg, 1, rid0=5)[0]
+    explicit.ttl = 2.0
+    eng2 = _engine(cfg, _params(cfg), deadline=7.5)
+    eng2.submit(explicit)
+    assert explicit.ttl == 2.0  # per-request ttl wins over the default
+
+
+# ---------------------------------------------------------------------------
+# quarantine: isolation, retry recovery, retry exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_nan_quarantine_isolates_one_request():
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = _streams(_drain_engine(cfg, params, _reqs(cfg, 6)))
+    # capacity 3, burst of 6: rids 0-2 admit into slots 0-2 at step 0, so
+    # (step 2, slot 0) poisons rid 0 mid-decode, deterministically
+    inj = FaultInjector().poison_logits(step=2, slot=0)
+    eng = _drain_engine(cfg, params, _reqs(cfg, 6), faults=inj)
+    failed = [r for r in eng.queue.done if r.status is Status.FAILED]
+    assert [r.rid for r in failed] == [0]
+    assert "non-finite" in failed[0].error
+    assert eng.n_quarantined == 1
+    assert eng.quarantine_log == [(2, 0, 0)]
+    got = _streams(eng)
+    assert sorted(got) == [1, 2, 3, 4, 5]
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} stream perturbed by quarantine"
+
+
+def test_retry_recovers_exact_stream_with_backoff():
+    cfg = _cfg()
+    params = _params(cfg)
+    ref = _streams(_drain_engine(cfg, params, _reqs(cfg, 6)))
+    inj = FaultInjector().poison_logits(step=2, slot=0)
+    reqs = _reqs(cfg, 6)
+    reqs[0].retry_backoff = 3.0  # dt=1.0 steps => the retry must WAIT
+    eng = _drain_engine(cfg, params, reqs, faults=inj, max_retries=2)
+    got = _streams(eng)
+    assert sorted(got) == [0, 1, 2, 3, 4, 5]  # everyone completed
+    assert eng.n_quarantined == 1 and eng.n_retries_total == 1
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} retry stream != fault-free run"
+    r0 = next(r for r in eng.queue.done if r.rid == 0)
+    assert r0.n_retries == 1
+    assert r0.retry_at > 0 and r0.t_admitted >= r0.retry_at  # backoff gated
+
+
+def test_retry_exhaustion_lands_failed():
+    cfg = _cfg()
+    params = _params(cfg)
+    inj = FaultInjector().poison_prefill(rid=1)  # every attempt corrupted
+    eng = _drain_engine(cfg, params, _reqs(cfg, 4), faults=inj, max_retries=2)
+    r1 = next(r for r in eng.queue.done if r.rid == 1)
+    assert r1.status is Status.FAILED
+    assert r1.n_retries == 2 and "prefill" in r1.error
+    assert eng.n_quarantined == 3  # initial attempt + 2 retries
+    assert sorted(_streams(eng)) == [0, 2, 3]
+
+
+def _drain_engine(cfg, params, reqs, **kw):
+    eng = _engine(cfg, params, **kw)
+    for r in reqs:
+        assert eng.submit(r)
+    _drain(eng)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# deadline shedding under a burst storm
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_shed_under_storm():
+    cfg = _cfg()
+    params = _params(cfg)
+    # 9 requests, capacity 3, each needs ~6 virtual seconds of decode: a
+    # ttl of 8 admits the first two waves and must shed the third
+    eng = _engine(cfg, params, deadline=8.0)
+    for r in _reqs(cfg, 9):
+        assert eng.submit(r)
+    _drain(eng)
+    done = [r for r in eng.queue.done if r.status is Status.DONE]
+    shed = [r for r in eng.queue.done if r.status is Status.SHED]
+    assert len(done) + len(shed) == 9 and shed and done
+    for r in shed:
+        assert r.t_done is not None and "deadline" in r.error
+        assert r.t_done > r.expires_at - 1e-9  # never shed early
+    for r in done:
+        assert r.t_admitted - r.arrival <= 8.0  # never admitted late
+    s = eng.stats(1.0)
+    assert s["shed"] == len(shed) and s["requests"] == len(done)
+
+
+# ---------------------------------------------------------------------------
+# pack integrity guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bs_pack():
+    cfg = dataclasses.replace(
+        _cfg(),
+        sparse=SparseConfig(
+            sparsity=0.8, method="rigl", kernel="block_sparse",
+            block_shape=(BLOCK, BLOCK), kernel_block=(128, BLOCK, BLOCK),
+        ),
+    )
+    st, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+    return cfg, st
+
+
+def test_validate_pack_accepts_real_pack(bs_pack):
+    cfg, st = bs_pack
+    assert validate_pack(st["pack"]) > 0
+    assert validate_pack(None) == 0  # dense engines carry no pack
+
+
+@pytest.mark.parametrize("mode", ["truncate", "oob", "nnz"])
+def test_validate_pack_rejects_corruption(bs_pack, mode):
+    cfg, st = bs_pack
+    bad = truncate_pack(st["pack"], mode=mode)
+    with pytest.raises(PackIntegrityError):
+        validate_pack(bad)
+
+
+def test_engine_construction_rejects_corrupt_pack(bs_pack):
+    cfg, st = bs_pack
+    bad = truncate_pack(st["pack"], mode="nnz")
+    with pytest.raises(PackIntegrityError, match="ServeEngine.pack"):
+        ServeEngine(cfg, st["params"], capacity=2, max_len=32,
+                    masks=st["masks"], pack=bad)
+
+
+# ---------------------------------------------------------------------------
+# crash-atomic checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_state():
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True),
+        sparse=SparseConfig(sparsity=0.6),
+    )
+    st, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, OptConfig())
+    return cfg, st
+
+
+def test_torn_checkpoint_skipped_on_restore(tmp_path):
+    cfg, st = _ckpt_state()
+    save(st, tmp_path, 1)
+    save(st, tmp_path, 2)
+    # tear the newest: truncate the array blob (crash mid-copy) — the
+    # manifest's arrays_bytes no longer matches, so the dir is invalid
+    blob = tmp_path / "step-0000000002" / "arrays.npz"
+    blob.write_bytes(blob.read_bytes()[: blob.stat().st_size // 2])
+    assert latest_step(tmp_path) == 1
+    restored, step = restore(st, tmp_path)
+    assert step == 1
+    np.testing.assert_array_equal(
+        np.asarray(restored["step"]), np.asarray(st["step"])
+    )
+
+
+def test_garbage_manifest_skipped(tmp_path):
+    cfg, st = _ckpt_state()
+    save(st, tmp_path, 3)
+    save(st, tmp_path, 4)
+    (tmp_path / "step-0000000004" / "manifest.json").write_text("{not json")
+    assert latest_step(tmp_path) == 3
+    _, step = restore(st, tmp_path)
+    assert step == 3
+
+
+def test_stray_tmp_dirs_collected(tmp_path):
+    cfg, st = _ckpt_state()
+    stray = tmp_path / "tmp-999"
+    stray.mkdir(parents=True)
+    (stray / "arrays.npz").write_bytes(b"partial")
+    save(st, tmp_path, 5)
+    assert not stray.exists()  # GC swept the crash-orphaned staging dir
+    assert latest_step(tmp_path) == 5
+
+
+def test_manifest_records_blob_size(tmp_path):
+    cfg, st = _ckpt_state()
+    save(st, tmp_path, 6)
+    d = tmp_path / "step-0000000006"
+    meta = json.loads((d / "manifest.json").read_text())
+    assert meta["arrays_bytes"] == (d / "arrays.npz").stat().st_size
+
+
+def test_pre_guard_checkpoint_restores_counter_fallback(tmp_path):
+    cfg, st = _ckpt_state()
+    old = {k: v for k, v in st.items() if k != "nonfinite_steps"}
+    save(old, tmp_path, 7)
+    restored, _ = restore(st, tmp_path)  # template HAS the counter
+    assert int(restored["nonfinite_steps"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# non-finite train-step guard
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_skips_nonfinite_update():
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True),
+        dtype="float32", sparse=SparseConfig(sparsity=0.5),
+    )
+    opt = OptConfig(kind="sgd", momentum=0.9, weight_decay=0.0)
+    lr = LRSchedule(kind="constant", base_lr=1e-2, warmup_steps=0)
+    # poison enters through the BATCH so one compiled step covers both cases
+    loss_fn = lambda p, b: lm_loss(p, cfg, b) + b["poison"]
+    step_fn = jax.jit(make_train_step(cfg, opt, lr, loss_fn=loss_fn))
+    st, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    batch = batch_for(cfg, 0, 2, 16, learnable=True)
+
+    clean = dict(batch, poison=jnp.float32(0.0))
+    st1, m1 = step_fn(st, clean)
+    assert int(m1["nonfinite_steps"]) == 0
+    assert math.isfinite(float(m1["loss"]))
+
+    poisoned = dict(batch, poison=jnp.float32(np.nan))
+    st2, m2 = step_fn(st1, poisoned)
+    assert not math.isfinite(float(m2["loss"]))
+    assert int(m2["nonfinite_steps"]) == 1
+    assert int(st2["step"]) == int(st1["step"]) + 1  # step still advances
+    for a, b in zip(jax.tree_util.tree_leaves(st1["params"]),
+                    jax.tree_util.tree_leaves(st2["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(st1["opt"]),
+                    jax.tree_util.tree_leaves(st2["opt"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    st3, m3 = step_fn(st2, clean)  # recovery: the very next clean batch trains
+    assert int(m3["nonfinite_steps"]) == 1
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(st2["params"]),
+                        jax.tree_util.tree_leaves(st3["params"]))
+    )
+    assert changed
+
+
+# ---------------------------------------------------------------------------
+# stats / run edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_stats_safe_on_zero_completed():
+    cfg = _cfg()
+    eng = _engine(cfg, _params(cfg))
+    s = eng.stats(0.0)  # nothing ever submitted: must not index empty arrays
+    assert s["requests"] == s["tokens"] == s["shed"] == s["failed"] == 0
+    assert s["latency_p95_s"] == 0.0 and s["queue_wait_p95_s"] == 0.0
+
+
+def test_run_stamps_wall_s_when_everything_sheds():
+    cfg = _cfg()
+    eng = _engine(cfg, _params(cfg))
+    for r in _reqs(cfg, 2, ttl=0.0):  # expired the instant the clock moves
+        assert eng.submit(r)
+    stats = eng.run()
+    assert stats["requests"] == 0 and stats["shed"] == 2
+    assert stats["wall_s"] >= 0.0 and stats["tok_per_s"] == 0.0
+    assert all(r.status is Status.SHED for r in eng.queue.done)
