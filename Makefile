@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-kernels test-serve test-chaos docs-check bench-kernels bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke
+.PHONY: verify test test-kernels test-serve test-chaos test-paged docs-check bench-kernels bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke
 
 verify: test docs-check bench-serve-smoke bench-chaos-smoke
 
@@ -22,6 +22,13 @@ test-kernels:
 # decode path (models/{attention,model}.py, launch/serve.py)
 test-serve:
 	$(PY) -m pytest -x -q -m serve
+
+# paged-KV tier only: BlockPool allocator properties, paged-vs-contiguous
+# engine equivalence, COW shared-prefix admission, pool leak accounting —
+# re-run after touching serving/{block_pool,engine}.py or the paged cache
+# helpers (models/attention.py pools, kernels/flash_attention.py paged path)
+test-paged:
+	$(PY) -m pytest -x -q -m paged
 
 docs-check:
 	$(PY) scripts/check_doc_links.py

@@ -45,6 +45,7 @@ __all__ = [
     "rasterize_block_mask",
     "build_attn_schedule",
     "sched_for",
+    "paged_prefix_schedule",
     "attn_sched_stats",
     "is_attn_sched",
 ]
@@ -208,6 +209,36 @@ def sched_for(
     return build_attn_schedule(
         sq, sk, bq, bk, causal=causal, window=window, q_offset=q_offset
     )
+
+
+@functools.lru_cache(maxsize=256)
+def paged_prefix_schedule(sq: int, n_pages: int, bq: int, page_size: int):
+    """Grid layout for the paged-prefix flash phase (shared-prefix prefill).
+
+    The paged kernel (kernels/flash_attention.py::flash_attention_paged)
+    walks a slot's block table instead of a contiguous K/V row: grid step s
+    of q row qb visits logical page ``kv_idx[qb, s]``, and the BlockSpec
+    index map sends it through the scalar-prefetched table to a PHYSICAL
+    pool page — the block table is literally one more prefetched index map
+    composed onto the schedule walk.  Unlike the static mask families of
+    ``build_attn_schedule``, page liveness here is DYNAMIC (the valid
+    prefix length ``ctx`` is a traced per-row scalar), so the host-side
+    schedule cannot clip the walk: ``kv_idx`` is the identity walk over all
+    ``n_pages`` table entries and the kernel clips in-flight against
+    ``ceil(ctx / page_size)`` via @pl.when — the paged analog of kv_cnt.
+    """
+    n_q = _cdiv(sq, bq)
+    kv_idx = np.broadcast_to(
+        np.arange(n_pages, dtype=np.int32)[None, :], (n_q, n_pages)
+    ).copy()
+    return {
+        "sq": sq,
+        "n_pages": n_pages,
+        "bq": bq,
+        "page_size": page_size,
+        "width": n_pages,
+        "kv_idx": kv_idx,
+    }
 
 
 def attn_sched_stats(sched) -> dict[str, Any]:

@@ -38,10 +38,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.attn_sched import sched_for
+from ..core.attn_sched import paged_prefix_schedule, sched_for
 from .block_sparse_matmul import _clamp
 
-__all__ = ["flash_attention", "effective_blocks"]
+__all__ = ["flash_attention", "flash_attention_paged", "effective_blocks"]
 
 NEG_INF = -1e30
 EPS = 1e-30
@@ -267,6 +267,162 @@ def _fwd_call(q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk,
     )(kv_idx, kv_cnt, q, k, v)
 
 
+def _paged_kernel(
+    kv_idx_ref, table_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+    m_ref, l_ref, acc_ref, *, n_pages, bq, bs, scale,
+):
+    """Prefix phase of suffix-only prefill over a PAGED KV cache.
+
+    Grid (B, H, n_q, n_pages): step s of q row qb visits logical prefix
+    page kv_idx[qb, s]; the BlockSpec index map routes it through the
+    scalar-prefetched block table to a physical pool page (GQA folded:
+    kv head = h // G in the map, no K/V repeat).  Liveness is dynamic —
+    only ceil(ctx[b] / bs) leading pages hold valid prefix keys — so the
+    walk clips in-flight via @pl.when, and within the boundary page
+    kpos >= ctx masks to NEG_INF.  Every prefix key precedes every suffix
+    query, so there is no causal masking here; rows with ctx == 0 emit
+    zeros with lse = NEG_INF (NOT the fwd kernel's +1e30 sentinel: the
+    logsumexp MERGE with the self phase needs exp(lse - m) to underflow
+    to exactly 0 for the empty phase).
+    """
+    b = pl.program_id(0)
+    s_id = pl.program_id(3)
+
+    @pl.when(s_id == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(2)
+    j = kv_idx_ref[qb, s_id]  # logical page index (kpos = j * bs + lane)
+    ctx = ctx_ref[b]
+    n_live = (ctx + bs - 1) // bs
+
+    @pl.when(s_id < n_live)
+    def _step():
+        q = q_ref[0, 0]  # (bq, d)
+        k = k_ref[0, 0]  # (bs, d)
+        v = v_ref[0, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+        mask = kpos < ctx
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(s_id == n_pages - 1)
+    def _finish():
+        l_raw = l_ref[...]
+        l = jnp.maximum(l_raw, EPS)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse = jnp.where(l_raw > 0.0, m_ref[...] + jnp.log(l), NEG_INF)
+        lse_ref[0, 0, :] = lse[:, 0]
+
+
+def _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret):
+    """q: (B, H, Sqp, d); pk/pv: pool TRANSPOSED to (N, KV, bs, d) so each
+    grid step DMAs one (bs, d) page tile; table: (B, T); ctx: (B,)."""
+    B, H, Sqp, d = q.shape
+    N, KV, bs, _ = pk.shape
+    G = H // KV
+    n_pages = kv_idx.shape[1]
+    grid = (B, H, Sqp // bq, n_pages)
+
+    def q_map(b, h, qb, s, *_):
+        return (b, h, qb, 0)
+
+    def kv_map(b, h, qb, s, idx_ref, tab_ref, ctx_ref):
+        # padded steps (s >= live count) re-see the last live page: index
+        # unchanged => Pallas skips the re-DMA (same idiom as _clamp); the
+        # min() guards the n_blocks SENTINEL on unowned table entries
+        n_live = (ctx_ref[b] + bs - 1) // bs
+        j = idx_ref[qb, jnp.maximum(jnp.minimum(s, n_live - 1), 0)]
+        return (jnp.minimum(tab_ref[b, j], N - 1), h // G, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bs, d), kv_map),
+            pl.BlockSpec((1, 1, bs, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qb, s, *_: (b, h, qb)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, n_pages=n_pages, bq=bq, bs=bs, scale=scale
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sqp, d), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sqp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_idx, table, ctx, q, pk, pv)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "scale", "interpret"))
+def _paged_jit(q, pk, pv, kv_idx, table, ctx, *, bq, scale, interpret):
+    return _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret)
+
+
+def flash_attention_paged(
+    q, pool_k, pool_v, table, ctx, *, bq: int = 128, interpret=None
+):
+    """Suffix queries attending a paged KV prefix through a block table.
+
+    q: (B, H, Sq, hd) roped suffix queries; pool_k/pool_v: (N, bs, KV, hd)
+    paged caches (models/attention.py::init_kv_pool); table: (B, T) int32
+    physical page ids (the sentinel id N marks unowned entries — never
+    live, clamped in the index map); ctx: (B,) int32 valid prefix lengths.
+    Returns (o: (B, H, Sq, hd), lse: (B, H, Sq) f32) — the PREFIX phase of
+    shared-prefix suffix prefill; models/attention.py merges it with the
+    causal self phase by logsumexp.  Rows with ctx == 0 return zeros with
+    lse = -1e30 (weight exactly 0 in the merge).  Forward-only: serving
+    prefill never differentiates.
+    """
+    from .ops import auto_interpret
+
+    interpret = auto_interpret() if interpret is None else interpret
+    B, H, Sq, d = q.shape
+    bs = pool_k.shape[1]
+    bq = min(bq, _round_up(Sq, 16))
+    Sqp = _round_up(Sq, bq)
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    sched = paged_prefix_schedule(Sqp, int(table.shape[1]), bq, int(bs))
+    o, lse = _paged_jit(
+        q,
+        pool_k.transpose(0, 2, 1, 3),
+        pool_v.transpose(0, 2, 1, 3),
+        jnp.asarray(sched["kv_idx"]),
+        jnp.asarray(table, jnp.int32),
+        jnp.asarray(ctx, jnp.int32),
+        bq=bq,
+        scale=float(1.0 / np.sqrt(d)),
+        interpret=interpret,
+    )
+    return o[:, :, :Sq], lse[:, :, :Sq]
+
+
 def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
              q_offset, sk, scale, interpret):
     BH, Sqp, d = q.shape
@@ -423,9 +579,24 @@ def _pad_width(idx: jnp.ndarray, to: int) -> jnp.ndarray:
     return jnp.pad(idx, ((0, 0), (0, pad)))
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "interpret"
+    ),
+)
+def _fwd_jit(q, k, v, kv_idx, kv_cnt, *, bq, bk, causal, window, q_offset,
+             sk, scale, interpret):
+    return _fwd_call(
+        q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
+        interpret,
+    )
+
+
 def flash_attention(
     q, k, v, *, causal: bool = True, window: int = 0, sched=None,
     tight: bool = True, bq: int = 128, bk: int = 128, interpret=None,
+    return_lse: bool = False,
 ):
     """q: (BH, Sq, d); k, v: (BH, Sk, d) -> (BH, Sq, d).  Differentiable.
 
@@ -450,6 +621,11 @@ def flash_attention(
     trimmed after; padded keys are masked in-kernel, padded query rows cost
     dead rows in the boundary block only.  interpret=None auto-selects
     (compiled on TPU, interpret elsewhere).
+
+    return_lse=True additionally returns the per-row logsumexp (BH, Sq) f32
+    (+1e30 on rows with no live key) for phase-merging with another
+    attention partial (flash_attention_paged) — FORWARD-ONLY: this path
+    bypasses the custom VJP, so don't differentiate through it.
     """
     from .ops import auto_interpret
 
@@ -481,6 +657,13 @@ def flash_attention(
     if Skp != Sk:
         k = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0)))
+    if return_lse:
+        out, lse = _fwd_jit(
+            q, k, v, kv_idx, kv_cnt, bq=bq, bk=bk, causal=bool(causal),
+            window=int(window), q_offset=q_offset, sk=Sk,
+            scale=float(1.0 / np.sqrt(d)), interpret=interpret,
+        )
+        return out[:, :Sq], lse[:, :Sq]
     out = _flash_jit(
         q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq=bq, bk=bk,
         causal=bool(causal), window=int(window), q_offset=q_offset, sk=Sk,

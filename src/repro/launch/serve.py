@@ -229,6 +229,20 @@ def main():
     p.add_argument("--max-retries", type=int, default=0,
                    help="quarantine-retry budget per request: non-finite slots "
                    "re-queue with backoff this many times before FAILED")
+    # paged KV cache (docs/serving.md#paged-kv-cache)
+    p.add_argument("--paged", action="store_true",
+                   help="page the KV caches: per-slot block tables over "
+                   "fixed-size KV pools (serving/block_pool.py)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (must divide --max-len and each "
+                   "local ring length)")
+    p.add_argument("--n-blocks", type=int, default=None,
+                   help="global page-pool size (default: capacity * max_len "
+                   "/ page_size, i.e. no oversubscription)")
+    p.add_argument("--prefix-cache", type=int, default=0,
+                   help="max LRU-registered shared prefixes for COW prefix "
+                   "reuse (0 = off; needs --paged and an all-global "
+                   "transformer config)")
     # lockstep baseline (legacy fixed-batch driver)
     p.add_argument("--lockstep", action="store_true",
                    help="run the fixed-batch serve_session baseline instead")
@@ -276,6 +290,8 @@ def main():
         cfg, params, capacity=args.capacity, max_len=args.max_len,
         masks=masks, pack=pack, queue_limit=args.queue_limit,
         deadline=args.deadline, max_retries=args.max_retries,
+        paged=args.paged, page_size=args.page_size, n_blocks=args.n_blocks,
+        prefix_cache=args.prefix_cache,
     )
     n_shed_at_submit = 0
     for req in staggered_requests(

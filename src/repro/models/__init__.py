@@ -2,12 +2,15 @@
 from .attention import attn_schedules  # noqa: F401
 from .layers import P, split_params  # noqa: F401
 from .model import (  # noqa: F401
+    cache_group,
     init_caches,
     init_lm,
+    init_paged_caches,
     lm_decode,
     lm_forward,
     lm_loss,
     lm_prefill,
     lm_prefill_into,
+    lm_prefill_suffix,
     logits_all_finite,
 )

@@ -22,6 +22,10 @@ __all__ = [
     "attn_decode",
     "attn_schedules",
     "init_kv_cache",
+    "init_kv_pool",
+    "fill_kv_pool",
+    "fill_kv_pool_suffix",
+    "gather_kv_pool",
 ]
 
 NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free in bf16
@@ -203,6 +207,7 @@ def attention(
     masks=None,
     pack=None,
     sched=None,
+    history=None,
 ):
     """Full-sequence attention (train / prefill). Returns (out, (k, v)).
 
@@ -216,6 +221,12 @@ def attention(
     static shapes.  With attn_kernel in {'flash', 'flash_tight'} the score
     loop runs the Pallas flash kernels (fwd + custom-VJP bwd) instead of the
     chunked jnp path — tight mode launches only live KV blocks per q row.
+    history: suffix-only prefill over a paged prefix (shared-prefix reuse,
+    serving/engine.py): {"pool": init_kv_pool leaves, "table": (B, Hp) int32
+    page ids, "ctx": (B,) traced valid-history lengths}.  ``x`` is then the
+    SUFFIX only (``positions`` must carry its absolute offsets ctx..) and
+    every query also attends the first ``ctx`` cached positions gathered
+    through the table.  Global causal layers only.
     """
     B, S, _ = x.shape
     if positions is None:
@@ -231,7 +242,17 @@ def attention(
         # (which the drivers only reach when the WEIGHT kernel is non-dense):
         # a typo'd attn_kernel must never silently run the dense path
         raise ValueError(f"unknown sparse.attn_kernel {attn_kernel!r}")
-    if attn_kernel in ("flash", "flash_tight"):
+    if history is not None:
+        if kind != "global" or window or not cfg.causal:
+            raise ValueError(
+                "attention: history (shared-prefix suffix prefill) supports "
+                "global causal layers only — the engine gates sharing to "
+                "all-global configs (docs/serving.md#paged-kv-cache)"
+            )
+        o = _attend_with_history(
+            q, k, v, history, cfg, flash=attn_kernel != "dense"
+        )
+    elif attn_kernel in ("flash", "flash_tight"):
         o = _flash_attend(
             q, k, v, cfg, causal=cfg.causal, window=window,
             tight=attn_kernel == "flash_tight", sched=sched,
@@ -260,6 +281,79 @@ def attention(
     return out, (k, v)
 
 
+def _attend_with_history(q, k, v, history, cfg, *, flash):
+    """Suffix-only prefill attention: paged prefix + causal self block.
+
+    q/k/v: (B, S, H|KV, hd) for the SUFFIX positions ctx..ctx+S-1.  Each
+    query attends [prefix keys gathered through the block table, live iff
+    kpos < ctx] ++ [suffix keys, relative causal j <= i] — exactly the
+    live-key set a full prefill's rows ctx.. see, so the downstream cached
+    K/V and the last hidden state match a full prefill over prefix+suffix.
+
+    dense: one concatenated ``_attend_block`` with a (B, 1, 1, S, Hlen+S)
+    mask.  flash: ``flash_attention_paged`` walks the prefix pages through
+    the scalar-prefetched table (prefix keys all precede every suffix
+    query, so only the ctx clip masks), the existing causal flash kernel
+    handles the self block, and the two phases merge by logsumexp — the
+    paged phase emits lse = NEG_INF for rows with no live prefix key, so
+    its weight underflows to exactly 0 in the merge.
+    """
+    B, S, H, hd = q.shape
+    pool, table, ctx = history["pool"], history["table"], history["ctx"]
+    ctx = jnp.asarray(ctx)
+    if ctx.ndim == 0:
+        ctx = jnp.full((B,), ctx)
+    bs = pool["k"].shape[1]
+    Hlen = table.shape[1] * bs
+    if not flash:
+        view = gather_kv_pool(pool, table)
+        hk = view["k"].astype(k.dtype)
+        hv = view["v"].astype(v.dtype)
+        hist_m = jnp.arange(Hlen)[None, :] < ctx[:, None]  # (B, Hlen)
+        self_m = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]  # (S, S)
+        mask = jnp.concatenate(
+            [
+                jnp.broadcast_to(hist_m[:, None, :], (B, S, Hlen)),
+                jnp.broadcast_to(self_m[None], (B, S, S)),
+            ],
+            axis=-1,
+        )[:, None, None]  # broadcasts over scores (B, KV, G, S, Hlen + S)
+        return _attend_block(
+            q,
+            jnp.concatenate([hk, k], axis=1),
+            jnp.concatenate([hv, v], axis=1),
+            mask,
+            cfg,
+        )
+    if cfg.logit_softcap:
+        raise ValueError(
+            "attention: history + flash attn_kernel does not support "
+            "logit_softcap; use attn_kernel='dense'"
+        )
+    from ..kernels.flash_attention import flash_attention, flash_attention_paged
+
+    KV = k.shape[2]
+    o_hist, l_hist = flash_attention_paged(
+        q.transpose(0, 2, 1, 3), pool["k"], pool["v"], table, ctx
+    )  # (B, H, S, hd), (B, H, S)
+    if H != KV:  # GQA: the self phase folds heads, so repeat (paged doesn't)
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    o_self, l_self = flash_attention(
+        fold(q), fold(k), fold(v), causal=True, window=0, return_lse=True
+    )
+    o_self = o_self.reshape(B, H, S, hd)
+    l_self = l_self.reshape(B, H, S)  # finite: every row attends itself
+    m = jnp.maximum(l_hist, l_self)
+    w1 = jnp.exp(l_hist - m)[..., None]
+    w2 = jnp.exp(l_self - m)[..., None]
+    o = (w1 * o_hist.astype(jnp.float32) + w2 * o_self.astype(jnp.float32)) / (
+        w1 + w2
+    )
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
 def _make_mask(sq, q0, sk, k0, causal, window):
     if not causal and not window:
         return None
@@ -282,6 +376,88 @@ def init_kv_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):
     size = min(cfg.window, max_len) if (kind == "local" and cfg.window) else max_len
     shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (pool + block-table addressing — serving/block_pool.py)
+# ---------------------------------------------------------------------------
+
+def init_kv_pool(cfg, n_blocks: int, page_size: int, dtype=jnp.bfloat16):
+    """One layer's paged cache: ``n_blocks`` fixed-size KV pages.
+
+    The contiguous (batch, size, KV, hd) row cache becomes a pool
+    (n_blocks, page_size, KV, hd) shared by EVERY slot; a slot addresses
+    position p through its block table as (table[p // page_size],
+    p % page_size) — block-relative ring addressing, see ``attn_decode``.
+    Physical page ids are group-wide (serving/block_pool.py): the same
+    table row indexes the same page slice in every layer of the group.
+    """
+    shape = (n_blocks, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gather_kv_pool(pool, table):
+    """Materialize a slot-major contiguous view of paged caches.
+
+    pool: {"k"/"v": (N, bs, KV, hd)}; table: (B, T) int32 page ids (the
+    sentinel id N marks unowned entries — the gather CLIPS it, producing
+    junk lanes that every consumer masks via its validity mask, exactly
+    like the stale positions of a recycled contiguous slot).  Returns
+    {"k"/"v": (B, T * bs, KV, hd)} — bit-identical to the contiguous
+    cache the same writes would have produced, which is what makes the
+    paged decode path token-identical to the contiguous one.
+    """
+    B, T = table.shape
+    N, bs = pool["k"].shape[:2]
+    tab = jnp.minimum(table, N - 1)  # clip the sentinel explicitly
+
+    def g(leaf):
+        return leaf[tab].reshape(B, T * bs, *leaf.shape[2:])
+
+    return {"k": g(pool["k"]), "v": g(pool["v"])}
+
+
+def fill_kv_pool(pool, row, table):
+    """Scatter one prefilled contiguous cache ROW into the pool via a table.
+
+    row: {"k"/"v": (1, size, KV, hd)} from the B=1 ``lm_prefill`` (ring
+    alignment, bucketing and recurrent recompute all already handled by
+    that battle-tested path); table: (T,) int32 with T * page_size == size.
+    Unowned entries carry the sentinel id N and their pages are DROPPED
+    (mode='drop'), so a partially-allocated table (short request in a long
+    row) never clobbers page 0.  Owned entries are distinct pages, so the
+    scatter has no duplicate indices.
+    """
+    N, bs = pool["k"].shape[:2]
+    T = table.shape[0]
+
+    def s(dst, src):
+        src = src.reshape(T, bs, *src.shape[1:]).astype(dst.dtype)
+        return dst.at[table].set(src, mode="drop")
+
+    return {"k": s(pool["k"], row["k"][0]), "v": s(pool["v"], row["v"][0])}
+
+
+def fill_kv_pool_suffix(pool, k, v, table, start, n_valid):
+    """Scatter suffix K/V (already roped) at positions start..start+S-1.
+
+    The block-relative generalization of ``fill_kv_cache``'s start-0 fill:
+    position p lands at (table[p // bs], p % bs), so a suffix beginning at
+    a traced ``start`` (shared-prefix admission, serving/engine.py) writes
+    through the SAME table geometry decode uses.  Positions >= n_valid are
+    bucket padding — their writes drop (sentinel page).  Global (linear)
+    caches only: start + S <= table span, no ring wrap (the engine gates
+    prefix sharing to all-global configs).
+    """
+    N, bs = pool["k"].shape[:2]
+    S = k.shape[1]
+    posv = start + jnp.arange(S)
+    pg = table[jnp.minimum(posv // bs, table.shape[0] - 1)]
+    pg = jnp.where(jnp.arange(S) < n_valid, pg, N)  # pad writes: drop
+    off = posv % bs
+    ck = pool["k"].at[pg, off].set(k[0].astype(pool["k"].dtype), mode="drop")
+    cv = pool["v"].at[pg, off].set(v[0].astype(pool["v"].dtype), mode="drop")
+    return {"k": ck, "v": cv}
 
 
 def fill_kv_cache(cache, k, v, start: int = 0, n_valid=None):
@@ -331,9 +507,18 @@ def fill_kv_cache(cache, k, v, start: int = 0, n_valid=None):
 
 def attn_decode(
     p, x_t, cache, pos, cfg, *, kind: str = "global", masks=None, pack=None,
-    active=None,
+    active=None, table=None,
 ):
     """One decode step.  x_t: (B, 1, d); pos: traced scalar OR (B,) vector.
+
+    ``table`` (B, T) int32 switches to PAGED addressing: ``cache`` is then
+    a pool {"k"/"v": (N, page_size, KV, hd)} (init_kv_pool) and position p
+    writes at (table[b, slot // bs], slot % bs) where ``slot`` is the same
+    ring/linear slot the contiguous path uses — ring addressing generalized
+    to block-relative offsets.  Attention then runs on the table-gathered
+    contiguous view (gather_kv_pool), whose bytes equal the contiguous
+    cache's exactly, so paged decode is bit-identical to contiguous decode.
+    Requires per-slot ``pos``; dead slots write to the sentinel page (drop).
 
     Windowed caches use ring addressing (softmax is permutation invariant —
     absolute positions are baked into the stored, roped keys).
@@ -364,9 +549,33 @@ def attn_decode(
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
 
-    size = cache["k"].shape[1]
     ring = kind == "local" and cfg.window
-    if per_slot:
+    if table is not None:
+        if not per_slot:
+            raise ValueError("attn_decode: paged cache requires pos: (B,)")
+        N, bs = cache["k"].shape[:2]
+        size = table.shape[1] * bs
+        slots = jnp.mod(pos, size) if ring else pos
+        b_idx = jnp.arange(B)
+        pg = table[b_idx, jnp.minimum(slots // bs, table.shape[1] - 1)]
+        if active is not None:
+            # dead slots write to the sentinel page -> dropped (pool untouched)
+            pg = jnp.where(active, pg, N)
+        off = slots % bs
+        pool = {
+            "k": cache["k"].at[pg, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop"
+            ),
+            "v": cache["v"].at[pg, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop"
+            ),
+        }
+        view = gather_kv_pool(pool, table)
+        ck, cv = view["k"], view["v"]
+        new_cache = pool
+        valid = jnp.arange(size)[None, :] <= pos[:, None]  # (B, size)
+    elif per_slot:
+        size = cache["k"].shape[1]
         slots = jnp.mod(pos, size) if ring else pos
         if active is not None:
             # dead slots write out of bounds -> dropped (cache rows untouched)
@@ -378,11 +587,14 @@ def attn_decode(
         cv = cache["v"].at[b_idx, slots].set(
             v[:, 0].astype(cache["v"].dtype), mode="drop"
         )
+        new_cache = {"k": ck, "v": cv}
         valid = jnp.arange(size)[None, :] <= pos[:, None]  # (B, size)
     else:
+        size = cache["k"].shape[1]
         slot = jnp.mod(pos, size) if ring else pos
         ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
         valid = (jnp.arange(size) <= pos)[None, :]  # ring: all valid once pos >= size
 
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -392,4 +604,4 @@ def attn_decode(
     w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv).reshape(B, 1, H * hd)
     out = linear(p["wo"], o, **_linear_kw(cfg, masks, "wo", pack))
-    return out, {"k": ck, "v": cv}
+    return out, new_cache

@@ -52,8 +52,11 @@ __all__ = [
     "lm_forward",
     "lm_loss",
     "init_caches",
+    "init_paged_caches",
+    "cache_group",
     "lm_prefill",
     "lm_prefill_into",
+    "lm_prefill_suffix",
     "lm_decode",
     "logits_all_finite",
     "stack_layer_params",
@@ -183,7 +186,7 @@ def _local_masked(p, masks, key, *, kernel):
 
 
 def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None,
-           attn_sched=None):
+           attn_sched=None, history=None):
     """Full-sequence block (train/prefill). Returns (x, kv_or_state, moe_aux).
 
     masks: this layer's mask subtree.  None => legacy behaviour (params are
@@ -196,6 +199,8 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None,
     attn_sched: {kind: AttnSchedule} for cfg.sparse.attn_kernel='flash_tight'
     (models/attention.py::attn_schedules) — shared across layers of the same
     kind; None lets the attention build its schedule lazily at trace time.
+    history: this layer's paged-prefix dict for suffix-only prefill
+    (models/attention.py::attention ``history``) — shared-prefix serving.
     """
     aux = jnp.float32(0.0)
     if cfg.block_type == "xlstm":
@@ -218,6 +223,7 @@ def _block(p, x, cfg, i, *, positions=None, masks=None, pack=None,
         p["attn"], h, cfg, kind=kind, positions=positions, q_chunk=cfg.q_chunk,
         masks=_sub(masks, "attn"), pack=_sub(pack, "attn"),
         sched=None if attn_sched is None else attn_sched.get(kind),
+        history=history,
     )
     state: Any = kv
     if cfg.block_type == "hymba":
@@ -313,7 +319,7 @@ def _logits(params, cfg, h):
 
 def lm_forward(
     params, cfg, batch, *, collect_states: bool = False, masks=None, pack=None,
-    attn_sched=None,
+    attn_sched=None, positions=None, histories=None,
 ):
     """Full-sequence forward -> (hidden (B,S,d), states per layer, moe_aux).
 
@@ -325,12 +331,23 @@ def lm_forward(
     models/attention.py::attn_schedules).  Unlike pack, schedules are
     STATIC-shape-derived, so None just builds them lazily at trace time —
     passing them is for explicit per-session threading (launch/serve.py).
+    positions: absolute RoPE positions ((S,) or (B, S)); None = arange(S).
+    histories: per-layer paged-prefix dicts for suffix-only prefill
+    (lm_prefill_suffix) — ``batch`` is then the SUFFIX and ``positions``
+    must carry its absolute offsets.  Unrolled collect_states path only.
     """
+    if histories is not None:
+        assert collect_states and not cfg.scan_layers, (
+            "histories (suffix prefill) runs the unrolled collect_states path"
+        )
+        if attn_sched is None:
+            attn_sched = {}  # self-phase flash scheds build lazily per shape
     x = _embed_inputs(params, cfg, batch)
     S_ = x.shape[1]
     if attn_sched is None:
         attn_sched = A.attn_schedules(cfg, S_)
-    positions = jnp.arange(S_)
+    if positions is None:
+        positions = jnp.arange(S_)
     aux_total = jnp.float32(0.0)
     states = []
 
@@ -384,6 +401,7 @@ def lm_forward(
             x, st, aux = _block(
                 p, x, cfg, i, positions=positions, masks=layer_ms[i],
                 pack=layer_pk[i], attn_sched=attn_sched,
+                history=None if histories is None else histories[i],
             )
             aux_total = aux_total + aux
             if collect_states:
@@ -468,6 +486,47 @@ def init_caches(cfg, batch: int, max_len: int):
     return caches
 
 
+def cache_group(cfg, i: int) -> str:
+    """Which page-pool GROUP layer i's KV cache belongs to ('global' at size
+    max_len, 'local' ring at min(window, max_len)) — layers sharing a cache
+    geometry share one physical page id space (serving/block_pool.py)."""
+    return (
+        "local"
+        if (cfg.layer_kind(i) == "local" and cfg.window)
+        else "global"
+    )
+
+
+def init_paged_caches(cfg, batch: int, max_len: int, n_blocks: dict,
+                      page_size: int):
+    """Paged variant of ``init_caches``: KV leaves become page POOLS.
+
+    n_blocks: {'global': N, 'local': N} physical pages per cache group —
+    every layer of a group addresses the same id space through the group's
+    block table (serving/engine.py owns the tables; this is just storage).
+    Recurrent per-slot states (hymba SSM, xLSTM carries) have no
+    positional axis to page, so they stay slot-batched exactly as in
+    ``init_caches`` — only position-indexed KV is pooled.
+    """
+    caches = []
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    for i in range(cfg.n_layers):
+        if cfg.block_type == "xlstm":
+            if cfg.is_slstm(i):
+                caches.append({"slstm": X.init_slstm_state(cfg, batch)})
+            else:
+                caches.append({"mlstm": X.init_mlstm_state(cfg, batch)})
+            continue
+        c: dict[str, Any] = {
+            "kv": A.init_kv_pool(cfg, n_blocks[cache_group(cfg, i)],
+                                 page_size, dt)
+        }
+        if cfg.block_type == "hymba":
+            c["ssm"] = S.init_ssm_state(cfg, batch)
+        caches.append(c)
+    return caches
+
+
 def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
                attn_sched=None, n_valid=None):
     """Run the prompt, return (last-position logits, filled caches).
@@ -545,7 +604,8 @@ def lm_prefill(params, cfg, batch, max_len: int, *, masks=None, pack=None,
 
 
 def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
-                    masks=None, pack=None, attn_sched=None, n_valid=None):
+                    masks=None, pack=None, attn_sched=None, n_valid=None,
+                    tables=None):
     """Prefill ONE prompt and scatter its state into batched caches at ``slot``.
 
     The continuous-batching admission path (serving/engine.py): ``caches`` is
@@ -570,6 +630,15 @@ def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
     the engine pads prompts up to a length bucket so one trace serves a
     range of lengths (see lm_prefill for exactness conditions and
     serving/engine.py for the bucketing policy).
+
+    ``tables``: {'global'/'local': (T_g,) int32} page tables for THIS
+    request's row — switches ``caches`` to the paged layout
+    (init_paged_caches): KV leaves scatter page-wise through the table
+    (attention.py::fill_kv_pool — unowned sentinel entries drop), recurrent
+    leaves still row-scatter at ``slot``.  The interior prefill is the SAME
+    B=1 contiguous-row pass either way, so ring alignment, bucketed-pad
+    drops and recurrent recomputes are identical to the contiguous engine —
+    which is what makes paged admission token-identical to contiguous.
     """
     logits, row = lm_prefill(
         params, cfg, batch, max_len=max_len, masks=masks, pack=pack,
@@ -581,7 +650,72 @@ def lm_prefill_into(params, cfg, caches, batch, slot, max_len: int, *,
             dst, src.astype(dst.dtype), (slot,) + (0,) * (dst.ndim - 1)
         )
 
-    return logits, jax.tree_util.tree_map(scatter, caches, row)
+    if tables is None:
+        return logits, jax.tree_util.tree_map(scatter, caches, row)
+    new = []
+    for i, (c, r) in enumerate(zip(caches, row)):
+        c = dict(c)
+        for key in c:
+            if key == "kv":
+                c["kv"] = A.fill_kv_pool(
+                    c["kv"], r["kv"], tables[cache_group(cfg, i)]
+                )
+            else:
+                c[key] = jax.tree_util.tree_map(scatter, c[key], r[key])
+        new.append(c)
+    return logits, new
+
+
+def lm_prefill_suffix(params, cfg, caches, batch, table, ctx, *, masks=None,
+                      pack=None, n_valid=None):
+    """Prefill only the SUFFIX of a prompt whose first ``ctx`` positions are
+    already cached in the paged pools (shared-prefix admission,
+    serving/engine.py): the whole point of prefix sharing is that the shared
+    pages' K/V are never recomputed.
+
+    caches: paged (init_paged_caches); table: (T_g,) int32 — the request's
+    GLOBAL-group page table (shared/forked prefix pages first, fresh pages
+    after; unowned tail = sentinel); ctx: traced int32 valid cached prefix
+    length; batch: B=1 suffix tokens starting at absolute position ctx
+    (bucket-padded — ``n_valid`` true suffix count).  Suffix queries attend
+    [table-gathered prefix, causal self] (attention.py::
+    _attend_with_history) with RoPE at ctx + arange(S), then the suffix K/V
+    scatter block-relative at positions ctx.. (fill_kv_pool_suffix).
+    Returns (logits at suffix position n_valid - 1, new caches).
+
+    All-global causal transformer stacks only — no recurrent carries to
+    replay and no MoE routing over pad tokens; the engine gates prefix
+    sharing to exactly these configs.
+    """
+    assert cfg.causal and cfg.block_type == "transformer", (
+        "suffix prefill: all-global causal transformer stacks only"
+    )
+    tokens = batch["tokens"]
+    S_ = tokens.shape[1]
+    positions = ctx + jnp.arange(S_)
+    histories = [
+        {"pool": caches[i]["kv"], "table": table[None], "ctx": ctx}
+        for i in range(cfg.n_layers)
+    ]
+    h, states, _ = lm_forward(
+        params, cfg, batch, collect_states=True, masks=masks, pack=pack,
+        positions=positions, histories=histories,
+    )
+    new = []
+    for i, st in enumerate(states):
+        k, v = st
+        new.append({
+            "kv": A.fill_kv_pool_suffix(
+                caches[i]["kv"], k, v, table, ctx,
+                S_ if n_valid is None else n_valid,
+            )
+        })
+    h_last = (
+        h[:, -1:] if n_valid is None
+        else jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, 1)
+    )
+    logits = _logits(params, cfg, h_last)
+    return logits, new
 
 
 def logits_all_finite(logits):
@@ -618,8 +752,14 @@ def _gate_rows(active, new, old):
 
 
 def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None,
-              active=None):
+              active=None, tables=None):
     """One decode step. tokens: (B, 1) int32; pos: traced scalar OR (B,).
+
+    ``tables``: {'global'/'local': (B, T_g) int32} per-slot block tables —
+    switches ``caches`` to the PAGED layout (init_paged_caches): each
+    layer's KV step scatter-writes through its group's table and attends
+    the table-gathered contiguous view, bit-identical to the contiguous
+    cache (attention.py::attn_decode).  Requires per-slot ``pos``.
 
     Returns (logits (B,1,V), new caches).  With ``masks``, projections and
     MLPs decode through the Pallas sparse kernels (cfg.sparse.kernel) — the
@@ -672,6 +812,7 @@ def lm_decode(params, cfg, caches, tokens, pos, *, masks=None, pack=None,
         attn_out, c["kv"] = A.attn_decode(
             p["attn"], h, c["kv"], pos, cfg, kind=kind, masks=_sub(m, "attn"),
             pack=_sub(pk, "attn"), active=active,
+            table=None if tables is None else tables[cache_group(cfg, i)],
         )
         if cfg.block_type == "hymba":
             ssm_out, new_ssm = S.ssm_decode(

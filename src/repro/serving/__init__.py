@@ -6,7 +6,11 @@ jitted per-slot step.  Failure edges (deadline shedding, NaN-slot
 quarantine, bounded retries) and the deterministic chaos harness
 (``FaultInjector``, faults.py) are documented in
 docs/serving.md#failure-model.  See docs/serving.md for the end-to-end tour.
+With ``paged=True`` the engine's KV caches become page pools managed by
+``BlockPool`` (block_pool.py) — fixed-size KV blocks, per-slot block tables,
+refcounted copy-on-write prefix sharing (docs/serving.md#paged-kv-cache).
 """
+from .block_pool import BlockPool  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
 from .faults import FaultInjector, burst_storm, truncate_pack  # noqa: F401
 from .queue import Request, RequestQueue, Status, poisson_arrivals  # noqa: F401

@@ -64,14 +64,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import hashlib
+
 from ..core.pack import validate_pack
 from ..models import (
     attn_schedules,
+    cache_group,
     init_caches,
+    init_paged_caches,
     lm_decode,
     lm_prefill_into,
+    lm_prefill_suffix,
     logits_all_finite,
 )
+from .block_pool import BlockPool
 from .faults import FaultInjector
 from .queue import Request, RequestQueue, Status
 from .sampler import request_key, sample_tokens, step_keys
@@ -108,13 +114,18 @@ def _decode_fn(cfg, greedy: bool, faulty: bool = False):
     rows only) and is returned device-resident: between admissions a step
     uploads nothing and downloads one (capacity,) token vector — the host's
     only per-step work is finish/quarantine detection.
+
+    ``tables`` ({group: (capacity, T_g) int32} block tables, or None for the
+    contiguous layout) switches lm_decode to PAGED cache addressing —
+    re-uploaded only when an admission/release rewrites a table row, like
+    the rest of the carry.
     """
 
     def _decode(params, masks, pack, caches, tok, pos, active, base_keys,
-                gen_idx, temp, topk, *fault):
+                gen_idx, temp, topk, tables=None, *fault):
         logits, caches = lm_decode(
             params, cfg, caches, tok, pos, masks=masks, pack=pack,
-            active=active,
+            active=active, tables=tables,
         )
         last = logits[:, -1]
         if faulty:
@@ -153,14 +164,19 @@ def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
     this cache's growth under arbitrary-length traffic.  ``greedy`` requests
     skip the sampler exactly as in ``_decode_fn``.  Also returns the
     request's scalar ``finite`` flag (and, with ``faulty``, applies the
-    injected corruption first) — see ``_decode_fn``."""
+    injected corruption first) — see ``_decode_fn``.
+
+    ``tables`` ({group: (T_g,) int32} page-table ROW for the admitted
+    request, or None) switches the post-prefill scatter to the paged pools
+    (lm_prefill_into) — the interior B=1 prefill is identical either way,
+    so one trace structure covers a given bucket per layout."""
     sched = attn_schedules(cfg, prompt_len + n_patches)
 
     def _prefill(params, masks, pack, caches, batch, slot, n_valid, base_key,
-                 temp, topk, *fault):
+                 temp, topk, tables=None, *fault):
         logits, caches = lm_prefill_into(
             params, cfg, caches, batch, slot, max_len, masks=masks,
-            pack=pack, attn_sched=sched, n_valid=n_valid,
+            pack=pack, attn_sched=sched, n_valid=n_valid, tables=tables,
         )
         last = logits[:, -1]
         if faulty:
@@ -174,6 +190,51 @@ def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
         return tok, finite, caches
 
     return jax.jit(_prefill, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=None)
+def _suffix_prefill_fn(cfg, suffix_len: int, greedy: bool,
+                       faulty: bool = False):
+    """Jitted SUFFIX prefill + first-token sample for shared-prefix
+    admissions (paged engines with ``prefix_cache > 0``): the request's
+    first ``ctx`` positions are already cached in the paged pools, so only
+    the suffix runs through the model (models/model.py::lm_prefill_suffix —
+    suffix queries attend [table-gathered prefix, causal self]).  One trace
+    per suffix-length BUCKET, exactly like ``_prefill_fn``; ``table`` is the
+    request's global-group page row, ``ctx`` the traced cached-prefix
+    length.  Sampling / finite flag / fault injection as in ``_prefill_fn``.
+    """
+
+    def _prefill(params, masks, pack, caches, batch, table, ctx, n_valid,
+                 base_key, temp, topk, *fault):
+        logits, caches = lm_prefill_suffix(
+            params, cfg, caches, batch, table, ctx, masks=masks, pack=pack,
+            n_valid=n_valid,
+        )
+        last = logits[:, -1]
+        if faulty:
+            last = jnp.where(fault[0], fault[1], last)
+        finite = logits_all_finite(last)[0]
+        if greedy:
+            tok = jnp.argmax(last[0]).astype(jnp.int32)
+        else:
+            keys = step_keys(base_key[None], jnp.zeros((1,), jnp.int32))
+            tok = sample_tokens(last, keys, temp[None], topk[None])[0]
+        return tok, finite, caches
+
+    return jax.jit(_prefill, donate_argnums=(3,))
+
+
+class _PrefixEntry:
+    """One registered shared prefix: its page-aligned token count and the
+    global-pool page ids the cache itself holds a reference on (refcount++
+    at registration, refcount-- at LRU eviction)."""
+
+    __slots__ = ("plen", "pages")
+
+    def __init__(self, plen: int, pages: list):
+        self.plen = plen
+        self.pages = pages
 
 
 class ServeEngine:
@@ -195,12 +256,36 @@ class ServeEngine:
       max_retries    default quarantine-retry budget for requests that did
                      not set their own ``max_retries``
       faults         optional serving/faults.py::FaultInjector — chaos hooks
+
+    Paged-cache knobs (docs/serving.md#paged-kv-cache):
+      paged          KV caches become page POOLS (init_paged_caches) and
+                     every slot addresses them through a per-slot block
+                     table (serving/block_pool.py) — token-identical to the
+                     contiguous layout, but slot memory is allocated in
+                     ``page_size`` chunks at admission and returned at
+                     release, so the GLOBAL pool can be sized for the
+                     traffic's true footprint instead of capacity * max_len
+      page_size      tokens per KV page (must divide max_len and each local
+                     ring length)
+      n_blocks       global-group pool size in pages (None = the
+                     no-oversubscription default capacity * max_len /
+                     page_size; local ring pools are always fully
+                     provisioned — a ring is dense by construction)
+      prefix_cache   max LRU-registered shared prefixes (0 = off).  With
+                     ``prefix_cache > 0``, admissions whose request declares
+                     ``share_prefix_len`` probe a prefix-hash table: a hit
+                     maps the leading pages copy-on-write (refcount++, a
+                     partially-shared boundary page FORKS) and prefills only
+                     the suffix.  All-global causal transformer configs
+                     only (no recurrent carry to replay, no MoE routing).
     """
 
     def __init__(self, cfg, params, *, capacity: int, max_len: int,
                  masks=None, pack=None, queue_limit: Optional[int] = None,
                  deadline: Optional[float] = None, max_retries: int = 0,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None, paged: bool = False,
+                 page_size: int = 16, n_blocks: Optional[int] = None,
+                 prefix_cache: int = 0):
         if not cfg.causal:
             raise ValueError("ServeEngine needs a causal config (no decode "
                              "path for encoder-only models)")
@@ -229,7 +314,73 @@ class ServeEngine:
         self._pad_prompts = cfg.block_type == "transformer" and not cfg.n_experts
 
         self.queue = RequestQueue(max_depth=queue_limit)
-        self.caches = init_caches(cfg, capacity, max_len)
+        self.paged = paged
+        self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        # prefix sharing replays NOTHING: it needs every layer's cache to be
+        # pure position-indexed KV (no recurrent carry, no ring wrap) and
+        # admission to be routing-free (no MoE capacity over suffix pads)
+        self._share_ok = (
+            cfg.block_type == "transformer" and not cfg.n_experts
+            and cfg.frontend == "none"
+            and all(cache_group(cfg, i) == "global"
+                    for i in range(cfg.n_layers))
+        )
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache needs paged=True (sharing is a "
+                             "property of the page tables)")
+        if prefix_cache and not self._share_ok:
+            raise ValueError(
+                "prefix_cache requires an all-global causal transformer "
+                "config (no recurrent carries, no MoE, frontend='none') — "
+                f"got block_type={cfg.block_type!r}"
+            )
+        if paged:
+            # one pool + one table per cache GROUP (models/model.py::
+            # cache_group): all global layers share a page id space sized in
+            # max_len-worth rows, local ring layers share a (dense) ring pool
+            spans: dict[str, int] = {}
+            if cfg.block_type != "xlstm":  # xlstm has no KV to page
+                for i in range(cfg.n_layers):
+                    g = cache_group(cfg, i)
+                    spans[g] = (
+                        min(cfg.window, max_len) if g == "local" else max_len
+                    )
+            for g, span in spans.items():
+                if span % page_size:
+                    raise ValueError(
+                        f"page_size {page_size} must divide the {g} cache "
+                        f"length {span}"
+                    )
+            self._spans = spans
+            self.pools: dict[str, BlockPool] = {}
+            self.tables: dict[str, np.ndarray] = {}
+            n_pages: dict[str, int] = {}
+            for g, span in spans.items():
+                t = span // page_size
+                n = (capacity * t if g == "local" or n_blocks is None
+                     else n_blocks)
+                self.pools[g] = BlockPool(n, page_size)
+                n_pages[g] = n
+                self.tables[g] = np.full((capacity, t),
+                                         self.pools[g].sentinel, np.int32)
+            self.caches = init_paged_caches(cfg, capacity, max_len,
+                                            n_pages, page_size)
+            self.slot_pages: list[dict[str, list]] = [
+                {} for _ in range(capacity)
+            ]
+            self._device_tables: Optional[dict] = None  # None => dirty
+            self._prefix_entries: dict[bytes, _PrefixEntry] = {}
+        else:
+            self.caches = init_caches(cfg, capacity, max_len)
+            self._spans = {}
+            self.pools = {}
+            self.tables = {}
+            self.slot_pages = []
+            self._device_tables = None
+            self._prefix_entries = {}
+        self.n_prefix_hits = 0
+        self.n_prefix_misses = 0
         # per-slot host state (the scheduler's view of the pool); the decode
         # step consumes device-resident copies, re-uploaded only when an
         # admission/release dirties the mirrors (steady-state steps upload
@@ -285,6 +436,19 @@ class ServeEngine:
                 f"patches) + max_new_tokens {req.max_new_tokens} needs "
                 f"{need} > max_len {self.max_len}"
             )
+        if self.paged and "global" in self.pools:
+            # the real paged bound is PAGES, not the row span: a request is
+            # admissible iff its worst-case footprint ceil(need / page_size)
+            # can ever come out of the global pool (an undersized n_blocks
+            # makes this tighter than the max_len row bound above — reject
+            # at submit, not deadlock at admission)
+            pages = -(-need // self.page_size)
+            if pages > self.pools["global"].n_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {pages} KV pages "
+                    f"(page_size {self.page_size}) but the global block "
+                    f"pool only has {self.pools['global'].n_blocks}"
+                )
         if self.cfg.frontend == "patch" and req.patches is None:
             raise ValueError(
                 f"request {req.rid}: frontend='patch' configs need patches"
@@ -292,6 +456,146 @@ class ServeEngine:
         if req.ttl is None:
             req.ttl = self.deadline  # engine-wide default admission deadline
         return self.queue.submit(req)
+
+    # -- paged-pool bookkeeping (host-side; serving/block_pool.py) ---------
+
+    def _prefix_key(self, req: Request):
+        """(key, plen) for an eligible shared-prefix probe, (None, 0) when
+        the request shares nothing page-aligned: ``plen`` is the declared
+        prefix floored to a page multiple, the key its content hash (the
+        table is keyed by TOKENS, so two templates of the same length never
+        collide onto each other's pages)."""
+        bs = self.page_size
+        if not (self.prefix_cache and req.share_prefix_len >= bs):
+            return None, 0
+        plen = (min(req.share_prefix_len, req.prompt_len) // bs) * bs
+        if plen < bs:
+            return None, 0
+        key = hashlib.sha1(
+            np.ascontiguousarray(req.tokens[:plen], np.int32).tobytes()
+        ).digest()
+        return key, plen
+
+    def _evict_prefix(self) -> None:
+        """Drop the least-recently-used registered prefix: the cache's page
+        references go away; pages still referenced by live slots stay."""
+        key = next(iter(self._prefix_entries))
+        entry = self._prefix_entries.pop(key)
+        self.pools["global"].free(entry.pages)
+
+    def _ensure_free(self, want: dict) -> bool:
+        """True once every group can allocate its ``want`` page count,
+        evicting LRU prefix entries (global-pool pressure) as needed."""
+        ok = lambda: all(self.pools[g].can_alloc(n) for g, n in want.items())
+        while not ok() and self._prefix_entries:
+            self._evict_prefix()
+        return ok()
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side COW copy: duplicate one global page's K/V bits into a
+        freshly forked page, in every layer (sharing is all-global, so every
+        layer's pool carries the page)."""
+        for c in self.caches:
+            c["kv"] = {
+                n: leaf.at[dst].set(leaf[src]) for n, leaf in c["kv"].items()
+            }
+
+    def _alloc_pages(self, req: Request, s: int) -> Optional[int]:
+        """Allocate slot ``s``'s pages for ``req`` and write its table rows.
+
+        Returns the shared-prefix length ``ctx`` (0 = no sharing; the
+        request prefills in full) or None when the pools cannot satisfy the
+        request even after LRU prefix eviction — the caller re-queues (a
+        release will free pages; submit's pool-capacity bound guarantees
+        the request is admissible on a drained pool).
+
+        On a prefix HIT the leading ``ctx // page_size`` pages are mapped
+        copy-on-write (refcount++); a partially-shared boundary page is
+        forked and device-copied (or written in place when this slot holds
+        the only reference — eviction raced the admission), and only
+        ``ceil((need - ctx) / page_size)`` pages are newly allocated.
+        """
+        bs = self.page_size
+        need = req.prompt_len + self._n_patches + req.max_new_tokens
+        want = {
+            g: -(-min(span, need) // bs) for g, span in self._spans.items()
+        }
+        key, _ = self._prefix_key(req)
+        entry = self._prefix_entries.get(key) if key is not None else None
+        pool = self.pools.get("global")
+        if entry is None:
+            if key is not None:
+                self.n_prefix_misses += 1
+            if not self._ensure_free(want):
+                return None
+            rows = {g: self.pools[g].alloc(n) for g, n in want.items()}
+            ctx = 0
+        else:
+            # never admit a zero-token suffix: the prefill logits must come
+            # from a real forward, so at least the last prompt token reruns
+            ctx = min(entry.plen, req.prompt_len - 1)
+            n_keep = ctx // bs
+            boundary = ctx % bs != 0
+            self._prefix_entries[key] = self._prefix_entries.pop(key)  # LRU
+            shared = [int(p) for p in entry.pages[: n_keep + boundary]]
+            pool.incref(shared)  # hold the pages before any eviction below
+            if not self._ensure_free({"global": want["global"] - n_keep}):
+                pool.free(shared)
+                return None
+            row = shared[:n_keep]
+            n_fresh = want["global"] - n_keep
+            if boundary:
+                bp = shared[-1]
+                if pool.refcount[bp] >= 2:  # still shared: fork + copy
+                    new_bp = pool.fork(bp)
+                    self._copy_page(bp, new_bp)
+                    row.append(new_bp)
+                else:  # eviction raced us: the page is exclusively ours
+                    row.append(bp)
+                n_fresh -= 1
+            row += pool.alloc(n_fresh)
+            rows = {"global": row}
+            self.n_prefix_hits += 1
+        for g, pages in rows.items():
+            self.tables[g][s] = self.pools[g].sentinel
+            self.tables[g][s, : len(pages)] = pages
+        self.slot_pages[s] = rows
+        self._device_tables = None
+        return ctx
+
+    def _free_slot_pages(self, s: int) -> None:
+        """Return slot ``s``'s page references to the pools (shared pages
+        outlive it via the prefix cache's / other slots' references)."""
+        for g, pages in self.slot_pages[s].items():
+            self.pools[g].free(pages)
+            self.tables[g][s] = self.pools[g].sentinel
+        if self.slot_pages[s]:
+            self.slot_pages[s] = {}
+            self._device_tables = None
+
+    def _register_prefix(self, req: Request, s: int) -> None:
+        """After a successful FULL prefill: publish the request's leading
+        page-aligned prefix pages into the prefix-hash table (the cache
+        takes its own references), evicting LRU entries past the limit."""
+        key, plen = self._prefix_key(req)
+        if key is None or key in self._prefix_entries:
+            return
+        pages = [int(p) for p in self.tables["global"][s][: plen // self.page_size]]
+        self.pools["global"].incref(pages)
+        self._prefix_entries[key] = _PrefixEntry(plen, pages)
+        while len(self._prefix_entries) > self.prefix_cache:
+            self._evict_prefix()
+
+    def check_pool_accounting(self) -> None:
+        """Audit every pool against the scheduler's books: live pages must
+        be EXACTLY the slot-table references plus the prefix-cache holds
+        (serving/block_pool.py::check) — the chaos leak test's invariant."""
+        for g, pool in self.pools.items():
+            refs = [p for sp in self.slot_pages for p in sp.get(g, ())]
+            if g == "global":
+                for e in self._prefix_entries.values():
+                    refs.extend(e.pages)
+            pool.check(refs)
 
     def _admit(self, now: float, finished: list, clock=None) -> None:
         while True:
@@ -303,28 +607,61 @@ class ServeEngine:
                 return
             s = int(free[0])
             req.status = Status.PREFILL
-            toks = np.zeros(self._padded_len(req.prompt_len), np.int32)
-            toks[: req.prompt_len] = np.asarray(req.tokens, np.int32)
-            batch = {"tokens": jnp.asarray(toks)[None]}
-            if req.patches is not None:
-                batch["patches"] = jnp.asarray(req.patches)[None]
+            ctx = 0
+            if self.paged and self.pools:
+                got = self._alloc_pages(req, s)
+                if got is None:
+                    # pools exhausted (outstanding slots hold the pages):
+                    # hand the request back; a release frees pages and the
+                    # next step retries — structured deferral, not an error
+                    self.queue.requeue(req)
+                    return
+                ctx = got
             base = request_key(req.seed)
             fval = self.faults.prefill_fault(req.rid) if self.faults else None
             if self.faults and clock is not None:
                 delay = self.faults.prefill_delay(req.rid)
                 if delay > 0:
                     time.sleep(delay)  # wall-clock chaos only (run())
-            args = (
-                self.params, self.masks, self.pack, self.caches, batch,
-                jnp.int32(s), jnp.int32(req.prompt_len + self._n_patches),
-                jnp.asarray(base), jnp.float32(req.temperature),
-                jnp.int32(req.top_k),
-            )
-            if fval is not None:
-                args = args + (jnp.bool_(True), jnp.float32(fval))
-            tok, fin, self.caches = self._prefill_for(
-                req.prompt_len, req.temperature <= 0.0, fval is not None
-            )(*args)
+            if ctx:
+                # shared-prefix hit: run ONLY the suffix through the model
+                slen = req.prompt_len - ctx
+                padded = min(_bucket_len(slen), self.max_len)
+                toks = np.zeros(padded, np.int32)
+                toks[:slen] = np.asarray(req.tokens[ctx:], np.int32)
+                batch = {"tokens": jnp.asarray(toks)[None]}
+                args = (
+                    self.params, self.masks, self.pack, self.caches, batch,
+                    jnp.asarray(self.tables["global"][s]), jnp.int32(ctx),
+                    jnp.int32(slen), jnp.asarray(base),
+                    jnp.float32(req.temperature), jnp.int32(req.top_k),
+                )
+                if fval is not None:
+                    args = args + (jnp.bool_(True), jnp.float32(fval))
+                tok, fin, self.caches = _suffix_prefill_fn(
+                    self.cfg, padded, req.temperature <= 0.0, fval is not None
+                )(*args)
+            else:
+                toks = np.zeros(self._padded_len(req.prompt_len), np.int32)
+                toks[: req.prompt_len] = np.asarray(req.tokens, np.int32)
+                batch = {"tokens": jnp.asarray(toks)[None]}
+                if req.patches is not None:
+                    batch["patches"] = jnp.asarray(req.patches)[None]
+                tables = (
+                    {g: jnp.asarray(self.tables[g][s]) for g in self.tables}
+                    if self.paged and self.pools else None
+                )
+                args = (
+                    self.params, self.masks, self.pack, self.caches, batch,
+                    jnp.int32(s), jnp.int32(req.prompt_len + self._n_patches),
+                    jnp.asarray(base), jnp.float32(req.temperature),
+                    jnp.int32(req.top_k), tables,
+                )
+                if fval is not None:
+                    args = args + (jnp.bool_(True), jnp.float32(fval))
+                tok, fin, self.caches = self._prefill_for(
+                    req.prompt_len, req.temperature <= 0.0, fval is not None
+                )(*args)
             self.n_prefills += 1
             tok = int(tok)  # blocks on the prefill -> post-compute timestamps
             t = clock() if clock is not None else now
@@ -334,6 +671,10 @@ class ServeEngine:
                 # anywhere but the queue's books
                 self._quarantine(req, s, t, finished, where="prefill")
                 continue
+            if self.paged and self.pools and not ctx:
+                # publish the (now finite-verified) prefix pages for reuse —
+                # a quarantined prefill's garbage pages are never registered
+                self._register_prefix(req, s)
             req.generated.append(tok)
             req.slot = s
             req.status = Status.DECODE
@@ -360,6 +701,8 @@ class ServeEngine:
     def _release(self, req: Request, now: float) -> None:
         s = req.slot
         self.queue.finish(req, now)
+        if self.paged and self.pools:
+            self._free_slot_pages(s)
         self.active[s] = False
         self.slot_req[s] = None
         self._device_state = None
@@ -374,6 +717,8 @@ class ServeEngine:
         """
         self.n_quarantined += 1
         self.quarantine_log.append((self.n_steps, req.rid, slot))
+        if self.paged and self.pools:
+            self._free_slot_pages(slot)  # scrub = return the pages too
         self.active[slot] = False
         self.slot_req[slot] = None
         self._device_state = None
@@ -433,9 +778,16 @@ class ServeEngine:
         else:
             fn = _decode_fn(self.cfg, greedy, True)
             extra = (jnp.asarray(fault[0]), jnp.asarray(fault[1]))
+        tabs = None
+        if self.paged and self.pools:
+            if self._device_tables is None:  # a table row changed: re-upload
+                self._device_tables = {
+                    g: jnp.asarray(t) for g, t in self.tables.items()
+                }
+            tabs = self._device_tables
         nxt, finite, self.caches, tok_d, pos_d, gen_d = fn(
             self.params, self.masks, self.pack, self.caches,
-            tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d, *extra,
+            tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d, tabs, *extra,
         )
         self._device_state = (tok_d, pos_d, act_d, keys_d, gen_d, temp_d, topk_d)
         nxt = np.asarray(nxt)  # blocks on the decode -> post-compute timestamp
@@ -497,7 +849,7 @@ class ServeEngine:
              if r.t_admitted is not None], np.float64
         )
         pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
-        return {
+        out = {
             "requests": len(done),
             "shed": len(shed),
             "failed": len(failed),
@@ -513,3 +865,11 @@ class ServeEngine:
             "queue_wait_p50_s": pct(waits, 50),
             "queue_wait_p95_s": pct(waits, 95),
         }
+        if self.paged and self.pools:
+            out["prefix_hits"] = self.n_prefix_hits
+            out["prefix_misses"] = self.n_prefix_misses
+            out["prefix_entries"] = len(self._prefix_entries)
+            out["kv_forks"] = sum(p.n_forks for p in self.pools.values())
+            out["pages_free"] = {g: p.n_free for g, p in self.pools.items()}
+            out["pages_live"] = {g: p.n_live for g, p in self.pools.items()}
+        return out

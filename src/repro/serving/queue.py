@@ -87,6 +87,11 @@ class Request:
     ttl: Optional[float] = None
     max_retries: Optional[int] = None
     retry_backoff: float = 0.05
+    # shared-prefix declaration (paged engines with prefix_cache > 0): the
+    # first ``share_prefix_len`` prompt tokens are a common template whose
+    # KV pages may be shared copy-on-write across requests hashing to the
+    # same prefix (serving/engine.py#prefix-cache).  0 = no sharing.
+    share_prefix_len: int = 0
     # engine-filled:
     status: Status = Status.QUEUED
     generated: list = dataclasses.field(default_factory=list)

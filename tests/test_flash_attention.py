@@ -325,3 +325,95 @@ def test_validate_attn_kernel():
     with pytest.raises(ValueError, match="pack_width_slack"):
         validate_sparse_kernel(SparseConfig(pack_width_slack=1.5))
     validate_sparse_kernel(SparseConfig(attn_kernel="flash_tight"))
+
+
+# ---------------------------------------------------------------------------
+# paged prefix attention (scalar-prefetched block tables)
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, B, H, KV, sq, n_pages, bs, d, ctx_vals):
+    """Random (q, pool, table, ctx) with per-request prefix depths: each
+    request owns the first ceil(ctx/bs) entries of its table row; the rest
+    carry the sentinel N (unowned) and junk pool contents."""
+    N = B * n_pages
+    q = jax.random.normal(key, (B, H, sq, d), jnp.float32)
+    pk = jax.random.normal(jax.random.fold_in(key, 1), (N, bs, KV, d),
+                           jnp.float32)
+    pv = jax.random.normal(jax.random.fold_in(key, 2), (N, bs, KV, d),
+                           jnp.float32)
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(N)
+    table = np.full((B, n_pages), N, np.int32)
+    ctx = np.asarray(ctx_vals, np.int32)
+    for b in range(B):
+        live = -(-int(ctx[b]) // bs)
+        table[b, :live] = perm[b * n_pages : b * n_pages + live]
+    return q, pk, pv, jnp.asarray(table), jnp.asarray(ctx)
+
+
+def _paged_oracle(q, pk, pv, table, ctx):
+    """Dense jnp reference: gather the table into a contiguous view, mask
+    kpos >= ctx, softmax over the prefix only; rows with ctx == 0 get
+    output 0 and lse == NEG_INF (the merge's 'no history' weight)."""
+    from repro.models.attention import gather_kv_pool
+
+    B, H, sq, d = q.shape
+    view = gather_kv_pool({"k": pk, "v": pv}, table)
+    KV = pk.shape[2]
+    G = H // KV
+    k = jnp.repeat(view["k"].transpose(0, 2, 1, 3), G, axis=1)  # (B,H,S,d)
+    v = jnp.repeat(view["v"].transpose(0, 2, 1, 3), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d)
+    mask = (jnp.arange(k.shape[2])[None] < ctx[:, None])[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, -1)
+    w = jnp.exp(s - m[..., None])
+    l = jnp.sum(jnp.where(mask, w, 0.0), -1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", jnp.where(mask, w, 0.0), v) / jnp.maximum(
+        l[..., None], 1e-30
+    )
+    empty = ctx[:, None, None] == 0
+    lse = jnp.where(empty, -1e30, m + jnp.log(jnp.maximum(l, 1e-30)))
+    return jnp.where(empty[..., None], 0.0, o), lse
+
+
+@pytest.mark.paged
+@pytest.mark.parametrize("G", [1, 4])  # MHA and GQA head folding
+def test_paged_prefix_kernel_matches_oracle(G):
+    """flash_attention_paged == the masked-dense oracle over scattered
+    pages: per-request prefix depths (incl. page-unaligned and the ctx=0
+    empty-history row), sentinel tails, shuffled physical page ids."""
+    from repro.kernels.flash_attention import flash_attention_paged
+
+    KV, d, bs, n_pages = 2, 16, 8, 6
+    H = KV * G
+    q, pk, pv, table, ctx = _paged_case(
+        jax.random.PRNGKey(0), B=4, H=H, KV=KV, sq=5, n_pages=n_pages,
+        bs=bs, d=d, ctx_vals=[0, 3, 8 * 3, 8 * 6 - 2],
+    )
+    o, lse = flash_attention_paged(q, pk, pv, table, ctx, bq=16,
+                                   interpret=True)
+    o_ref, lse_ref = _paged_oracle(q, pk, pv, table, ctx)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.paged
+def test_paged_prefix_empty_history_merge_weight_vanishes():
+    """The ctx==0 lse sentinel must underflow to weight EXACTLY 0 in the
+    two-phase logsumexp merge, so a no-history row's merged output is
+    bit-identical to its self-attention output alone."""
+    from repro.kernels.flash_attention import flash_attention_paged
+
+    q, pk, pv, table, ctx = _paged_case(
+        jax.random.PRNGKey(3), B=2, H=2, KV=2, sq=4, n_pages=3, bs=8, d=16,
+        ctx_vals=[0, 0],
+    )
+    o, lse = flash_attention_paged(q, pk, pv, table, ctx, bq=16,
+                                   interpret=True)
+    assert np.all(np.asarray(o) == 0.0)
+    l_self = jnp.zeros(o.shape[:3])  # any finite self-phase lse
+    w_hist = jnp.exp(lse - jnp.maximum(lse, l_self))
+    assert np.all(np.asarray(w_hist) == 0.0)

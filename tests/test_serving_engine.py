@@ -545,3 +545,200 @@ def test_poisson_arrivals_shape_and_burst():
     b = poisson_arrivals(100, 50.0, seed=1)
     assert b.shape == (100,) and np.all(np.diff(b) >= 0)
     assert 100 / 50.0 * 0.3 < b[-1] < 100 / 50.0 * 3.0  # ~n/rate seconds
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: block-table engine == contiguous engine == lockstep
+# ---------------------------------------------------------------------------
+
+def _drain(engine, max_steps=2000):
+    while len(engine.queue) or engine.active.any():
+        engine.step(0.0)
+        max_steps -= 1
+        assert max_steps > 0, "engine failed to drain"
+    return {r.rid: list(r.generated) for r in engine.queue.done}
+
+
+def _run_both(cfg, params, reqs, *, capacity, max_len, page_size=8,
+              masks=None, pack=None, **paged_kw):
+    """(contiguous streams, paged streams, paged engine) on one workload."""
+    import copy
+    base = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                       masks=masks, pack=pack)
+    for r in copy.deepcopy(reqs):
+        base.submit(r)
+    paged = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                        masks=masks, pack=pack, paged=True,
+                        page_size=page_size, **paged_kw)
+    for r in reqs:
+        paged.submit(r)
+    return _drain(base), _drain(paged), paged
+
+
+@pytest.mark.paged
+def test_paged_engine_identical_with_ring_wrap_and_recycling():
+    """Acceptance: the paged engine (all-local SWA config — every cache a
+    ring that WRAPS past cfg.window) is token-identical to the contiguous
+    engine AND to dedicated lockstep sessions, across slot recycling; the
+    pools drain to empty afterwards."""
+    cfg = _cfg()
+    assert cfg.window == 16
+    params = _params(cfg)
+    max_len = 64
+    shapes = [(4, 24), (7, 20), (11, 3), (5, 12), (9, 25), (6, 1)]
+    reqs = [
+        Request(rid=i, tokens=_prompt(cfg, L, seed=i), max_new_tokens=g)
+        for i, (L, g) in enumerate(shapes)
+    ]
+    refs = {
+        r.rid: _lockstep_tokens(cfg, params, r.tokens, r.max_new_tokens, max_len)
+        for r in reqs
+    }
+    base, paged, eng = _run_both(cfg, params, reqs, capacity=2, max_len=max_len)
+    assert base == refs and paged == refs
+    # slots really recycled through the page pools
+    slots = [s for _, s in eng.slot_history]
+    assert len(slots) == 6 and set(slots) == {0, 1}
+    eng.check_pool_accounting()
+    for pool in eng.pools.values():
+        assert pool.n_live == 0  # every page returned on release
+
+
+@pytest.mark.paged
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b", "qwen2-moe-a2.7b"])
+def test_paged_engine_recurrent_and_moe_families(arch):
+    """Paged == contiguous token streams for the SSM-hybrid (paged KV +
+    slot-batched recurrent state side by side), xLSTM (no KV at all — the
+    paged engine degenerates gracefully) and MoE families."""
+    cfg = dataclasses.replace(
+        get_config(arch, smoke=True), dtype="float32", moe_capacity_factor=16.0
+    )
+    params = _params(cfg)
+    shapes = [(3, 6), (8, 4), (5, 7)]
+    reqs = [
+        Request(rid=i, tokens=_prompt(cfg, L, seed=30 + i), max_new_tokens=g)
+        for i, (L, g) in enumerate(shapes)
+    ]
+    base, paged, eng = _run_both(cfg, params, reqs, capacity=2, max_len=32)
+    assert base == paged
+    eng.check_pool_accounting()
+
+
+@pytest.mark.paged
+def test_paged_engine_block_sparse_pack_threaded():
+    """Paged addressing composes with kernel-dispatch serving: raw weights +
+    masks + PackState, tokens identical to the contiguous engine."""
+    cfg, st = _bs_state()
+    params, masks, pack = st["params"], st["masks"], st["pack"]
+    shapes = [(4, 5), (9, 14), (6, 8)]
+    reqs = [
+        Request(rid=i, tokens=_prompt(cfg, L, seed=20 + i), max_new_tokens=g)
+        for i, (L, g) in enumerate(shapes)
+    ]
+    base, paged, eng = _run_both(
+        cfg, params, reqs, capacity=2, max_len=48, masks=masks, pack=pack
+    )
+    assert base == paged
+    eng.check_pool_accounting()
+
+
+def _shared_prefix_reqs(cfg, prefix, n, *, gen=6, seed=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(1, 12))).astype(np.int32)
+        reqs.append(Request(
+            rid=rid0 + i, tokens=np.concatenate([prefix, suffix]),
+            max_new_tokens=gen, share_prefix_len=len(prefix),
+        ))
+    return reqs
+
+
+@pytest.mark.paged
+def test_shared_prefix_admission_token_identical_with_cow():
+    """Shared-prefix requests (one 24-token template, random suffixes,
+    page_size 8 => 3 shared pages) decode token-identical to a no-sharing
+    paged engine; the prefix cache takes hits, refcounts prove sharing, and
+    the boundary-page COW fork fires for a whole-prompt-prefix request."""
+    cfg = dataclasses.replace(
+        get_config("mistral-large-123b", smoke=True), dtype="float32"
+    )
+    params = _params(cfg)
+    prefix = _prompt(cfg, 24, seed=99)
+    reqs = _shared_prefix_reqs(cfg, prefix, 6, seed=4)
+    # rid 6: prompt == prefix exactly -> ctx clips to prompt_len-1, which is
+    # page-UNALIGNED: the last shared page must FORK, not be written through
+    reqs.append(Request(rid=6, tokens=prefix.copy(), max_new_tokens=4,
+                        share_prefix_len=24))
+    base, shared, eng = _run_both(
+        cfg, params, reqs, capacity=2, max_len=64, prefix_cache=4
+    )
+    assert base == shared
+    assert eng.n_prefix_hits >= 5  # first request misses + registers
+    assert eng.pools["global"].n_forks >= 1
+    eng.check_pool_accounting()
+    # only the registered prefix entry still holds pages
+    held = sum(len(e.pages) for e in eng._prefix_entries.values())
+    assert eng.pools["global"].n_live == len(
+        set().union(*(e.pages for e in eng._prefix_entries.values()))
+    ) and held == 24 // 8
+    # refcount evidence DURING service: admit two sharers, stop mid-flight
+    eng2 = ServeEngine(cfg, params, capacity=2, max_len=64, paged=True,
+                       page_size=8, prefix_cache=4)
+    for r in _shared_prefix_reqs(cfg, prefix, 2, gen=20, seed=8, rid0=50):
+        eng2.submit(r)
+    eng2.step(0.0)
+    shared_pages = next(iter(eng2._prefix_entries.values())).pages
+    # cache ref + both slots' refs on every fully-shared page
+    assert all(eng2.pools["global"].refcount[p] == 3 for p in shared_pages[:-1])
+    eng2.check_pool_accounting()
+
+
+@pytest.mark.paged
+def test_paged_pool_capacity_bounds_submit_and_defers_admission():
+    """submit() enforces the PAGE bound (an undersized pool rejects what the
+    max_len row bound would admit); admission under pool pressure defers
+    (requeue) instead of deadlocking and completes once pages free."""
+    cfg = dataclasses.replace(
+        get_config("mistral-large-123b", smoke=True), dtype="float32"
+    )
+    params = _params(cfg)
+    # pool of 6 pages @ 8 = 48 positions, but max_len 64 rows
+    eng = ServeEngine(cfg, params, capacity=2, max_len=64, paged=True,
+                      page_size=8, n_blocks=6)
+    # 49 positions -> 7 pages > 6: reject at submit even though 49 <= 64
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(rid=0, tokens=_prompt(cfg, 41, 1),
+                           max_new_tokens=8))
+    # exact-capacity boundary: 48 positions == 6 pages is admissible
+    fits = Request(rid=1, tokens=_prompt(cfg, 40, 2), max_new_tokens=8)
+    # ...but only alone: this second request must WAIT for the first
+    waits = Request(rid=2, tokens=_prompt(cfg, 8, 3), max_new_tokens=8)
+    refs = {
+        r.rid: _lockstep_tokens(cfg, params, r.tokens, r.max_new_tokens, 64)
+        for r in (fits, waits)
+    }
+    assert eng.submit(fits) and eng.submit(waits)
+    eng.step(0.0)
+    assert fits.slot is not None and waits.slot is None  # deferred, not shed
+    assert waits.status is Status.QUEUED
+    streams = _drain(eng)
+    assert streams == refs
+    eng.check_pool_accounting()
+    assert eng.pools["global"].n_live == 0
+
+
+@pytest.mark.paged
+def test_paged_engine_rejects_bad_geometry():
+    cfg = _cfg()
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="page_size"):
+        ServeEngine(cfg, params, capacity=2, max_len=40, paged=True,
+                    page_size=12)  # 12 divides neither ring 16 nor row 40
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, capacity=2, max_len=32, prefix_cache=2)
+    with pytest.raises(ValueError, match="all-global"):
+        # danube is all-LOCAL: ring caches cannot host shared prefixes
+        ServeEngine(cfg, params, capacity=2, max_len=32, paged=True,
+                    page_size=8, prefix_cache=2)

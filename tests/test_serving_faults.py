@@ -388,3 +388,58 @@ def test_run_stamps_wall_s_when_everything_sheds():
     assert stats["requests"] == 0 and stats["shed"] == 2
     assert stats["wall_s"] >= 0.0 and stats["tok_per_s"] == 0.0
     assert all(r.status is Status.SHED for r in eng.queue.done)
+
+
+# ---------------------------------------------------------------------------
+# paged pools under chaos: quarantine/retry storms must not leak pages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paged
+def test_paged_pools_leak_free_under_quarantine_storm():
+    """Every path a request can take out of a slot — DONE, decode-step
+    quarantine (with retries), prefill quarantine through retry exhaustion
+    to FAILED, deadline shed — must return its pages: after the storm
+    drains, live pages are EXACTLY the prefix cache's holds and the pool
+    books balance (ServeEngine.check_pool_accounting)."""
+    cfg = dataclasses.replace(
+        get_config("mistral-large-123b", smoke=True), dtype="float32"
+    )
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = []
+    for i in range(10):
+        suffix = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(1, 8))).astype(np.int32)
+        reqs.append(Request(
+            rid=i, tokens=np.concatenate([prefix, suffix]),
+            max_new_tokens=6, share_prefix_len=16, max_retries=1,
+            retry_backoff=0.5, ttl=200.0,
+        ))
+    faults = FaultInjector(seed=3)
+    faults.poison_random(6, max_step=25, capacity=3)  # decode quarantines
+    faults.poison_prefill(4)  # rid 4: every admission dies -> FAILED
+    faults.poison_prefill(7)
+    eng = ServeEngine(cfg, params, capacity=3, max_len=32, faults=faults,
+                      paged=True, page_size=8, prefix_cache=2,
+                      max_retries=1)
+    for r in reqs:
+        eng.submit(r)
+    _drain(eng)
+    assert eng.n_quarantined > 0 and eng.n_retries_total > 0
+    by_status = {s: [r for r in eng.queue.done if r.status is s]
+                 for s in (Status.DONE, Status.FAILED, Status.SHED)}
+    assert {r.rid for r in by_status[Status.FAILED]} == {4, 7}
+    assert len(by_status[Status.DONE]) == 8
+    # the leak audit: slot references are all gone, pool books are exact
+    eng.check_pool_accounting()
+    cache_pages = {p for e in eng._prefix_entries.values() for p in e.pages}
+    assert eng.pools["global"].n_live == len(cache_pages)
+    assert all(not sp for sp in eng.slot_pages)
+    # quarantined prefills never published garbage pages into the cache:
+    # dropping the surviving entries drains the pool completely
+    while eng._prefix_entries:
+        eng._evict_prefix()
+    eng.check_pool_accounting()
+    assert eng.pools["global"].n_live == 0
+    assert eng.pools["global"].n_free == eng.pools["global"].n_blocks
