@@ -4,9 +4,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-kernels test-serve test-chaos test-paged docs-check bench-kernels bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke
+.PHONY: verify test test-kernels test-serve test-chaos test-paged test-topology docs-check bench-kernels bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke bench-methods bench-methods-smoke
 
-verify: test docs-check bench-serve-smoke bench-chaos-smoke
+verify: test docs-check bench-serve-smoke bench-chaos-smoke bench-methods-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +29,13 @@ test-serve:
 # helpers (models/attention.py pools, kernels/flash_attention.py paged path)
 test-paged:
 	$(PY) -m pytest -x -q -m paged
+
+# topology tier only: mask-update invariants (cardinality, zero-init grows,
+# Top-KAST A ⊆ B superset bounds, determinism), superset-gradient parity vs
+# dense, methods_comparison telemetry smoke — re-run after touching
+# core/{rigl,topology,pack}.py or the training-step dispatch plumbing
+test-topology:
+	$(PY) -m pytest -x -q -m topology
 
 docs-check:
 	$(PY) scripts/check_doc_links.py
@@ -60,3 +67,14 @@ bench-chaos:
 
 bench-chaos-smoke:
 	$(PY) -m benchmarks.chaos_bench --smoke-bench --out /tmp/BENCH_chaos_smoke.json
+
+# methods comparison (paper Fig 2-top-right) with per-method topology
+# telemetry columns; regenerates BENCH_methods.json
+bench-methods:
+	$(PY) -m benchmarks.methods_comparison
+
+# tiny run of the same path for `make verify` (2 mask updates per method;
+# asserts nothing beyond finishing — the finiteness gate lives in
+# tests/test_topology_invariants.py)
+bench-methods-smoke:
+	$(PY) -m benchmarks.methods_comparison --smoke-bench --out /tmp/BENCH_methods_smoke.json

@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import (
     LayerSpec,
     SparseAlgo,
+    TopologyTrace,
     UpdateSchedule,
     apply_masks,
     dense_to_sparse_grad,
@@ -25,6 +26,7 @@ from repro.core import (
     init_masks,
     rigl_update,
     snip_masks,
+    topkast_backward_masks,
 )
 from repro.core.flops import DenseSpec, method_train_flops, model_fwd_flops, sparse_fwd_flops
 from repro.core.pruning import PruningSchedule, prune_step
@@ -53,6 +55,7 @@ class Result:
     test_flops_mult: float
     masks: dict
     params: dict
+    topology: dict = dataclasses.field(default_factory=dict)
 
 
 def _init(key, dims=(D_IN, D_H, D_OUT)):
@@ -79,6 +82,7 @@ def train_mlp(
     init_params=None,
     init_masks_override=None,
     batch: int = 256,
+    backward_extra: float = 0.1,
 ) -> Result:
     key = jax.random.PRNGKey(seed)
     teacher = make_teacher(jax.random.PRNGKey(99), dims[0], 128, dims[2], teacher_sparsity)
@@ -109,44 +113,84 @@ def train_mlp(
     dense_mom = jax.tree_util.tree_map(jnp.zeros_like, params)
 
     sched = UpdateSchedule(delta_t=delta_t, t_end=int(0.75 * steps), alpha=alpha, decay=decay)
-    algo = SparseAlgo(method=method if method in ("rigl", "set", "snfs") else "static", schedule=sched)
+    algo = SparseAlgo(
+        method=method if method in ("rigl", "set", "snfs", "topkast") else "static",
+        schedule=sched,
+        backward_extra=backward_extra,
+    )
     prune_sched = PruningSchedule(sparsity, begin_step=steps // 8, end_step=int(0.75 * steps), prune_every=delta_t)
 
+    # Top-KAST trains on the backward superset B ⊇ A: the optimizer sees
+    # gradients masked to B (exploration set B\A learns while contributing
+    # zero forward FLOPs); every other method masks gradients to A itself.
+    bwd_masks = None
+    if method == "topkast":
+        bwd_masks = topkast_backward_masks(
+            params, masks, backward_extra, jax.random.fold_in(key, 2)
+        )
+
     @jax.jit
-    def step_fn(params, masks, mom, dense_mom, batch_):
+    def step_fn(params, masks, grad_masks, mom, dense_mom, batch_):
         w_eff = apply_masks(params, masks)
         loss, g = jax.value_and_grad(mlp_loss)(w_eff, batch_)
-        gs = dense_to_sparse_grad(g, masks)
+        gs = dense_to_sparse_grad(g, grad_masks)
         mom2 = jax.tree_util.tree_map(lambda m, gg: momentum * m + gg, mom, gs)
         params2 = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mom2)
         dm2 = jax.tree_util.tree_map(lambda m, gg: momentum * m + gg, dense_mom, g)
         return params2, mom2, dm2, loss
 
     @jax.jit
-    def update_fn(params, masks, mom, dense_mom, t, batch_):
+    def update_fn(params, masks, bwd_masks, mom, dense_mom, t, batch_):
         w_eff = apply_masks(params, masks)
         g = jax.grad(mlp_loss)(w_eff, batch_)
         p2, m2, grown = rigl_update(
-            params, masks, g, t, algo, jax.random.fold_in(key, t), dense_momentum=dense_mom
+            params, masks, g, t, algo, jax.random.fold_in(key, t),
+            dense_momentum=dense_mom, bwd_masks=bwd_masks,
         )
         mom2 = jax.tree_util.tree_map(
             lambda m, gr: jnp.where(gr, 0.0, m), mom, grown
         )
         return p2, m2, mom2
 
+    @jax.jit
+    def refresh_superset_fn(params, masks, bwd_masks, mom, t):
+        b2 = topkast_backward_masks(
+            params, masks, backward_extra, jax.random.fold_in(key, 2**20 + t)
+        )
+        # leavers B_old \ B_new fall out of the trainable set: zero their
+        # weights and momentum so re-entry later starts from scratch.
+        p2 = jax.tree_util.tree_map(
+            lambda w, bo, bn: jnp.where(bo & ~bn, 0.0, w).astype(w.dtype),
+            params, bwd_masks, b2,
+        )
+        mom2 = jax.tree_util.tree_map(
+            lambda m, bn: jnp.where(bn, m, 0.0), mom, b2
+        )
+        return p2, b2, mom2
+
+    topo_trace = TopologyTrace()
+    grad_masks = bwd_masks if method == "topkast" else masks
     for t in range(steps):
         b = teacher_batch(teacher, t, batch)
         if (
-            method in ("rigl", "set", "snfs")
+            method in ("rigl", "set", "snfs", "topkast")
             and t > 0
             and t % delta_t == 0
             and t < sched.t_end
         ):
-            params, masks, mom = update_fn(params, masks, mom, dense_mom, t, b)
+            prev = topo_trace.snapshot(masks)
+            params, masks, mom = update_fn(params, masks, bwd_masks, mom, dense_mom, t, b)
+            topo_trace.record(prev, masks, step=t)
+            if method == "topkast":
+                params, bwd_masks, mom = refresh_superset_fn(params, masks, bwd_masks, mom, t)
+            grad_masks = bwd_masks if method == "topkast" else masks
         else:
-            params, mom, dense_mom, _ = step_fn(params, masks, mom, dense_mom, b)
+            params, mom, dense_mom, _ = step_fn(params, masks, grad_masks, mom, dense_mom, b)
         if method == "pruning" and t % prune_sched.prune_every == 0 and t >= prune_sched.begin_step:
+            prev = topo_trace.snapshot(masks)
             params, masks = prune_step(params, masks, t, prune_sched)
+            topo_trace.record(prev, masks, step=t)
+            grad_masks = masks
 
     # eval on held-out batches
     w_eff = apply_masks(params, masks)
@@ -159,12 +203,20 @@ def train_mlp(
     f_d = model_fwd_flops(base)
     nnz = {n: float(1.0 - jnp.mean(masks[n].astype(jnp.float32))) for n in masks}
     f_s = sparse_fwd_flops(layers, nnz)
+    f_s_bwd = None
+    if bwd_masks is not None:
+        bwd_sp = {
+            n: float(1.0 - jnp.mean(bwd_masks[n].astype(jnp.float32)))
+            for n in bwd_masks
+        }
+        f_s_bwd = sparse_fwd_flops(layers, bwd_sp)
     # small_dense trains a narrower DENSE net: cost 3*f_small == "static" form
     m = method if method in (
-        "dense", "static", "snip", "set", "snfs", "rigl", "pruning"
+        "dense", "static", "snip", "set", "snfs", "rigl", "pruning", "topkast"
     ) else "static"
     train_f = method_train_flops(m, f_d, f_s, delta_t=delta_t,
-                                 pruning_schedule=prune_sched, total_steps=steps)
+                                 pruning_schedule=prune_sched, total_steps=steps,
+                                 f_sparse_bwd=f_s_bwd)
     return Result(
         method=method,
         sparsity=sparsity,
@@ -173,4 +225,5 @@ def train_mlp(
         test_flops_mult=f_s / f_d,
         masks=jax.device_get(masks),
         params=jax.device_get(params),
+        topology=topo_trace.summary(),
     )

@@ -1,22 +1,41 @@
 """Paper Fig 2-top-right: sparse-training methods at fixed FLOPs.
 
+  PYTHONPATH=src python -m benchmarks.methods_comparison --smoke-bench --out /tmp/m.json
+
 Planted-sparse-teacher task (ground-truth topology known). Expected ordering,
 as in the paper: RigL <= SNFS < SET < Static ~ Small-Dense, with RigL at
-sparse cost while SNFS pays dense-gradient cost.
+sparse cost while SNFS pays dense-gradient cost and Top-KAST stays always
+sparse (fwd at k, wgrad at k+Δ — see docs/training.md).
+
+Each row also carries topology telemetry from core.topology: per-run drop/grow
+totals and mean Jaccard / normalized-Hamming distance per mask update, plus
+final-mask distances vs the RigL reference (cross_method_distances) — where do
+the methods CONVERGE, not just how well do they score.
 """
+import argparse
+import json
+import pathlib
 import time
+
+from repro.core import cross_method_distances
 
 from ._mlp import train_mlp
 
-METHODS = ("dense", "small_dense", "static", "snip", "set", "snfs", "rigl", "pruning")
+METHODS = (
+    "dense", "small_dense", "static", "snip", "set", "snfs", "rigl",
+    "topkast", "pruning",
+)
 
 
-def run(quick=True):
-    steps = 300 if quick else 1500
+def run(quick=True, steps=None, delta_t=25):
+    steps = steps if steps is not None else (300 if quick else 1500)
     rows = []
+    final_masks = {}
     for m in METHODS:
         t0 = time.time()
-        r = train_mlp(method=m, sparsity=0.9, steps=steps, seed=0)
+        r = train_mlp(method=m, sparsity=0.9, steps=steps, delta_t=delta_t, seed=0)
+        final_masks[m] = r.masks
+        topo = r.topology
         rows.append({
             "name": f"methods/{m}",
             "us_per_call": (time.time() - t0) * 1e6 / steps,
@@ -24,6 +43,53 @@ def run(quick=True):
                 "final_loss": round(r.final_loss, 5),
                 "train_flops_mult": round(r.train_flops_mult, 4),
                 "test_flops_mult": round(r.test_flops_mult, 4),
+                "n_updates": topo["n_updates"],
+                "dropped_total": topo["dropped_total"],
+                "grown_total": topo["grown_total"],
+                "jaccard_dist_mean": round(topo["jaccard_dist_mean"], 5),
+                "nhd_mean": round(topo["nhd_mean"], 5),
+                "graph_edit_dist_total": topo["graph_edit_dist_total"],
             },
         })
+    vs_ref = cross_method_distances(final_masks, reference="rigl")
+    for row in rows:
+        m = row["name"].split("/", 1)[1]
+        if m in vs_ref:
+            row["derived"].update(
+                {k: round(v, 5) for k, v in vs_ref[m].items()}
+            )
     return rows
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--delta-t", type=int, default=25)
+    p.add_argument("--out", default="BENCH_methods.json")
+    p.add_argument("--smoke-bench", action="store_true",
+                   help="tiny run for make verify (2 mask updates per method)")
+    args = p.parse_args()
+    if args.smoke_bench:
+        args.steps, args.delta_t = 60, 20  # updates at t=20, 40 (t_end=45)
+    rows = run(steps=args.steps, delta_t=args.delta_t)
+    out = {
+        "meta": {
+            "steps": args.steps,
+            "delta_t": args.delta_t,
+            "smoke_bench": bool(args.smoke_bench),
+        },
+        "rows": rows,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=1))
+    for row in rows:
+        d = row["derived"]
+        print(f"{row['name']:24s} loss {d['final_loss']:9.5f}  "
+              f"train x{d['train_flops_mult']:.3f}  "
+              f"updates {d['n_updates']:2d}  "
+              f"jaccard {d['jaccard_dist_mean']:.3f}  "
+              f"nhd {d['nhd_mean']:.4f}")
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

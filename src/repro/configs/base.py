@@ -28,10 +28,19 @@ class SparseConfig:
       distribution     how S is distributed across layers: 'uniform', 'er'
                        (Erdos-Renyi) or 'erk' (ER-kernel, paper default).
       method           'rigl' (grow by |dense grad|), 'set' (random grow),
-                       'snfs' (grow by |dense momentum|; incompatible with
-                       sparse kernels — needs a dense backward every step),
-                       'static' (fixed topology).  The drivers also accept
-                       'snip' and 'pruning' via their own code paths.
+                       'snfs' (grow by |dense momentum|), 'topkast' (forward
+                       top-k, backward top-(k+Δ) superset — Jayakumar et al.;
+                       always-sparse fwd AND bwd), 'static' (fixed topology).
+                       Under kernel dispatch, rigl/snfs take their dense-side
+                       grow scores from the Top-KAST backward superset
+                       gradient instead of a dense backward (docs/training.md).
+                       The drivers also accept 'snip' and 'pruning' via their
+                       own code paths.
+      backward_extra   Top-KAST superset breadth Δ as a fraction of each
+                       layer's units (elements, or blocks in block mode):
+                       |B| = min(total, |A| + ceil(backward_extra * total)).
+                       Consumed whenever the state carries backward masks —
+                       method='topkast', or rigl/snfs under a sparse kernel.
       delta_t          steps between topology updates (drop/grow cadence);
                        also the amortization window for every host-side
                        topology cost (dense backward, PackState repack).
@@ -96,7 +105,8 @@ class SparseConfig:
 
     sparsity: float = 0.8
     distribution: str = "erk"  # uniform | er | erk
-    method: str = "rigl"  # rigl | set | snfs | static
+    method: str = "rigl"  # rigl | set | snfs | topkast | static
+    backward_extra: float = 0.1  # Top-KAST superset Δ fraction
     delta_t: int = 100
     alpha: float = 0.3
     t_end_fraction: float = 0.75
@@ -121,6 +131,11 @@ def validate_sparse_kernel(sp: SparseConfig) -> None:
         "dense", "flash", "flash_tight"
     ):
         raise ValueError(f"unknown sparse.attn_kernel {sp.attn_kernel!r}")
+    if not 0.0 <= getattr(sp, "backward_extra", 0.1) <= 1.0:
+        raise ValueError(
+            f"sparse.backward_extra must be in [0, 1] "
+            f"(got {sp.backward_extra!r})"
+        )
     if not 0.0 <= getattr(sp, "pack_width_slack", 0.0) <= 1.0:
         raise ValueError(
             f"sparse.pack_width_slack must be in [0, 1] "

@@ -11,6 +11,7 @@ from .masks import (  # noqa: F401
     block_mask_of,
     init_masks,
     mask_stats,
+    mask_subset,
     nnz,
     random_mask,
     tree_paths,
@@ -22,6 +23,7 @@ from .attn_sched import (  # noqa: F401
 )
 from .pack import (  # noqa: F401
     PackIntegrityError,
+    build_bwd_carrier,
     build_pack_state,
     pack_mismatch,
     pack_stats,
@@ -29,5 +31,20 @@ from .pack import (  # noqa: F401
     validate_pack,
 )
 from .pruning import PruningSchedule, prune_step, snip_masks  # noqa: F401
-from .rigl import SparseAlgo, dense_to_sparse_grad, rigl_update, rigl_update_layer  # noqa: F401
+from .rigl import (  # noqa: F401
+    SparseAlgo,
+    dense_to_sparse_grad,
+    rigl_update,
+    rigl_update_layer,
+    topkast_backward_masks,
+)
+from .topology import (  # noqa: F401
+    TopologyTrace,
+    cross_method_distances,
+    drop_grow_counts,
+    graph_edit_distance,
+    jaccard_distance,
+    normalized_hamming_distance,
+    topology_delta,
+)
 from .schedules import UpdateSchedule, cosine_decay  # noqa: F401

@@ -104,12 +104,23 @@ def method_train_flops(
     delta_t: int = 100,
     pruning_schedule: PruningSchedule | None = None,
     total_steps: int | None = None,
+    f_sparse_bwd: float | None = None,
 ) -> float:
-    """Average per-step per-sample training FLOPs (Appendix H)."""
+    """Average per-step per-sample training FLOPs (Appendix H).
+
+    f_sparse_bwd: per-sample FLOPs of a backward pass at the Top-KAST
+    superset density (k+Δ active) — defaults to f_sparse (Δ = 0).  Only
+    'topkast' consumes it: fwd + dgrad run at forward density (2*f_sparse),
+    wgrad at superset density, every step, no dense terms anywhere.
+    """
     if method in ("dense", "small_dense"):
         return 3.0 * f_dense
     if method in ("static", "snip", "set"):
         return 3.0 * f_sparse
+    if method == "topkast":
+        return 2.0 * f_sparse + (
+            f_sparse if f_sparse_bwd is None else f_sparse_bwd
+        )
     if method == "snfs":
         return 2.0 * f_sparse + f_dense
     if method == "rigl":

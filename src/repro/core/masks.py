@@ -21,6 +21,7 @@ __all__ = [
     "block_mask_of",
     "init_masks",
     "apply_masks",
+    "mask_subset",
     "mask_stats",
     "nnz",
 ]
@@ -140,6 +141,27 @@ def apply_masks(params, masks):
     return jax.tree_util.tree_map(
         _apply, params, masks, is_leaf=lambda x: x is None
     )
+
+
+def mask_subset(inner, outer) -> bool:
+    """True iff every active leaf edge of ``inner`` is active in ``outer``.
+
+    The forward ⊆ backward containment of a Top-KAST mask pair (core/rigl.py
+    ``topkast_backward_masks``); pack builds and the topology test tier check
+    it with this one definition.  None leaves must agree (both dense).
+    """
+    fa = jax.tree_util.tree_flatten(inner, is_leaf=lambda x: x is None)[0]
+    fb = jax.tree_util.tree_flatten(outer, is_leaf=lambda x: x is None)[0]
+    if len(fa) != len(fb):
+        return False
+    for a, b in zip(fa, fb):
+        if a is None and b is None:
+            continue
+        if a is None or b is None:
+            return False
+        if bool(np.any(np.asarray(a, bool) & ~np.asarray(b, bool))):
+            return False
+    return True
 
 
 def nnz(masks) -> int:

@@ -46,6 +46,24 @@ Grouped weight banks (3-D masks: MoE per-expert (E, d, ff), xLSTM per-head
 ridx/rcnt — per-group CSC/CSR at ONE shared width, consumed by the grouped
 kernels in a single launch (docs/kernels.md#grouped-packs).
 
+Top-KAST backward-superset pair (docs/training.md#topkast): when the state
+carries backward masks B ⊇ A (method='topkast', or rigl/snfs under kernel
+dispatch — core/rigl.py ``topkast_backward_masks``), every entry additionally
+packs B's CSC as a SECOND, wider view:
+
+  {"bidx": (N/bn, bwidth) int32,  # superset K-block ids — drives the wgrad
+   "bcnt": (N/bn,) int32,         #   grid, so dw covers the whole (k+Δ) set
+   "bnnz": () int32}              # superset active blocks
+
+The forward/dgrad grids keep running on the tight idx/ridx views; only wgrad
+widens to bidx — ops.block_sparse_linear routes to the Top-KAST custom VJP
+exactly when these fields are present.  ``pack_entry`` refuses a superset
+that does not contain the forward topology (the containment is what makes
+the superset gradient exact on B's support).  With kernel='masked' the
+analogous carrier entry is just ``{"bwd_mask": bool (K, N)}``
+(``build_bwd_carrier``): the masked kernels take elementwise masks directly,
+no packing needed.
+
 Width policy: ``width = max_j cnt[j]`` (tight; same for ``row_width`` over
 ``rcnt``), but never below the width of ``prev`` when refreshing — widths only
 ever grow within a run, so jit retraces on topology updates are bounded by the
@@ -70,6 +88,7 @@ from .masks import block_mask_of, path_name
 
 __all__ = [
     "build_pack_state",
+    "build_bwd_carrier",
     "refresh_pack_state",
     "pack_entry",
     "pack_mismatch",
@@ -93,8 +112,14 @@ class PackIntegrityError(ValueError):
 
 
 def is_pack_entry(x) -> bool:
-    """Leaf predicate for pack pytrees (an entry dict or a None leaf)."""
-    return x is None or (isinstance(x, dict) and "idx" in x and "cnt" in x)
+    """Leaf predicate for pack pytrees (an entry dict or a None leaf).
+
+    Covers both the block-sparse CSC/CSR entries and the masked-kernel
+    backward-superset carrier (``{"bwd_mask": ...}``, build_bwd_carrier).
+    """
+    return x is None or (
+        isinstance(x, dict) and (("idx" in x and "cnt" in x) or "bwd_mask" in x)
+    )
 
 
 # Param subtrees whose 2-D weight einsums dispatch through layers.linear /
@@ -139,7 +164,7 @@ def slack_width(width: int, worst: int, slack: float) -> int:
 
 def pack_entry(
     mask, block_shape, *, min_width: int = 0, min_row_width: int = 0,
-    slack: float = 0.0, name: str = "?",
+    slack: float = 0.0, name: str = "?", bwd_mask=None, min_bwd_width: int = 0,
 ):
     """Host-pack ONE mask leaf into a PackState entry (CSC + CSR views).
 
@@ -156,6 +181,13 @@ def pack_entry(
     and so is an all-zero GROUP of a grouped bank: a dead expert/head outputs
     zeros, which is semantically well-defined under MoE routing — only the
     bank-level all-zero case raises.
+
+    bwd_mask: the layer's Top-KAST backward superset B ⊇ A — packed as a
+    second CSC view (``bidx``/``bcnt``/``bnnz``) driving the wgrad grid.
+    Raises PackIntegrityError when B does not contain the forward mask at
+    block granularity: a forward-active block missing from the wgrad grid
+    would silently zero that block's gradient (the exact silent-wrong-answer
+    class validate_pack exists to make loud).
     """
     from ..kernels.block_sparse_matmul import (
         pack_block_mask,
@@ -188,7 +220,7 @@ def pack_entry(
     else:
         idx, cnt = pack_block_mask(bm, max_count=width)
         ridx, rcnt = pack_block_mask_rows(bm, max_count=row_width)
-    return {
+    entry = {
         "idx": idx,
         "cnt": cnt,
         "ridx": ridx,
@@ -196,9 +228,29 @@ def pack_entry(
         "nnz": jnp.int32(total),
         "nkb": jnp.int32(nkb),
     }
+    if bwd_mask is not None:
+        bbm = np.asarray(block_mask_of(np.asarray(bwd_mask, bool), block_shape))
+        if np.any(bm & ~bbm):
+            raise PackIntegrityError(
+                f"PackState: layer {name!r} backward superset does not "
+                "contain its forward topology — wgrad would silently zero "
+                "forward-active blocks; the superset must be rebuilt from "
+                "the CURRENT masks (core/rigl.py::topkast_backward_masks)"
+            )
+        bwidth = slack_width(
+            max(int(bbm.sum(axis=-2).max()), 1, min_bwd_width), nkb, slack
+        )
+        if grouped:
+            bidx, bcnt = pack_group_mask(bbm, max_count=bwidth)
+        else:
+            bidx, bcnt = pack_block_mask(bbm, max_count=bwidth)
+        entry |= {"bidx": bidx, "bcnt": bcnt, "bnnz": jnp.int32(int(bbm.sum()))}
+    return entry
 
 
-def build_pack_state(masks, block_shape, *, prev=None, slack: float = 0.0):
+def build_pack_state(
+    masks, block_shape, *, prev=None, slack: float = 0.0, bwd_masks=None
+):
     """Masks pytree -> PackState pytree (same structure; entry or None leaves).
 
     masks must be CONCRETE (host) arrays — this runs outside jit, on the
@@ -208,9 +260,17 @@ def build_pack_state(masks, block_shape, *, prev=None, slack: float = 0.0):
     topology update shrinks some column's count.
     slack: width hysteresis (SparseConfig.pack_width_slack) — widths round up
     to the next ``slack_width`` step so drifting topologies retrace less.
+    bwd_masks: Top-KAST backward supersets mirroring masks; packed entries
+    additionally carry the superset CSC (``bidx``/``bcnt``/``bnnz``) driving
+    the wgrad grid (docs/training.md#topkast).
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         masks, is_leaf=lambda x: x is None
+    )
+    flat_b = (
+        jax.tree_util.tree_flatten(bwd_masks, is_leaf=lambda x: x is None)[0]
+        if bwd_masks is not None
+        else [None] * len(flat)
     )
     prev_leaves = (
         jax.tree_util.tree_leaves(prev, is_leaf=is_pack_entry)
@@ -218,7 +278,7 @@ def build_pack_state(masks, block_shape, *, prev=None, slack: float = 0.0):
         else [None] * len(flat)
     )
     entries = []
-    for (path, m), pe in zip(flat, prev_leaves):
+    for (path, m), bw, pe in zip(flat, flat_b, prev_leaves):
         name = path_name(path)
         if not _packable(m, block_shape) or not _dispatched(name):
             entries.append(None)
@@ -227,26 +287,55 @@ def build_pack_state(masks, block_shape, *, prev=None, slack: float = 0.0):
         min_rw = (
             int(pe["ridx"].shape[-1]) if pe is not None and "ridx" in pe else 0
         )
+        min_bw = (
+            int(pe["bidx"].shape[-1]) if pe is not None and "bidx" in pe else 0
+        )
         entries.append(
             pack_entry(
                 m, block_shape, min_width=min_w, min_row_width=min_rw,
-                slack=slack, name=name,
+                slack=slack, name=name, bwd_mask=bw, min_bwd_width=min_bw,
             )
         )
     return jax.tree_util.tree_unflatten(treedef, entries)
 
 
-def refresh_pack_state(masks, block_shape, *, prev, slack: float = 0.0):
+def build_bwd_carrier(bwd_masks):
+    """Backward supersets -> masked-kernel carrier pack (docs/training.md).
+
+    kernel='masked' takes elementwise masks directly, so the Top-KAST
+    superset needs no CSC packing — each dispatched leaf just rides along as
+    ``{"bwd_mask": bool (..., K, N)}``; layers.linear routes to the Top-KAST
+    masked VJP when it sees this entry.  Leaves outside the dispatched
+    subtrees (or dense ``None`` leaves) carry ``None``, mirroring
+    ``build_pack_state``'s gating.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        bwd_masks, is_leaf=lambda x: x is None
+    )
+    entries = []
+    for path, m in flat:
+        if m is None or not _dispatched(path_name(path)):
+            entries.append(None)
+            continue
+        entries.append({"bwd_mask": jnp.asarray(m, bool)})
+    return jax.tree_util.tree_unflatten(treedef, entries)
+
+
+def refresh_pack_state(
+    masks, block_shape, *, prev, slack: float = 0.0, bwd_masks=None
+):
     """Re-pack after a topology update (call right after every rigl_step).
 
     Same as build_pack_state but prev is required — refreshing without the
     previous pack would let widths shrink and retrigger jit compilation on
     every update.
     """
-    return build_pack_state(masks, block_shape, prev=prev, slack=slack)
+    return build_pack_state(
+        masks, block_shape, prev=prev, slack=slack, bwd_masks=bwd_masks
+    )
 
 
-def pack_mismatch(masks, pack, block_shape):
+def pack_mismatch(masks, pack, block_shape, bwd_masks=None):
     """Traced-safe exact staleness check: #blocks where pack != masks.
 
     Returns an int32 scalar, 0 iff every pack entry encodes exactly the block
@@ -259,23 +348,40 @@ def pack_mismatch(masks, pack, block_shape):
     ``pack_stale`` metric is noise next to the M-scaled matmuls.  A nonzero
     value means a rigl_step ran without refresh_pack_state and the kernels
     are executing a stale topology (docs/kernels.md#staleness).
+
+    bwd_masks: when given (Top-KAST superset pairs), entries carrying a
+    ``bidx`` view are also checked against the block mask of their backward
+    superset — a stale wgrad grid is just as silently wrong as a stale
+    forward grid.
     """
     from ..kernels.block_sparse_matmul import unpack_block_mask
 
     flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+    flat_b = (
+        jax.tree_util.tree_flatten(bwd_masks, is_leaf=lambda x: x is None)[0]
+        if bwd_masks is not None
+        else [None] * len(flat_m)
+    )
     flat_e = jax.tree_util.tree_leaves(pack, is_leaf=is_pack_entry)
     total = jnp.int32(0)
-    for m, e in zip(flat_m, flat_e):
-        if e is None or not _packable(m, block_shape):
-            continue
-        bm = block_mask_of(m, block_shape)
-        if e["idx"].ndim == 3:  # grouped bank: per-group reconstruction
+
+    def _recount(idx, cnt, bm):
+        if idx.ndim == 3:  # grouped bank: per-group reconstruction
             rec = jax.vmap(
                 lambda i_, c_: unpack_block_mask(i_, c_, bm.shape[-2])
-            )(e["idx"], e["cnt"])
+            )(idx, cnt)
         else:
-            rec = unpack_block_mask(e["idx"], e["cnt"], bm.shape[0])
-        total = total + jnp.sum(rec != bm).astype(jnp.int32)
+            rec = unpack_block_mask(idx, cnt, bm.shape[0])
+        return jnp.sum(rec != bm).astype(jnp.int32)
+
+    for m, bw, e in zip(flat_m, flat_b, flat_e):
+        if e is None or not _packable(m, block_shape):
+            continue
+        total = total + _recount(e["idx"], e["cnt"], block_mask_of(m, block_shape))
+        if bw is not None and "bidx" in e:
+            total = total + _recount(
+                e["bidx"], e["bcnt"], block_mask_of(bw, block_shape)
+            )
     return total
 
 
@@ -318,6 +424,11 @@ def validate_pack(pack, *, where: str = "pack") -> int:
                 "(silent wrong answers); see docs/serving.md#failure-model"
             )
 
+        if "bwd_mask" in e:  # masked-kernel superset carrier — no CSC fields
+            if np.asarray(e["bwd_mask"]).dtype != np.bool_:
+                fail("bwd_mask carrier is not a bool array")
+            checked += 1
+            continue
         for k in ("idx", "cnt", "ridx", "rcnt", "nnz", "nkb"):
             if k not in e:
                 fail(f"entry is missing field {k!r}")
@@ -357,6 +468,46 @@ def validate_pack(pack, *, where: str = "pack") -> int:
                 f"nnz inconsistency: sum(cnt)={csum}, sum(rcnt)={rsum}, "
                 f"recorded nnz={nnz}"
             )
+        if "bidx" in e:  # Top-KAST superset CSC — same invariants, wider view
+            bidx = np.asarray(e["bidx"])
+            bcnt = np.asarray(e["bcnt"])
+            bnnz = int(e["bnnz"])
+            bwidth = bidx.shape[-1]
+            if bidx.shape[:-1] != bcnt.shape:
+                fail(f"bidx {bidx.shape} does not extend bcnt {bcnt.shape}")
+            if bcnt.size and (bcnt.min() < 0 or bcnt.max() > bwidth):
+                fail(
+                    f"bcnt out of range [0, bwidth={bwidth}] "
+                    f"(max {int(bcnt.max())} — truncated superset pack?)"
+                )
+            blive = np.arange(bwidth) < bcnt[..., None]
+            if np.any(blive & ((bidx < 0) | (bidx >= nkb))):
+                fail(f"live superset index outside the K-block grid [0, {nkb})")
+            if int(bcnt.sum()) != bnnz:
+                fail(
+                    f"superset nnz inconsistency: sum(bcnt)={int(bcnt.sum())}, "
+                    f"recorded bnnz={bnnz}"
+                )
+            if bnnz < nnz:
+                fail(
+                    f"superset smaller than forward topology (bnnz={bnnz} < "
+                    f"nnz={nnz}) — B must contain A"
+                )
+            # Containment: every forward-active block must appear live in the
+            # superset CSC, else wgrad silently zeros it.  Padded slots
+            # scatter into a dummy trailing column so they can't clobber
+            # block 0.
+            fwd = np.zeros((*cnt.shape, nkb + 1), bool)
+            np.put_along_axis(fwd, np.where(live, idx, nkb), live, axis=-1)
+            fwd = fwd[..., :nkb]
+            sup = np.zeros((*bcnt.shape, nkb + 1), bool)
+            np.put_along_axis(sup, np.where(blive, bidx, nkb), blive, axis=-1)
+            sup = sup[..., :nkb]
+            if np.any(fwd & ~sup):
+                fail(
+                    "forward-active block missing from the backward superset "
+                    "CSC — B does not contain A"
+                )
         checked += 1
     return checked
 

@@ -3,13 +3,27 @@
 Drop:  remove the k lowest-|w| active connections per layer,
        k = f_decay(t) * n_active_l  (exact count, dynamic in t).
 Grow:  activate the k highest-score inactive connections, where score is
-         rigl -> |dense gradient|        (the paper's contribution)
-         snfs -> |dense momentum|        (Dettmers & Zettlemoyer 2019)
-         set  -> uniform random          (Mocanu et al. 2018)
+         rigl    -> |dense gradient|     (the paper's contribution)
+         snfs    -> |dense momentum|     (Dettmers & Zettlemoyer 2019)
+         set     -> uniform random       (Mocanu et al. 2018)
+         topkast -> |w| on the backward superset (Jayakumar et al. 2020)
        Freshly-dropped connections are eligible for regrowth, matching the
        official google-research/rigl code.  Grown connections are initialized
        to ZERO (paper default) so the network function is unchanged at the
        update step, and their optimizer state is reset.
+
+Top-KAST (always-sparse backward): each layer additionally carries a backward
+mask B = A ∪ exploration — the forward top-k set A plus the Δ next-best
+candidates (``topkast_backward_masks``).  The exploration set B\\A receives
+gradient (and optimizer updates) but never contributes to forward compute, so
+the wgrad restricted to B is EXACTLY the dense gradient on B's support: it
+doubles as the dense-gradient side-channel that rigl/snfs grow scores need,
+which is what lets every method stay on the sparse Pallas kernels end-to-end
+(training/steps.py).  For ``method='topkast'`` the drop/grow itself is
+magnitude-driven: drop the lowest-|w| of A, grow the highest-|w| candidates
+inside B — entering weights that were already trained in B\\A KEEP their
+values (the point of Top-KAST); only never-trained entries (outside B) are
+zero, and only those are flagged ``grown`` for optimizer-state reset.
 
 Dynamic-k with static shapes: XLA requires static shapes, but k depends on the
 traced step t.  We rank scores with a stable double-argsort (unique ranks, ties
@@ -27,20 +41,32 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .schedules import UpdateSchedule
 
-__all__ = ["SparseAlgo", "rigl_update_layer", "rigl_update", "dense_to_sparse_grad"]
+__all__ = [
+    "SparseAlgo",
+    "rigl_update_layer",
+    "rigl_update",
+    "dense_to_sparse_grad",
+    "topkast_backward_masks",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class SparseAlgo:
     """Which sparse-training method is in effect."""
 
-    method: str = "rigl"  # rigl | set | snfs | static
+    method: str = "rigl"  # rigl | set | snfs | topkast | static
     schedule: UpdateSchedule = UpdateSchedule()
     grow_init: str = "zeros"  # zeros | random | gradient  (paper tried all three)
     block_shape: Optional[tuple[int, int]] = None  # TPU block-sparse mode
+    # Δ of the top-(k+Δ) Top-KAST backward superset, as a fraction of each
+    # layer's units (elements, or blocks in block mode); also the exploration
+    # breadth of the superset-gradient side-channel rigl/snfs use under
+    # kernel dispatch.  |B| = min(total, |A| + ceil(backward_extra * total)).
+    backward_extra: float = 0.1
 
 
 def _rank_desc(x):
@@ -65,6 +91,69 @@ def _expand_blocks(xb, block_shape, shape):
         xb[..., :, None, :, None], (*lead, m // bm, bm, n // bn, bn)
     )
     return x.reshape(shape)
+
+
+def _exploration_score(w, m_bool, key, block_shape=None):
+    """Ranking score for backward-superset candidates (higher = join B first).
+
+    Active slots rank above everything (B must contain A); then nonzero
+    inactive weights by |w| (Top-KAST's trained exploration set keeps its
+    standing); zero weights last, in random order (fresh exploration —
+    deterministic under a fixed key).  The +1.0 shift keeps every nonzero
+    |w| strictly above the [0, 1) random tiebreak of the zeros.
+    """
+    f32 = jnp.float32
+    mag = jnp.abs(w).astype(f32)
+    if block_shape is not None:
+        mag = _pool_blocks(mag, block_shape)
+        m_bool = _pool_blocks(m_bool.astype(f32), block_shape) > 0
+    tie = jax.random.uniform(key, mag.shape, f32)
+    score = jnp.where(mag > 0, mag + 1.0, tie)
+    return jnp.where(m_bool, jnp.inf, score), m_bool
+
+
+def topkast_superset_layer(w, mask, extra, key, *, block_shape=None):
+    """One layer's backward mask B ⊇ A with |B| = min(total, |A| + Δ).
+
+    Δ = ceil(extra * units) where units = elements (or blocks in block mode).
+    Selection: A first, then the Δ best exploration candidates by
+    ``_exploration_score``.  Deterministic under a fixed key; exact counts via
+    the same stable double-argsort as drop/grow.
+    """
+    m_bool = mask.astype(bool)
+    score, m_unit = _exploration_score(w, m_bool, key, block_shape)
+    total = m_unit.size
+    delta = int(np.ceil(float(extra) * total)) if extra else 0
+    k_fwd = jnp.sum(m_unit.reshape(-1).astype(jnp.int32))
+    k_bwd = jnp.minimum(k_fwd + delta, total)
+    bwd_unit = (_rank_desc(score.reshape(-1)) < k_bwd).reshape(m_unit.shape)
+    if block_shape is not None:
+        return _expand_blocks(bwd_unit, block_shape, mask.shape).astype(
+            mask.dtype
+        )
+    return bwd_unit.astype(mask.dtype)
+
+
+def topkast_backward_masks(params, masks, extra, key, *, block_shape=None):
+    """Backward-superset pytree: per layer, B = A ∪ top-Δ exploration.
+
+    Mirrors the mask pytree (None leaves pass through).  Refreshed at init
+    and after every topology update (training/steps.py::refresh_pack) so the
+    superset always brackets the CURRENT forward mask; the next update's grow
+    step then only ever activates coordinates that received gradient.
+    """
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree_util.tree_flatten(masks, is_leaf=lambda x: x is None)[0]
+    out = []
+    for i, ((path, w), m) in enumerate(zip(flat_p, flat_m)):
+        if m is None:
+            out.append(None)
+            continue
+        sub = jax.random.fold_in(key, i)
+        out.append(
+            topkast_superset_layer(w, m, extra, sub, block_shape=block_shape)
+        )
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def rigl_update_layer(
@@ -115,6 +204,41 @@ def rigl_update_layer(
     return new_mask.astype(mask.dtype), new_w, grown
 
 
+def _topkast_update_layer(w, mask, bwd_mask, fraction, key, block_shape=None):
+    """Top-KAST drop/grow: magnitude top-k restricted to the backward superset.
+
+    Drop the lowest-|w| actives (same exact-count machinery as rigl); grow the
+    highest-|w| candidates INSIDE the superset B (zero weights tie-broken at
+    random below every trained weight).  Candidates outside B score -inf and
+    can never win — B\\kept always holds at least k candidates, so cardinality
+    is exactly conserved.  Weights are NOT reinitialized: a connection entering
+    A from the trained exploration set B\\A keeps the value (and optimizer
+    state) it earned there — the whole point of training the superset.  The
+    returned ``grown`` flags only never-trained entries (outside B, zero by
+    construction), so optimizer-state resets stay correct for every method.
+    """
+    f32 = jnp.float32
+    m_bool = mask.astype(bool)
+    b_bool = bwd_mask.astype(bool)
+    mag = jnp.abs(w).astype(f32)
+    if block_shape is not None:
+        mag = _pool_blocks(mag, block_shape)
+        m_u = _pool_blocks(m_bool.astype(f32), block_shape) > 0
+        b_u = _pool_blocks(b_bool.astype(f32), block_shape) > 0
+    else:
+        m_u, b_u = m_bool, b_bool
+    tie = jax.random.uniform(key, mag.shape, f32)
+    score = jnp.where(mag > 0, mag + 1.0, tie)
+    score = jnp.where(b_u, score, -jnp.inf)
+    new_u, _ = _drop_grow(mag, score, m_u, fraction)
+    if block_shape is not None:
+        new_mask = _expand_blocks(new_u, block_shape, w.shape)
+    else:
+        new_mask = new_u
+    grown = new_mask & ~m_bool & ~b_bool
+    return new_mask.astype(mask.dtype), w, grown
+
+
 def _drop_grow(mag, score, m_bool, fraction):
     """Core exact-count drop/grow on flattened scores."""
     shape = mag.shape
@@ -149,12 +273,19 @@ def rigl_update(
     key,
     dense_momentum=None,
     lr: float = 0.0,
+    bwd_masks=None,
 ):
     """Apply the connectivity update to every masked layer.
 
     Returns (new_params, new_masks, grown_masks).  grown_masks is used by the
     optimizer to reset per-connection state (momentum) of newly-activated
     connections.  For method == 'static' this is an identity.
+
+    bwd_masks: the Top-KAST backward-superset pytree — REQUIRED for
+    method='topkast' (its grow candidates live inside the superset).  For
+    rigl/snfs under kernel dispatch the gradients/momentum arriving here are
+    already superset-supported (zero elsewhere), so no explicit restriction is
+    needed — the score does it.
 
     NOTE: callers gate this on ``algo.schedule.is_update_step(t)`` — by design
     this lives in a SEPARATE jitted function from the hot train_step so the
@@ -178,10 +309,17 @@ def rigl_update(
         if dense_momentum is not None
         else [None] * len(flat_p)
     )
+    flat_b = (
+        jax.tree_util.tree_flatten(bwd_masks, is_leaf=lambda x: x is None)[0]
+        if bwd_masks is not None
+        else [None] * len(flat_p)
+    )
+
+    from .masks import path_name
 
     new_p, new_m, grown_l = [], [], []
-    for i, ((path, w), m, g, mom) in enumerate(
-        zip(flat_p, flat_m, flat_g, flat_mom)
+    for i, ((path, w), m, g, mom, bw) in enumerate(
+        zip(flat_p, flat_m, flat_g, flat_mom, flat_b)
     ):
         if m is None:
             new_p.append(w)
@@ -189,10 +327,33 @@ def rigl_update(
             grown_l.append(None)
             continue
         sub = jax.random.fold_in(key, i)
+        if algo.method == "topkast":
+            if bw is None:
+                raise ValueError(
+                    "method='topkast' needs the backward-superset masks: "
+                    f"bwd_masks is missing for leaf {path_name(path)!r} — "
+                    "pass state['bwd_masks'] (built by "
+                    "training/steps.py::init_train_state, refreshed by "
+                    "refresh_pack) into rigl_update(bwd_masks=...)"
+                )
+            nm, nw, grown = _topkast_update_layer(
+                w, m, bw, fraction, sub, algo.block_shape
+            )
+            new_p.append(nw)
+            new_m.append(nm)
+            grown_l.append(grown)
+            continue
         if algo.method == "rigl":
             score = g
         elif algo.method == "snfs":
-            assert mom is not None, "snfs needs dense momentum"
+            if mom is None:
+                raise ValueError(
+                    "method='snfs' grows by |dense momentum| but the state "
+                    f"leaf dense_momentum is missing for {path_name(path)!r} "
+                    "— pass state['dense_mom'] (tracked by "
+                    "training/steps.py::make_train_step) into "
+                    "rigl_update(dense_momentum=...)"
+                )
             score = mom
         elif algo.method == "set":
             score = jax.random.uniform(sub, w.shape)

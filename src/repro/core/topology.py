@@ -1,0 +1,200 @@
+"""Graph-distance telemetry for sparse topologies.
+
+"Topological Insights into Sparse Neural Networks" (Liu et al., PAPERS.md)
+shows that sparse-training methods which reach the SAME loss can sit on very
+different topologies, and that the distance between successive masks is a
+useful fingerprint of a method's exploration behaviour.  This module provides
+the distances the paper's analysis builds on, specialized to index-matched
+mask pytrees (successive masks of one network, or final masks of two methods
+trained from the same init — same shapes, same neuron ordering, so no graph
+matching step is needed):
+
+  drop/grow counts        edges removed / added by one update
+  Jaccard distance        1 - |A∩B| / |A∪B| over the active edge sets
+  graph-edit distance     edge insertions + deletions = Hamming count (the
+                          minimal edit script between two same-shape masks)
+  NHD                     normalized Hamming distance, Hamming / #edges — the
+                          per-edge form of the paper's neuron-wise distance
+                          (their NNSTD greedily matches neurons first; with
+                          index-matched layers that matching is the identity)
+
+Everything here is host-side numpy over CONCRETE masks and runs at topology-
+update cadence (every delta_t steps) — never in the jitted hot loop.  The
+train driver (launch/train.py) records one ``topology_delta`` per update into
+its metrics log, and ``benchmarks/methods_comparison.py`` reports the
+``TopologyTrace`` summary plus cross-method final-mask distances next to the
+paper's loss/FLOPs columns.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import numpy as np
+
+__all__ = [
+    "drop_grow_counts",
+    "jaccard_distance",
+    "graph_edit_distance",
+    "normalized_hamming_distance",
+    "topology_delta",
+    "TopologyTrace",
+    "cross_method_distances",
+]
+
+
+def _mask_pairs(a, b):
+    """Aligned concrete bool leaves of two mask pytrees (None leaves skipped)."""
+    fa = jax.tree_util.tree_flatten(a, is_leaf=lambda x: x is None)[0]
+    fb = jax.tree_util.tree_flatten(b, is_leaf=lambda x: x is None)[0]
+    if len(fa) != len(fb):
+        raise ValueError(
+            f"mask pytrees differ in structure: {len(fa)} vs {len(fb)} leaves"
+        )
+    out = []
+    for ma, mb in zip(fa, fb):
+        if ma is None and mb is None:
+            continue
+        if ma is None or mb is None:
+            raise ValueError("mask pytrees disagree on which leaves are dense")
+        na, nb = np.asarray(ma, bool), np.asarray(mb, bool)
+        if na.shape != nb.shape:
+            raise ValueError(f"mask shapes differ: {na.shape} vs {nb.shape}")
+        out.append((na, nb))
+    return out
+
+
+def drop_grow_counts(prev, new) -> tuple[int, int]:
+    """(#edges dropped, #edges grown) between two masks of one network.
+
+    dropped = active before, inactive after; grown = the reverse.  Disjoint
+    by construction (dropped lives outside the new mask, grown inside it) —
+    the drop∩grow=∅ invariant the topology test tier pins.
+    """
+    dropped = grown = 0
+    for a, b in _mask_pairs(prev, new):
+        dropped += int(np.sum(a & ~b))
+        grown += int(np.sum(~a & b))
+    return dropped, grown
+
+
+def jaccard_distance(a, b) -> float:
+    """1 - |A∩B| / |A∪B| over the pooled active edge sets (0 = identical)."""
+    inter = union = 0
+    for ma, mb in _mask_pairs(a, b):
+        inter += int(np.sum(ma & mb))
+        union += int(np.sum(ma | mb))
+    return 1.0 - inter / union if union else 0.0
+
+
+def graph_edit_distance(a, b) -> int:
+    """Minimal edit script between same-shape masks: insertions + deletions.
+
+    For index-matched graphs every edit is an edge toggle, so this is exactly
+    the Hamming count — an integer, monotone under composition of updates.
+    """
+    return int(sum(np.sum(ma != mb) for ma, mb in _mask_pairs(a, b)))
+
+
+def normalized_hamming_distance(a, b) -> float:
+    """Hamming count / total edges, in [0, 1] (0 = identical topology).
+
+    The per-edge normalization of the Topological Insights neuron-wise
+    distance; with index-matched layers the paper's greedy neuron matching is
+    the identity, so this is the exact layer distance, size-weighted across
+    layers.
+    """
+    diff = total = 0
+    for ma, mb in _mask_pairs(a, b):
+        diff += int(np.sum(ma != mb))
+        total += ma.size
+    return diff / total if total else 0.0
+
+
+def topology_delta(prev, new, *, step: Optional[int] = None) -> dict[str, Any]:
+    """One update's telemetry record (host-side, amortized cadence)."""
+    dropped, grown = drop_grow_counts(prev, new)
+    rec = {
+        "dropped": dropped,
+        "grown": grown,
+        "jaccard_dist": jaccard_distance(prev, new),
+        "graph_edit_dist": graph_edit_distance(prev, new),
+        "nhd": normalized_hamming_distance(prev, new),
+    }
+    if step is not None:
+        rec["step"] = int(step)
+    return rec
+
+
+class TopologyTrace:
+    """Accumulates per-update ``topology_delta`` records for one training run.
+
+    Usage (launch/train.py, benchmarks/_mlp.py): snapshot the masks before a
+    topology update, ``record`` after it, read ``summary()`` at the end.  The
+    summary is always finite — a run with zero updates (static/dense) reports
+    zero distances rather than NaNs, so report columns stay comparable.
+    """
+
+    def __init__(self):
+        self.events: list[dict[str, Any]] = []
+
+    def snapshot(self, masks):
+        """Concrete host copy of the masks (cheap: bool arrays)."""
+        return jax.tree_util.tree_map(
+            lambda m: None if m is None else np.asarray(m, bool),
+            masks,
+            is_leaf=lambda x: x is None,
+        )
+
+    def record(self, prev, new, *, step: Optional[int] = None) -> dict[str, Any]:
+        rec = topology_delta(prev, new, step=step)
+        self.events.append(rec)
+        return rec
+
+    def summary(self) -> dict[str, Any]:
+        n = len(self.events)
+        if n == 0:
+            return {
+                "n_updates": 0,
+                "dropped_total": 0,
+                "grown_total": 0,
+                "jaccard_dist_mean": 0.0,
+                "graph_edit_dist_total": 0,
+                "nhd_mean": 0.0,
+            }
+        return {
+            "n_updates": n,
+            "dropped_total": int(sum(e["dropped"] for e in self.events)),
+            "grown_total": int(sum(e["grown"] for e in self.events)),
+            "jaccard_dist_mean": float(
+                np.mean([e["jaccard_dist"] for e in self.events])
+            ),
+            "graph_edit_dist_total": int(
+                sum(e["graph_edit_dist"] for e in self.events)
+            ),
+            "nhd_mean": float(np.mean([e["nhd"] for e in self.events])),
+        }
+
+
+def cross_method_distances(
+    masks_by_method: Mapping[str, Any], *, reference: str = "rigl"
+) -> dict[str, dict[str, float]]:
+    """Where do methods CONVERGE? Final-mask distances vs a reference method.
+
+    Only methods whose mask pytrees are shape-compatible with the reference
+    are compared (small_dense trains a narrower net — skipped, not faked).
+    Returns {method: {jaccard_dist_vs_ref, nhd_vs_ref}}.
+    """
+    out: dict[str, dict[str, float]] = {}
+    ref = masks_by_method.get(reference)
+    if ref is None:
+        return out
+    for name, masks in masks_by_method.items():
+        try:
+            out[name] = {
+                f"jaccard_dist_vs_{reference}": jaccard_distance(ref, masks),
+                f"nhd_vs_{reference}": normalized_hamming_distance(ref, masks),
+            }
+        except ValueError:
+            continue  # incompatible shapes (e.g. small_dense) — no column
+    return out

@@ -10,6 +10,8 @@ from .ops import (  # noqa: F401
     grouped_masked_linear,
     masked_linear,
     topk_threshold,
+    topkast_grouped_masked_linear,
+    topkast_masked_linear,
 )
 
 __all__ = [
@@ -19,4 +21,6 @@ __all__ = [
     "grouped_masked_linear",
     "masked_linear",
     "topk_threshold",
+    "topkast_grouped_masked_linear",
+    "topkast_masked_linear",
 ]

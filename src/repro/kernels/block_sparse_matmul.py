@@ -56,6 +56,8 @@ from jax.experimental import pallas as pl
 __all__ = [
     "block_sparse_matmul",
     "grouped_block_sparse_matmul",
+    "topkast_block_sparse_matmul",
+    "topkast_grouped_block_sparse_matmul",
     "pack_block_mask",
     "pack_block_mask_rows",
     "pack_block_mask_traced",
@@ -721,4 +723,158 @@ def grouped_block_sparse_matmul(
         row_idx, row_cnt = pack_group_mask_rows_traced(bmask)
     return _grouped_block_sparse_matmul(
         x, w, block_idx, block_cnt, row_idx, row_cnt, bm, bn, bk, interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# Top-KAST split-topology VJP: forward/dgrad on the tight k-grid,
+# wgrad on the top-(k+delta) backward-superset grid (docs/training.md#topkast)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))
+def _topkast_block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+    bm, bn, bk, interpret,
+):
+    return _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _tk_fwd(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+    bm, bn, bk, interpret,
+):
+    out = _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt)
+
+
+def _tk_bwd(bm, bn, bk, interpret, res, g):
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt = res
+    K, N = w.shape
+    nkb = K // bk
+
+    # dx on the FORWARD topology (y only saw w ⊙ A), wgrad on the SUPERSET:
+    # dw is exactly the dense gradient restricted to B's support, the
+    # side-channel the rigl/snfs grow scores consume.
+    dx = _dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _dw_call(x, g, bwd_idx, bwd_cnt, bm, bn, bk, interpret)
+    dw = _scatter_packed_dw(packed, bwd_idx, bwd_cnt, nkb, bk, bn, w.dtype)
+
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (
+        dx, dw, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt),
+        z(bwd_idx), z(bwd_cnt),
+    )
+
+
+_topkast_block_sparse_matmul.defvjp(_tk_fwd, _tk_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def topkast_block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    bwd_idx,
+    bwd_cnt,
+    row_idx=None,
+    row_cnt=None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """Top-KAST matmul: forward on A's CSC, weight gradient on B ⊇ A's CSC.
+
+    Same kernels as ``block_sparse_matmul`` — the split is purely in which
+    pack drives the wgrad grid.  bwd_idx/bwd_cnt are the superset CSC view of
+    a PackState entry (``bidx``/``bcnt``, core/pack.py); forward and dgrad
+    keep the tight idx/ridx views, so the per-step cost of the exploration
+    set is ONE wider wgrad grid, nothing else.  dw is dense-laid-out but
+    supported only on B — zero dense-gradient materialization.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and N % bn == 0 and K % bk == 0 and M % bm == 0
+    if row_idx is None:
+        bmask = unpack_block_mask(block_idx, block_cnt, K // bk)
+        row_idx, row_cnt = _pack_jnp(bmask.T, N // bn)
+    return _topkast_block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+        bm, bn, bk, interpret,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))
+def _topkast_grouped_block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+    bm, bn, bk, interpret,
+):
+    return _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _gtk_fwd(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+    bm, bn, bk, interpret,
+):
+    out = _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt)
+
+
+def _gtk_bwd(bm, bn, bk, interpret, res, g):
+    x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt = res
+    K, N = w.shape[1], w.shape[2]
+    nkb = K // bk
+
+    dx = _g_dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _g_dw_call(x, g, bwd_idx, bwd_cnt, bm, bn, bk, interpret)
+    dw = jax.vmap(
+        lambda p_, i_, c_: _scatter_packed_dw(p_, i_, c_, nkb, bk, bn, w.dtype)
+    )(packed, bwd_idx, bwd_cnt)
+
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (
+        dx, dw, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt),
+        z(bwd_idx), z(bwd_cnt),
+    )
+
+
+_topkast_grouped_block_sparse_matmul.defvjp(_gtk_fwd, _gtk_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def topkast_grouped_block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    bwd_idx,
+    bwd_cnt,
+    row_idx=None,
+    row_cnt=None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """Grouped Top-KAST matmul: per-group forward on A, wgrad on B ⊇ A.
+
+    The grouped twin of ``topkast_block_sparse_matmul`` for MoE expert banks
+    and xLSTM per-head recurrences — stacked packs, one launch, wgrad driven
+    by the stacked superset CSC (``bidx (G, N/bn, bwidth)``).
+    """
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2, (x.shape, w.shape)
+    assert N % bn == 0 and K % bk == 0 and M % bm == 0, (M, K, N, bm, bn, bk)
+    if row_idx is None:
+        bmask = jax.vmap(
+            lambda i_, c_: unpack_block_mask(i_, c_, K // bk)
+        )(block_idx, block_cnt)
+        row_idx, row_cnt = pack_group_mask_rows_traced(bmask)
+    return _topkast_grouped_block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+        bm, bn, bk, interpret,
     )

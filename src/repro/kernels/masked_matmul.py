@@ -38,7 +38,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["masked_matmul", "grouped_masked_matmul"]
+__all__ = [
+    "masked_matmul",
+    "grouped_masked_matmul",
+    "topkast_masked_matmul",
+    "topkast_grouped_masked_matmul",
+]
 
 
 def _fwd_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
@@ -355,3 +360,94 @@ def grouped_masked_matmul(
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     return _grouped_masked_matmul(x, w, mask, bm, bn, bk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Top-KAST split-topology VJP: forward/dgrad on mask A, wgrad on the backward
+# superset B ⊇ A (docs/training.md#topkast)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _topkast_masked_matmul(x, w, mask, bwd_mask, bm, bn, bk, interpret):
+    return _fwd_call(x, w, mask, bm, bn, bk, interpret)
+
+
+def _tkm_fwd(x, w, mask, bwd_mask, bm, bn, bk, interpret):
+    return _fwd_call(x, w, mask, bm, bn, bk, interpret), (x, w, mask, bwd_mask)
+
+
+def _tkm_bwd(bm, bn, bk, interpret, res, g):
+    x, w, mask, bwd_mask = res
+    # dx on the FORWARD mask (y only saw w ⊙ A); dw on the superset B — the
+    # dense gradient restricted to B's support, no dense materialization.
+    dx = _dx_call(g, w, mask, bm, bn, bk, interpret, x.dtype)
+    dw = _dw_call(x, g, bwd_mask, bm, bn, bk, interpret, w.dtype)
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, dw, z(mask), z(bwd_mask)
+
+
+_topkast_masked_matmul.defvjp(_tkm_fwd, _tkm_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def topkast_masked_matmul(
+    x, w, mask, bwd_mask, *, bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+):
+    """Top-KAST masked matmul: forward ⊙ A, weight gradient ⊙ B ⊇ A.
+
+    Same fused kernels as ``masked_matmul`` — the split is purely in which
+    mask the wgrad kernel fuses.  The exploration set B\\A receives gradient
+    but never contributes to forward compute; callers guarantee A ⊆ B
+    (core/masks.py::mask_subset, checked at pack-build time).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and mask.shape == w.shape == bwd_mask.shape, (
+        x.shape, w.shape, mask.shape, bwd_mask.shape,
+    )
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    return _topkast_masked_matmul(x, w, mask, bwd_mask, bm, bn, bk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _topkast_grouped_masked_matmul(x, w, mask, bwd_mask, bm, bn, bk, interpret):
+    return _g_fwd_call(x, w, mask, bm, bn, bk, interpret)
+
+
+def _gtkm_fwd(x, w, mask, bwd_mask, bm, bn, bk, interpret):
+    return _g_fwd_call(x, w, mask, bm, bn, bk, interpret), (x, w, mask, bwd_mask)
+
+
+def _gtkm_bwd(bm, bn, bk, interpret, res, g):
+    x, w, mask, bwd_mask = res
+    dx = _g_dx_call(g, w, mask, bm, bn, bk, interpret, x.dtype)
+    dw = _g_dw_call(x, g, bwd_mask, bm, bn, bk, interpret, w.dtype)
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, dw, z(mask), z(bwd_mask)
+
+
+_topkast_grouped_masked_matmul.defvjp(_gtkm_fwd, _gtkm_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def topkast_grouped_masked_matmul(
+    x, w, mask, bwd_mask, *, bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = False,
+):
+    """Grouped Top-KAST masked matmul: per-group forward ⊙ A, wgrad ⊙ B."""
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2 and mask.shape == w.shape == bwd_mask.shape, (
+        x.shape, w.shape, mask.shape, bwd_mask.shape,
+    )
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    return _topkast_grouped_masked_matmul(
+        x, w, mask, bwd_mask, bm, bn, bk, interpret
+    )

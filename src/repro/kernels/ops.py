@@ -44,8 +44,15 @@ from .block_sparse_matmul import (
     pack_group_mask_rows,
     pack_group_mask_rows_traced,
     pack_group_mask_traced,
+    topkast_block_sparse_matmul,
+    topkast_grouped_block_sparse_matmul,
 )
-from .masked_matmul import grouped_masked_matmul, masked_matmul
+from .masked_matmul import (
+    grouped_masked_matmul,
+    masked_matmul,
+    topkast_grouped_masked_matmul,
+    topkast_masked_matmul,
+)
 from .topk_threshold import N_BINS, histogram_abs
 
 __all__ = [
@@ -53,6 +60,8 @@ __all__ = [
     "block_sparse_linear",
     "grouped_masked_linear",
     "grouped_block_sparse_linear",
+    "topkast_masked_linear",
+    "topkast_grouped_masked_linear",
     "topk_threshold",
     "auto_interpret",
 ]
@@ -113,6 +122,64 @@ def masked_linear(x, w, mask, *, block=(128, 128, 128), interpret=None):
     return out[:M, :N].reshape(*lead, N)
 
 
+def topkast_masked_linear(
+    x, w, mask, bwd_mask, *, block=(128, 128, 128), interpret=None
+):
+    """out = x @ (w*mask), weight gradient masked by bwd_mask ⊇ mask.
+
+    The Top-KAST split of ``masked_linear`` (docs/training.md#topkast): the
+    forward and dgrad fuse the tight mask A; the wgrad kernel fuses the
+    backward superset B, so dw is the dense gradient restricted to B with no
+    dense matmul anywhere.  Padding/trimming identical to ``masked_linear``
+    (both masks are padded with zeros, preserving A ⊆ B).
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    *lead, K = x.shape
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm_eff, Mp = _row_tile(M, bm)
+    x2 = _pad_rows(x2, Mp)
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+        mask = jnp.pad(mask, ((0, Kp - K), (0, Np - N)))
+        bwd_mask = jnp.pad(bwd_mask, ((0, Kp - K), (0, Np - N)))
+    out = topkast_masked_matmul(
+        x2, w, mask, bwd_mask, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:M, :N].reshape(*lead, N)
+
+
+def topkast_grouped_masked_linear(
+    x, w, mask, bwd_mask, *, block=(128, 128, 128), interpret=None
+):
+    """Grouped Top-KAST masked linear: per-group forward ⊙ A, wgrad ⊙ B."""
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    G, M, K = x.shape
+    N = w.shape[2]
+    bm_eff, Mp = _row_tile(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+        mask = jnp.pad(mask, ((0, 0), (0, Kp - K), (0, Np - N)))
+        bwd_mask = jnp.pad(bwd_mask, ((0, 0), (0, Kp - K), (0, Np - N)))
+    out = topkast_grouped_masked_matmul(
+        x, w, mask, bwd_mask, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+    )
+    return out[:, :M, :N]
+
+
 def block_sparse_linear(
     x, w, block_mask=None, *, block=(128, 128, 128), interpret=None, pack=None
 ):
@@ -146,11 +213,12 @@ def block_sparse_linear(
     bm, bn, bk = block
     *lead, K = x.shape
     bk, bn = min(bk, K), min(bn, w.shape[1])
-    ridx = rcnt = None
+    ridx = rcnt = bidx = bcnt = None
     if pack is not None:
         if isinstance(pack, dict):
             idx, cnt = pack["idx"], pack["cnt"]
             ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+            bidx, bcnt = pack.get("bidx"), pack.get("bcnt")
         else:
             idx, cnt = pack
     elif block_mask is None:
@@ -168,9 +236,17 @@ def block_sparse_linear(
     M = x2.shape[0]
     bm_eff, Mp = _row_tile(M, bm)
     x2 = _pad_rows(x2, Mp)
-    out = block_sparse_matmul(
-        x2, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
-    )
+    if bidx is not None:
+        # Top-KAST superset pack: wgrad runs on the wider (k+Δ) CSC view.
+        out = topkast_block_sparse_matmul(
+            x2, w, idx, cnt, bidx, bcnt, ridx, rcnt,
+            bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+        )
+    else:
+        out = block_sparse_matmul(
+            x2, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk,
+            interpret=interpret,
+        )
     return out[:M].reshape(*lead, w.shape[1])
 
 
@@ -231,11 +307,12 @@ def grouped_block_sparse_linear(
     G, M, K = x.shape
     N = w.shape[2]
     bk, bn = min(bk, K), min(bn, N)
-    ridx = rcnt = None
+    ridx = rcnt = bidx = bcnt = None
     if pack is not None:
         if isinstance(pack, dict):
             idx, cnt = pack["idx"], pack["cnt"]
             ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+            bidx, bcnt = pack.get("bidx"), pack.get("bcnt")
         else:
             idx, cnt = pack
     elif block_mask is None:
@@ -253,10 +330,16 @@ def grouped_block_sparse_linear(
     bm_eff, Mp = _row_tile(M, bm)
     if Mp != M:
         x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
-    out = grouped_block_sparse_matmul(
-        x, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk,
-        interpret=interpret,
-    )
+    if bidx is not None:
+        out = topkast_grouped_block_sparse_matmul(
+            x, w, idx, cnt, bidx, bcnt, ridx, rcnt,
+            bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+        )
+    else:
+        out = grouped_block_sparse_matmul(
+            x, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk,
+            interpret=interpret,
+        )
     return out[:, :M]
 
 

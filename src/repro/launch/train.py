@@ -27,7 +27,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..configs.base import SparseConfig
-from ..core import mask_stats
+from ..core import TopologyTrace, mask_stats
 from ..core.pruning import PruningSchedule
 from ..checkpoint.checkpoint import Checkpointer
 from ..data import batch_for
@@ -98,22 +98,27 @@ def train_loop(
         state = refresh_pack(state, cfg)  # snip replaced the masks
 
     metrics_log = []
+    topo_log = []  # per-update records, kept apart from the loss log
+    topo_trace = TopologyTrace()  # graph-distance telemetry (core/topology.py)
     t0 = time.time()
     step = int(state["step"])
     while step < steps:
         b = batch_for(cfg, step, batch, seq, learnable=learnable)
         is_update = (
-            sp.method in ("rigl", "set", "snfs")
+            sp.method in ("rigl", "set", "snfs", "topkast")
             and step > 0
             and step % sp.delta_t == 0
             and step < algo.schedule.t_end
         )
         if is_update:
+            prev_masks = topo_trace.snapshot(state["masks"])
             state, m = rigl_step(state, b)
             # topology changed: re-pack the tight-grid block topology NOW so
             # the next delta_t train/serve steps run grids sized to the new
             # active counts (host-side, amortized — see core/pack.py)
             state = refresh_pack(state, cfg)
+            rec = topo_trace.record(prev_masks, state["masks"], step=step)
+            topo_log.append({"step": step, "topology": rec})
         else:
             state, m = train_step(state, b)
         if prune_fn is not None and step % prune_sched.prune_every == 0:
@@ -146,7 +151,13 @@ def train_loop(
     ckpt.wait()
     stats = mask_stats(state["masks"])
     (workdir / "result.json").write_text(
-        json.dumps({"metrics": metrics_log, "sparsity": stats["sparsity"], "nnz": stats["nnz"]})
+        json.dumps({
+            "metrics": metrics_log,
+            "sparsity": stats["sparsity"],
+            "nnz": stats["nnz"],
+            "topology": topo_trace.summary(),
+            "topology_updates": topo_log,
+        })
     )
     return state, metrics_log
 
@@ -173,7 +184,8 @@ def main():
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=64)
     p.add_argument("--method", default="rigl",
-                   choices=["rigl", "set", "snfs", "static", "snip", "pruning", "dense"])
+                   choices=["rigl", "set", "snfs", "topkast", "static", "snip",
+                            "pruning", "dense"])
     p.add_argument("--sparsity", type=float, default=0.8)
     p.add_argument("--distribution", default="erk", choices=["uniform", "er", "erk"])
     p.add_argument("--delta-t", type=int, default=100)

@@ -107,20 +107,33 @@ def linear(
     the jnp reference path (w*m materialized — legacy behaviour).
 
     pack: this layer's PackState entry ({"idx", "cnt", ...} — core/pack.py).
-    Only consumed by kernel='block_sparse': the kernel grid is then sized to
+    Consumed by kernel='block_sparse': the kernel grid is then sized to
     the entry's tight active-block count instead of the worst-case padded
     width the in-jit traced pack must assume.  The entry MUST describe the
     same topology as ``mask`` (the train/serve drivers refresh it on every
-    RigL update; the pack_stale metric guards the invariant).
+    RigL update; the pack_stale metric guards the invariant).  Entries
+    carrying a Top-KAST backward superset route to the split-topology VJP:
+    a ``bidx`` CSC view (block_sparse) or a ``{"bwd_mask": ...}`` carrier
+    (masked — core/pack.py::build_bwd_carrier) widens ONLY the wgrad to the
+    (k+Δ) superset; forward/dgrad stay on the tight mask.
     """
     dt = compute_dtype or x.dtype
     w = p["w"].astype(dt)
     if mask is not None and kernel in ("masked", "block_sparse"):
-        from ..kernels import block_sparse_linear, masked_linear
+        from ..kernels import (
+            block_sparse_linear,
+            masked_linear,
+            topkast_masked_linear,
+        )
 
         xc = x.astype(dt)
         if kernel == "masked":
-            y = masked_linear(xc, w, mask, block=block)
+            if isinstance(pack, dict) and "bwd_mask" in pack:
+                y = topkast_masked_linear(
+                    xc, w, mask, pack["bwd_mask"], block=block
+                )
+            else:
+                y = masked_linear(xc, w, mask, block=block)
         elif pack is not None:
             # full PackState entry: tight CSC for fwd/wgrad AND tight CSR
             # for the custom-VJP dgrad grid
@@ -164,10 +177,18 @@ def grouped_linear(
     dt = compute_dtype or x.dtype
     w = w.astype(dt)
     if mask is not None and kernel in ("masked", "block_sparse"):
-        from ..kernels import grouped_block_sparse_linear, grouped_masked_linear
+        from ..kernels import (
+            grouped_block_sparse_linear,
+            grouped_masked_linear,
+            topkast_grouped_masked_linear,
+        )
 
         xc = x.astype(dt)
         if kernel == "masked":
+            if isinstance(pack, dict) and "bwd_mask" in pack:
+                return topkast_grouped_masked_linear(
+                    xc, w, mask, pack["bwd_mask"], block=block
+                )
             return grouped_masked_linear(xc, w, mask, block=block)
         if pack is not None:
             return grouped_block_sparse_linear(xc, w, block=block, pack=pack)
@@ -198,7 +219,8 @@ def dispatch_kw(cfg, masks, name, pack=None):
 
 
 def assert_total_dispatch(masks, consumed: tuple[str, ...], *, kernel=None,
-                          where: str = "?"):
+                          where: str = "?", pack=None,
+                          require_bwd: bool = False):
     """Loud guard against silent dense fallbacks (trace-time, free at run).
 
     In kernel-dispatch mode (``kernel`` in {'masked', 'block_sparse'}) every
@@ -209,12 +231,39 @@ def assert_total_dispatch(masks, consumed: tuple[str, ...], *, kernel=None,
     raises instead of silently degrading.  ``consumed`` lists the subtree
     keys the caller routes through the kernels; mask structure is static, so
     the check runs once per trace and costs nothing per step.
+
+    require_bwd (Top-KAST / SNFS-under-dispatch steps): additionally verify
+    that every dispatched mask leaf's ``pack`` entry carries the backward-
+    superset view (``bidx`` for block_sparse, ``bwd_mask`` carrier for
+    masked) — i.e. the step's weight gradient runs on the (k+Δ) sparse grid
+    and NO layer materializes a dense gradient.  In this mode ``masks`` is
+    the full dispatched mask pytree (the ``consumed`` subtree check is
+    skipped; the model's per-submodule calls already enforce it).
     """
     if masks is None or kernel in (None, "dense"):
         return
     flat, _ = jax.tree_util.tree_flatten_with_path(
         masks, is_leaf=lambda x: x is None
     )
+    if require_bwd:
+        from ..core.pack import is_pack_entry
+
+        flat_e = jax.tree_util.tree_leaves(pack, is_leaf=is_pack_entry)
+        missing = sorted(
+            "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            for (p, m), e in zip(flat, flat_e)
+            if m is not None
+            and not (isinstance(e, dict) and ("bidx" in e or "bwd_mask" in e))
+        )
+        if missing:
+            raise RuntimeError(
+                f"{where}: mask leaves {missing} have no backward-superset "
+                "pack view (bidx/bwd_mask) — their weight gradient would "
+                "fall back to the forward topology or a dense matmul instead "
+                "of the (k+Δ) superset grid; rebuild the pack with "
+                "bwd_masks= (core/pack.py) — see docs/training.md#topkast"
+            )
+        return
     leftovers = sorted(
         {
             "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)

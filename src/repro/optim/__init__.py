@@ -1,2 +1,2 @@
 from .lr import LRSchedule  # noqa: F401
-from .optimizers import OptConfig, apply_opt, init_opt, reset_new_connections  # noqa: F401
+from .optimizers import OptConfig, apply_opt, init_opt, reset_connections, reset_new_connections  # noqa: F401

@@ -16,7 +16,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["OptConfig", "init_opt", "apply_opt", "reset_new_connections"]
+__all__ = ["OptConfig", "init_opt", "apply_opt", "reset_connections", "reset_new_connections"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,18 +91,29 @@ def apply_opt(cfg: OptConfig, grads, opt_state, params, lr):
     raise ValueError(cfg.kind)
 
 
-def reset_new_connections(opt_state, grown_masks):
-    """Zero per-connection optimizer state where a connection was just grown."""
-    def reset_tree(tree):
-        def f(x, grown):
-            if grown is None or x.ndim == 0:
-                return x
-            return jnp.where(grown, jnp.zeros_like(x), x)
+def reset_connections(opt_state, where_masks):
+    """Zero per-connection optimizer state wherever ``where_masks`` is True.
 
-        return jax.tree_util.tree_map(f, tree, grown_masks, is_leaf=lambda v: v is None)
+    Used after RigL updates (grown connections start with fresh state,
+    official-code semantics) and after Top-KAST superset refreshes (state of
+    connections leaving the backward set must not leak back if the
+    coordinate later rejoins) — one primitive, two call sites.
+    """
+    def reset_tree(tree):
+        def f(x, where):
+            if where is None or x.ndim == 0:
+                return x
+            return jnp.where(where, jnp.zeros_like(x), x)
+
+        return jax.tree_util.tree_map(f, tree, where_masks, is_leaf=lambda v: v is None)
 
     out = dict(opt_state)
     for k in ("momentum", "m", "v"):
         if k in out:
             out[k] = reset_tree(out[k])
     return out
+
+
+def reset_new_connections(opt_state, grown_masks):
+    """Zero per-connection optimizer state where a connection was just grown."""
+    return reset_connections(opt_state, grown_masks)

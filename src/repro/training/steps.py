@@ -16,11 +16,17 @@ Two compiled functions (paper Appendix H cost structure):
 
 Kernel dispatch (cfg.sparse.kernel != 'dense'): train_step switches to the
 Pallas sparse kernels — raw params + mask threading, no apply_masks, sparse
-fwd AND bwd (kernels/).  rigl_step intentionally KEEPS the dense backward:
-RigL's grow step scores inactive connections by |dense gradient|, which only
-the dense path produces, and its cost is amortized over delta_t >= 100 steps
-(paper Appendix H).  The two compiled functions thus realize the paper's cost
-split exactly: sparse every step, dense only at topology updates.
+fwd AND bwd (kernels/).  The dense-gradient side channel every grow score
+needs (|g| for rigl, |momentum| for snfs) comes from the Top-KAST backward
+superset (core/rigl.py, docs/training.md#topkast): the state carries
+``bwd_masks`` — per-layer B = A ∪ top-Δ exploration — and the pack routes
+the wgrad kernels onto B's wider grid, so the gradient arriving at the
+optimizer (and the SNFS momentum buffer) is the dense gradient restricted to
+B with ZERO dense matmuls anywhere, every step AND at topology updates.
+``method='topkast'`` additionally trains the exploration set B\\A itself
+(optimizer on g⊙B) and drops/grows by magnitude within B.  Without kernel
+dispatch the legacy cost split applies: rigl_step runs a dense backward,
+amortized over delta_t >= 100 steps (paper Appendix H).
 """
 from __future__ import annotations
 
@@ -37,6 +43,7 @@ from ..core import (
     SparseAlgo,
     UpdateSchedule,
     apply_masks,
+    build_bwd_carrier,
     build_pack_state,
     dense_to_sparse_grad,
     get_distribution,
@@ -45,12 +52,20 @@ from ..core import (
     refresh_pack_state,
     rigl_update,
     snip_masks,
+    topkast_backward_masks,
     tree_paths,
     validate_pack,
 )
 from ..core.pruning import PruningSchedule, prune_step
 from ..models import init_lm, lm_loss
-from ..optim import LRSchedule, OptConfig, apply_opt, init_opt, reset_new_connections
+from ..optim import (
+    LRSchedule,
+    OptConfig,
+    apply_opt,
+    init_opt,
+    reset_connections,
+    reset_new_connections,
+)
 
 __all__ = [
     "sparsity_map",
@@ -60,6 +75,8 @@ __all__ = [
     "make_prune_fn",
     "snip_init",
     "refresh_pack",
+    "refresh_superset",
+    "needs_bwd_masks",
 ]
 
 
@@ -88,6 +105,23 @@ def make_algo(cfg, total_steps: int) -> SparseAlgo:
         ),
         grow_init=sp.grow_init,
         block_shape=sp.block_shape,
+        backward_extra=getattr(sp, "backward_extra", 0.1),
+    )
+
+
+def needs_bwd_masks(sp) -> bool:
+    """Does this config's state carry Top-KAST backward supersets?
+
+    Yes for method='topkast' (any kernel: its optimizer trains B, its grow
+    set lives inside B) and for rigl/snfs under kernel dispatch (the superset
+    gradient is their dense-side grow-score channel — the sparse backward
+    never computes a dense gradient, docs/training.md#topkast).
+    """
+    if sp.method == "pruning" or sp.sparsity == 0.0:
+        return False
+    dispatch = sp.kernel in ("masked", "block_sparse")
+    return sp.method == "topkast" or (
+        dispatch and sp.method in ("rigl", "snfs")
     )
 
 
@@ -155,24 +189,88 @@ def init_train_state(key, cfg, opt_cfg: OptConfig, *, loss_fn=None):
         # see make_train_step; checkpointed so restarts keep the tally
         "nonfinite_steps": jnp.zeros((), jnp.int32),
     }
+    if needs_bwd_masks(sp):
+        # Top-KAST backward supersets B ⊇ A (core/rigl.py): the wgrad side
+        # channel for every grow score under kernel dispatch, and the trained
+        # exploration set for method='topkast'.  Refreshed alongside the pack
+        # after every topology update (refresh_superset).
+        state["bwd_masks"] = topkast_backward_masks(
+            params, masks, sp.backward_extra, jax.random.fold_in(k2, 1),
+            block_shape=sp.block_shape,
+        )
     if sp.kernel == "block_sparse" and sp.block_shape is not None:
         # host-packed tight-grid topology, carried in state + checkpointed.
         # INVARIANT: pack always describes state["masks"] — every rigl_step
         # must be followed by refresh_pack() (launch/train.py does this); the
         # train step's pack_stale metric reports any violation.
         state["pack"] = build_pack_state(
-            masks, sp.block_shape, slack=getattr(sp, "pack_width_slack", 0.0)
+            masks, sp.block_shape, slack=getattr(sp, "pack_width_slack", 0.0),
+            bwd_masks=state.get("bwd_masks"),
         )
+    elif sp.kernel == "masked" and "bwd_masks" in state:
+        # masked kernel needs no CSC pack — the superset rides along as the
+        # elementwise carrier the Top-KAST masked VJP fuses (core/pack.py)
+        state["pack"] = build_bwd_carrier(state["bwd_masks"])
     if sp.method == "snfs":
         state["dense_mom"] = jax.tree_util.tree_map(jnp.zeros_like, params)
     return state, axes, sparse_flags
 
 
-def refresh_pack(state, cfg):
-    """Re-pack state["pack"] from state["masks"] (host-side, amortized).
+def refresh_superset(state, cfg):
+    """Redraw the Top-KAST backward supersets from the CURRENT masks/params.
 
-    Call right after EVERY rigl/set topology-update step when
-    cfg.sparse.kernel == 'block_sparse'.  No-op for states without a pack.
+    Called from refresh_pack right after every topology update.  For
+    method='topkast' the exploration set is itself trained, so connections
+    LEAVING the superset (B_old \\ B_new) are zeroed and their optimizer
+    state reset — preserving the invariant that weights outside B are exactly
+    0 (which is what makes ``grown`` connections zero-initialized for free).
+    For rigl/snfs under dispatch the optimizer only ever touches A, so the
+    redraw just moves the gradient side-channel.  SNFS's dense-momentum
+    buffer is masked to the new superset either way: coordinates without a
+    gradient channel must not carry stale momentum into grow scores.
+    No-op for states without backward masks.
+    """
+    if "bwd_masks" not in state:
+        return state
+    sp = cfg.sparse
+    key = jax.random.fold_in(state["rng"], 2 ** 20 + int(state["step"]))
+    new_b = topkast_backward_masks(
+        state["params"], state["masks"], sp.backward_extra, key,
+        block_shape=sp.block_shape,
+    )
+    new_state = dict(state, bwd_masks=new_b)
+    if sp.method == "topkast":
+        leavers = jax.tree_util.tree_map(
+            lambda o, n: None if o is None else o.astype(bool) & ~n.astype(bool),
+            state["bwd_masks"],
+            new_b,
+            is_leaf=lambda x: x is None,
+        )
+        new_state["params"] = jax.tree_util.tree_map(
+            lambda w, l: w if l is None else jnp.where(l, 0, w).astype(w.dtype),
+            state["params"],
+            leavers,
+            is_leaf=lambda x: x is None,
+        )
+        new_state["opt"] = reset_connections(state["opt"], leavers)
+    if "dense_mom" in state:
+        new_state["dense_mom"] = jax.tree_util.tree_map(
+            lambda mo, b: mo if b is None else mo * b.astype(mo.dtype),
+            state["dense_mom"],
+            new_b,
+            is_leaf=lambda x: x is None,
+        )
+    return new_state
+
+
+def refresh_pack(state, cfg):
+    """Refresh superset + re-pack state["pack"] from state["masks"].
+
+    Call right after EVERY topology-update step (host-side, amortized over
+    delta_t).  First redraws the backward supersets (refresh_superset), then
+    rebuilds the pack the kernels consume — the block_sparse CSC/CSR (+
+    superset bidx view) or the masked-kernel bwd_mask carrier.  No-op for
+    states without a pack.
     Widths never shrink (core/pack.py), so the jitted train step only
     retraces when a layer's max active-block count grows past its packed
     width — bounded drift, not per-update churn.
@@ -180,11 +278,15 @@ def refresh_pack(state, cfg):
     up to the next slack step (core.pack.slack_width), trading a few padded
     grid iterations for fewer retraces when production topologies drift.
     """
+    state = refresh_superset(state, cfg)
     if "pack" not in state:
         return state
+    if cfg.sparse.kernel == "masked":
+        return dict(state, pack=build_bwd_carrier(state["bwd_masks"]))
     pack = refresh_pack_state(
         state["masks"], cfg.sparse.block_shape, prev=state["pack"],
         slack=getattr(cfg.sparse, "pack_width_slack", 0.0),
+        bwd_masks=state.get("bwd_masks"),
     )
     # integrity guard (core/pack.py::validate_pack): a refresh that produced
     # inconsistent CSC/CSR books would make every subsequent kernel launch
@@ -211,10 +313,12 @@ def make_train_step(
     gradient that comes back is already the paper's sparse gradient (the
     custom-VJP wgrad kernels fuse g⊙m), so the optimizer path is unchanged.
 
-    SNFS needs the DENSE gradient every step for its momentum buffer, which
-    the sparse backward (by design) never computes — it is rejected here;
-    RigL's dense grow-scores are unaffected because make_rigl_step keeps the
-    dense backward on the amortized (every delta_t) update step.
+    SNFS needs a dense-gradient side channel every step for its momentum
+    buffer; under dispatch the state's Top-KAST backward superset provides it
+    (the wgrad kernels return the dense gradient restricted to B ⊇ A — see
+    needs_bwd_masks), so snfs runs on the sparse kernels too.  For
+    method='topkast' the optimizer itself trains the superset: grads (and
+    weight decay) are masked by ``bwd_masks`` instead of ``masks``.
 
     With kernel='block_sparse' the state additionally carries
     ``state["pack"]`` (PackState, core/pack.py): the host-packed tight block
@@ -224,15 +328,11 @@ def make_train_step(
     the masks (i.e. a rigl_step ran without refresh_pack()).
     """
     dispatch = cfg.sparse.kernel not in (None, "dense")
+    is_topkast = cfg.sparse.method == "topkast"
     if dispatch:
         from ..configs.base import validate_sparse_kernel
 
         validate_sparse_kernel(cfg.sparse)
-        if cfg.sparse.method == "snfs":
-            raise ValueError(
-                "snfs tracks dense-gradient momentum every step; the sparse "
-                "backward kernels never compute it — use sparse.kernel='dense'"
-            )
     if loss_fn is None:
         loss_fn = lambda p, b, masks=None, pack=None: lm_loss(
             p, cfg, b, masks=masks, pack=pack
@@ -312,13 +412,30 @@ def make_train_step(
                 else w,
                 src,
             )
+        if dispatch and needs_bwd_masks(cfg.sparse):
+            # trace-time totality guard: EVERY dispatched layer must carry a
+            # backward-superset pack view, else its wgrad would silently run
+            # on the forward topology (or a dense matmul) instead of B's grid
+            from ..models.layers import assert_total_dispatch
+
+            assert_total_dispatch(
+                state["masks"], (), kernel=cfg.sparse.kernel,
+                where="train_step", pack=state.get("pack"), require_bwd=True,
+            )
         loss, g_dense = _grads(
             src,
             batch,
             masks=state["masks"] if dispatch else None,
             pack=state.get("pack") if dispatch else None,
         )
-        g_sparse = dense_to_sparse_grad(g_dense, state["masks"])
+        # topkast trains the whole backward superset B (exploration set gets
+        # optimizer updates); every other method optimizes A only.
+        opt_masks = (
+            state["bwd_masks"]
+            if is_topkast and "bwd_masks" in state
+            else state["masks"]
+        )
+        g_sparse = dense_to_sparse_grad(g_dense, opt_masks)
         # weight decay on ACTIVE weights only (inactive must stay untouched).
         # In dispatch mode src is RAW, so decay through the mask: m is bool,
         # the product w*m here is a grad-sized elementwise op, not a second
@@ -330,9 +447,13 @@ def make_train_step(
                 w_act = w if m is None else w * m.astype(w.dtype)
                 return g + wd * w_act.astype(g.dtype)
 
-            if dispatch:
+            if dispatch or is_topkast:
+                # decay over the OPTIMIZED support: A for rigl/set/snfs,
+                # the backward superset B for topkast (its exploration
+                # weights are trained, so they decay too); raw params carry
+                # the B-supported values even in legacy mode.
                 g_sparse = jax.tree_util.tree_map(
-                    _decay, g_sparse, src, state["masks"],
+                    _decay, g_sparse, state["params"], opt_masks,
                     is_leaf=lambda x: x is None,
                 )
             else:
@@ -386,13 +507,15 @@ def make_train_step(
             "grad_norm": gnorm,
             "nonfinite_steps": nonfinite_steps,
         }
-        if dispatch and "pack" in state:
+        if dispatch and "pack" in state and cfg.sparse.kernel == "block_sparse":
             # staleness canary: #blocks where the packed topology disagrees
-            # with the masks.  Nonzero means a rigl_step ran without
-            # refresh_pack() and the kernels execute a STALE topology — cheap
-            # to compute (tiny block grids), surfaced every step.
+            # with the masks (incl. the superset bidx view when present).
+            # Nonzero means a rigl_step ran without refresh_pack() and the
+            # kernels execute a STALE topology — cheap to compute (tiny block
+            # grids), surfaced every step.
             metrics["pack_stale"] = pack_mismatch(
-                state["masks"], state["pack"], cfg.sparse.block_shape
+                state["masks"], state["pack"], cfg.sparse.block_shape,
+                bwd_masks=state.get("bwd_masks"),
             )
         return new_state, metrics
 
@@ -400,15 +523,46 @@ def make_train_step(
 
 
 def make_rigl_step(cfg, algo: SparseAlgo, lr_sched: LRSchedule, *, loss_fn=None):
-    """Topology-update step.  Always uses the DENSE backward (apply_masks +
-    XLA matmuls) regardless of cfg.sparse.kernel: grow needs |dense grad| at
-    inactive coordinates, which the sparse kernels never compute.  Runs every
-    delta_t >= 100 steps, so the dense cost is amortized (Appendix H)."""
-    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
+    """Topology-update step.
+
+    Without kernel dispatch this is the paper's amortized DENSE backward
+    (apply_masks + XLA matmuls): grow needs |dense grad| at inactive
+    coordinates, which the sparse kernels never compute; delta_t >= 100
+    amortizes the cost (Appendix H).
+
+    Under kernel dispatch with backward supersets in the state
+    (needs_bwd_masks) the update stays on the sparse kernels end-to-end: the
+    backward returns the dense gradient restricted to B ⊇ A — exactly the
+    grow-score channel rigl needs (and the momentum snfs accumulated every
+    step) — so NO dense gradient is ever materialized.  Grow candidates are
+    thereby restricted to the superset: coordinates outside B carry no
+    gradient signal and score zero.  For method='topkast' the drop/grow is
+    magnitude-driven inside B and needs no gradient at all (rigl_update).
+    """
+    dispatch = cfg.sparse.kernel not in (None, "dense")
+    if loss_fn is None:
+        loss_fn = lambda p, b, masks=None, pack=None: lm_loss(
+            p, cfg, b, masks=masks, pack=pack
+        )
+    sig = inspect.signature(loss_fn).parameters
+    accepts_masks = "masks" in sig
+    accepts_pack = "pack" in sig
 
     def rigl_step(state, batch):
-        w_eff = apply_masks(state["params"], state["masks"])
-        loss, g_dense = jax.value_and_grad(loss_fn)(w_eff, batch)
+        if dispatch and accepts_masks and "bwd_masks" in state:
+            # sparse backward on the superset-routed kernels: g_dense below
+            # is the dense gradient ⊙ B, computed with zero dense matmuls
+            pack = state.get("pack")
+            if pack is not None and accepts_pack:
+                lf = lambda p, b: loss_fn(
+                    p, b, masks=state["masks"], pack=pack
+                )
+            else:
+                lf = lambda p, b: loss_fn(p, b, masks=state["masks"])
+            loss, g_dense = jax.value_and_grad(lf)(state["params"], batch)
+        else:
+            w_eff = apply_masks(state["params"], state["masks"])
+            loss, g_dense = jax.value_and_grad(loss_fn)(w_eff, batch)
         key = jax.random.fold_in(state["rng"], state["step"])
         new_params, new_masks, grown = rigl_update(
             state["params"],
@@ -419,6 +573,7 @@ def make_rigl_step(cfg, algo: SparseAlgo, lr_sched: LRSchedule, *, loss_fn=None)
             key,
             dense_momentum=state.get("dense_mom"),
             lr=float(lr_sched.base_lr),
+            bwd_masks=state.get("bwd_masks"),
         )
         new_opt = reset_new_connections(state["opt"], grown)
         new_state = dict(

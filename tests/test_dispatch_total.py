@@ -196,9 +196,26 @@ def test_grads_match_dense_reference(arch_state, dense_ref, kernel):
         )
     )(st["params"])
     fk, fd = tree_paths(g), tree_paths(dense_ref[1])
+    fm = tree_paths(st["masks"])
+    fb = tree_paths(st.get("bwd_masks", {})) if "bwd_masks" in st else {}
     for name in fk:
+        got, want = np.asarray(fk[name]), np.asarray(fd[name])
+        mk = fm.get(name)
+        if kernel == "block_sparse" and mk is not None:
+            # the dispatched wgrad runs on the top-(k+Δ) backward superset
+            # (docs/training.md#topkast): on the forward topology it must
+            # equal the dense reference; the B\A surplus is the grow-score
+            # side-channel, zero in the reference by construction of
+            # apply_masks — and the dispatched grad must vanish outside B.
+            m = np.asarray(mk, bool)
+            bw = fb.get(name)
+            assert bw is not None, f"{arch}/{name}: superset mask missing"
+            assert np.all(got[~np.asarray(bw, bool)] == 0.0), (
+                f"{arch}/{kernel}/{name}: gradient outside the superset"
+            )
+            got, want = got * m, want * m
         np.testing.assert_allclose(
-            np.asarray(fk[name]), np.asarray(fd[name]), rtol=1e-4, atol=1e-4,
+            got, want, rtol=1e-4, atol=1e-4,
             err_msg=f"{arch}/{kernel}/{name}",
         )
 

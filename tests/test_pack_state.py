@@ -136,10 +136,22 @@ def test_tight_grads_match_padded(state):
         jax.grad(lambda p: lm_loss(p, cfg, b, masks=st["masks"]))
     )(st["params"])
     ft, fp = tree_paths(g_tight), tree_paths(g_padded)
+    fm = tree_paths(st["masks"])
+    fb = tree_paths(st["bwd_masks"]) if "bwd_masks" in st else {}
     for name in ft:
+        got, want = np.asarray(ft[name]), np.asarray(fp[name])
+        mk = fm.get(name)
+        if mk is not None:
+            # the tight pack carries the backward superset B: its wgrad is
+            # B-supported, while the padded no-pack path stays A-restricted.
+            # The grids must agree on A; outside B the tight grad is zero.
+            m = np.asarray(mk, bool)
+            bw = fb.get(name)
+            assert bw is not None, f"{name}: superset mask missing"
+            assert np.all(got[~np.asarray(bw, bool)] == 0.0), name
+            got, want = got * m, want * m
         np.testing.assert_allclose(
-            np.asarray(ft[name]), np.asarray(fp[name]),
-            rtol=1e-5, atol=1e-6, err_msg=name,
+            got, want, rtol=1e-5, atol=1e-6, err_msg=name,
         )
 
 

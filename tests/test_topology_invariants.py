@@ -1,0 +1,298 @@
+"""Topology-invariant tier (`pytest -m topology`, `make test-topology`).
+
+Structural guarantees every mask-update method must satisfy, property-tested
+via the optional-hypothesis shim (tests/_hyp.py):
+
+  * cardinality: rigl_update conserves per-layer nnz for every method
+  * drop/grow disjointness and grown ⊆ (new \\ old)
+  * grown connections are zero-initialized (never-trained entries only)
+  * 'static' is an exact identity
+  * Top-KAST: A ⊆ B, |B| = min(total, |A| + ceil(Δ·total)), deterministic
+    under a fixed key
+  * loud ValueError when snfs/topkast state leaves are missing
+  * superset-gradient parity: the DISPATCHED Top-KAST weight gradient equals
+    the dense gradient restricted to B, so grow scores ranked on the superset
+    match dense-gradient ranking exactly (the acceptance bar for running
+    rigl/snfs/topkast with zero dense-gradient materialization)
+
+Plus the methods_comparison smoke: every method row must emit finite
+topology-distance telemetry.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import (
+    SparseAlgo,
+    UpdateSchedule,
+    mask_subset,
+    random_mask,
+    rigl_update,
+    topkast_backward_masks,
+)
+from repro.core.masks import random_block_mask
+from repro.core.rigl import topkast_superset_layer
+
+pytestmark = pytest.mark.topology
+
+SHAPES = {"a": (12, 16), "b": (16, 8)}
+METHODS = ("rigl", "set", "snfs", "topkast")
+
+
+def _algo(method, extra=0.15):
+    return SparseAlgo(
+        method=method,
+        schedule=UpdateSchedule(delta_t=10, t_end=1000, alpha=0.3),
+        backward_extra=extra,
+    )
+
+
+def _setup(seed, sparsity=0.75, extra=0.15):
+    """Tiny two-layer problem with weights supported on A (as in training)."""
+    key = jax.random.PRNGKey(seed)
+    params, masks, grads, mom = {}, {}, {}, {}
+    for i, (n, s) in enumerate(SHAPES.items()):
+        params[n] = jax.random.normal(jax.random.fold_in(key, i), s)
+        masks[n] = random_mask(jax.random.fold_in(key, 10 + i), s, sparsity)
+        grads[n] = jax.random.normal(jax.random.fold_in(key, 20 + i), s)
+        mom[n] = jax.random.normal(jax.random.fold_in(key, 30 + i), s)
+        params[n] = params[n] * masks[n]
+    bwd = topkast_backward_masks(
+        params, masks, extra, jax.random.fold_in(key, 40)
+    )
+    return key, params, masks, grads, mom, bwd
+
+
+@settings(max_examples=16, deadline=None)
+@given(st.integers(min_value=0, max_value=63))
+def test_cardinality_and_grown_invariants(seed):
+    """For every method: nnz conserved, grown ⊆ new\\old, grown weights 0."""
+    key, params, masks, grads, mom, bwd = _setup(seed)
+    for method in METHODS:
+        p2, m2, grown = rigl_update(
+            params, masks, grads, 10, _algo(method),
+            jax.random.fold_in(key, 50),
+            dense_momentum=mom, bwd_masks=bwd,
+        )
+        for n in SHAPES:
+            old = np.asarray(masks[n], bool)
+            new = np.asarray(m2[n], bool)
+            gr = np.asarray(grown[n], bool)
+            assert new.sum() == old.sum(), (method, n, seed)
+            # net-dropped and grown are disjoint: a slot the update removed
+            # is never simultaneously flagged as a fresh activation (grown ⊆
+            # new; freshly-dropped slots that regrow are in new, so they are
+            # not net-dropped — official-code semantics)
+            assert np.all(gr <= new), (method, n, seed)
+            assert not np.any((old & ~new) & gr), (method, n, seed)
+            w2 = np.asarray(p2[n])
+            assert np.all(w2[gr] == 0.0), (method, n, seed)
+            if method == "topkast":
+                # new actives only ever come from inside the superset
+                assert np.all(new <= (old | np.asarray(bwd[n], bool))), (n, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=63))
+def test_static_is_identity(seed):
+    key, params, masks, grads, mom, bwd = _setup(seed)
+    p2, m2, grown = rigl_update(
+        params, masks, grads, 10, _algo("static"), jax.random.fold_in(key, 50)
+    )
+    for n in SHAPES:
+        assert np.array_equal(np.asarray(m2[n]), np.asarray(masks[n])), n
+        assert np.array_equal(np.asarray(p2[n]), np.asarray(params[n])), n
+        assert not np.asarray(grown[n]).any(), n
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=63),
+    st.floats(min_value=0.0, max_value=0.5),
+)
+def test_topkast_superset_containment_and_size(seed, extra):
+    """A ⊆ B with |B| = min(total, |A| + ceil(extra·total)), per layer."""
+    key, params, masks, _, _, _ = _setup(seed)
+    bwd = topkast_backward_masks(
+        params, masks, extra, jax.random.fold_in(key, 7)
+    )
+    for n in SHAPES:
+        A, B = masks[n], bwd[n]
+        assert bool(mask_subset(A, B)), (n, seed, extra)
+        total = A.size
+        want = min(total, int(A.sum()) + math.ceil(extra * total))
+        assert int(np.asarray(B, bool).sum()) == want, (n, seed, extra)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=63))
+def test_updates_deterministic_under_fixed_key(seed):
+    """Same key, same inputs -> bit-identical masks/params for every method."""
+    key, params, masks, grads, mom, bwd = _setup(seed)
+    sub = jax.random.fold_in(key, 50)
+    for method in METHODS:
+        a = rigl_update(params, masks, grads, 10, _algo(method), sub,
+                        dense_momentum=mom, bwd_masks=bwd)
+        b = rigl_update(params, masks, grads, 10, _algo(method), sub,
+                        dense_momentum=mom, bwd_masks=bwd)
+        for n in SHAPES:
+            assert np.array_equal(np.asarray(a[1][n]), np.asarray(b[1][n])), (
+                method, n,
+            )
+            assert np.array_equal(np.asarray(a[0][n]), np.asarray(b[0][n])), (
+                method, n,
+            )
+    # superset construction is deterministic too
+    b1 = topkast_backward_masks(params, masks, 0.2, sub)
+    b2 = topkast_backward_masks(params, masks, 0.2, sub)
+    for n in SHAPES:
+        assert np.array_equal(np.asarray(b1[n]), np.asarray(b2[n])), n
+
+
+def test_snfs_missing_momentum_raises_loudly():
+    key, params, masks, grads, _, _ = _setup(0)
+    with pytest.raises(ValueError, match="dense_momentum.*'a'"):
+        rigl_update(params, masks, grads, 10, _algo("snfs"), key)
+
+
+def test_topkast_missing_bwd_masks_raises_loudly():
+    key, params, masks, grads, _, _ = _setup(0)
+    with pytest.raises(ValueError, match="bwd_masks.*'a'"):
+        rigl_update(params, masks, grads, 10, _algo("topkast"), key)
+
+
+def test_require_bwd_guard_flags_missing_superset_view():
+    """assert_total_dispatch(require_bwd=True) raises at trace time when a
+    mask leaf has no backward-superset pack view — the guard that proves no
+    dense gradient can materialize during a Top-KAST/SNFS dispatched step."""
+    from repro.models.layers import assert_total_dispatch
+
+    masks = {"mlp": {"w": jnp.ones((4, 4), bool)}}
+    with pytest.raises(RuntimeError, match="backward-superset"):
+        assert_total_dispatch(
+            masks, set(), kernel="masked", where="test",
+            pack={"mlp": {"w": None}}, require_bwd=True,
+        )
+    # carrier and bidx views both satisfy it
+    assert_total_dispatch(
+        masks, set(), kernel="masked", where="test",
+        pack={"mlp": {"w": {"bwd_mask": jnp.ones((4, 4), bool)}}},
+        require_bwd=True,
+    )
+
+
+# --------------------------------------------------------------------------
+# Superset-gradient parity: dispatched wgrad == dense grad restricted to B.
+# --------------------------------------------------------------------------
+
+def _topk_set(score, cand, k):
+    """Indices of the k largest scores among flat candidate slots."""
+    s = np.where(cand.reshape(-1), score.reshape(-1), -np.inf)
+    return set(np.argsort(-s, kind="stable")[:k].tolist())
+
+
+def test_topkast_masked_grad_parity_with_dense():
+    """kernels/ops.py::topkast_masked_linear wgrad == dense grad ⊙ B, so the
+    grow-score top-k on superset support matches the dense-gradient top-k."""
+    from repro.kernels import topkast_masked_linear
+
+    key = jax.random.PRNGKey(3)
+    K, N = 32, 24
+    x = jax.random.normal(jax.random.fold_in(key, 0), (8, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+    A = random_mask(jax.random.fold_in(key, 2), (K, N), 0.8)
+    B = topkast_superset_layer(w * A, A, 0.15, jax.random.fold_in(key, 3))
+    y = jax.random.normal(jax.random.fold_in(key, 4), (8, N), jnp.float32)
+
+    def disp(w):
+        out = topkast_masked_linear(x, w, A, B, block=(128, 16, 16))
+        return jnp.sum((out - y) ** 2)
+
+    def dense(w_eff):
+        # the DENSE gradient: d loss / d w_eff with no mask in the way —
+        # Top-KAST's wgrad is exactly this restricted to B (the B\A slots
+        # carry the exploration signal a grad through w*A would zero out)
+        return jnp.sum((x @ w_eff - y) ** 2)
+
+    l_disp, g_disp = jax.value_and_grad(disp)(w)
+    l_dense, g_dense = jax.value_and_grad(dense)(w * A)
+    np.testing.assert_allclose(float(l_disp), float(l_dense), rtol=1e-5)
+    gB = np.asarray(g_dense) * np.asarray(B, np.float32)
+    np.testing.assert_allclose(np.asarray(g_disp), gB, rtol=1e-5, atol=1e-5)
+    # zero outside B: nothing dense ever materializes
+    assert np.all(np.asarray(g_disp)[~np.asarray(B, bool)] == 0.0)
+    # grow-score parity on the exploration candidates
+    cand = np.asarray(B, bool) & ~np.asarray(A, bool)
+    k = max(1, cand.sum() // 2)
+    assert _topk_set(np.abs(np.asarray(g_disp)), cand, k) == _topk_set(
+        np.abs(np.asarray(g_dense)), cand, k
+    )
+
+
+def test_topkast_block_sparse_grad_parity_with_dense():
+    """Block-sparse route (pack carries bidx/bcnt): wgrad equals the dense
+    gradient restricted to the superset BLOCKS, zero elsewhere."""
+    from repro.core.pack import build_pack_state, validate_pack
+    from repro.kernels import block_sparse_linear
+
+    key = jax.random.PRNGKey(5)
+    K, N, bs = 64, 48, 16
+    x = jax.random.normal(jax.random.fold_in(key, 0), (8, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+    A = random_block_mask(jax.random.fold_in(key, 2), (K, N), 0.75, (bs, bs))
+    B = topkast_superset_layer(
+        w * A, A, 0.15, jax.random.fold_in(key, 3), block_shape=(bs, bs)
+    )
+    masks = {"mlp": {"w": np.asarray(A, bool)}}
+    bwd = {"mlp": {"w": np.asarray(B, bool)}}
+    pack = build_pack_state(masks, (bs, bs), bwd_masks=bwd)
+    validate_pack(pack)
+    entry = pack["mlp"]["w"]
+    assert entry is not None and "bidx" in entry, "superset CSC missing"
+
+    def disp(w):
+        return jnp.sum(
+            block_sparse_linear(x, w, pack=entry, block=(128, bs, bs)) ** 2
+        )
+
+    def dense(w_eff):
+        return jnp.sum((x @ w_eff) ** 2)
+
+    g_disp = jax.grad(disp)(w)
+    g_dense = jax.grad(dense)(w * A)
+    gB = np.asarray(g_dense) * np.asarray(B, np.float32)
+    np.testing.assert_allclose(np.asarray(g_disp), gB, rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(g_disp)[~np.asarray(B, bool)] == 0.0)
+
+
+# --------------------------------------------------------------------------
+# methods_comparison smoke: topology telemetry must be present and finite.
+# --------------------------------------------------------------------------
+
+def test_methods_comparison_smoke_topology_columns():
+    from benchmarks.methods_comparison import METHODS as BENCH_METHODS, run
+
+    rows = run(steps=60, delta_t=20)
+    assert len(rows) == len(BENCH_METHODS)
+    by_name = {r["name"].split("/", 1)[1]: r["derived"] for r in rows}
+    assert "topkast" in by_name
+    for m, d in by_name.items():
+        for col in (
+            "jaccard_dist_mean", "nhd_mean", "graph_edit_dist_total",
+            "dropped_total", "grown_total", "n_updates",
+        ):
+            assert col in d, (m, col)
+            assert np.isfinite(d[col]), (m, col, d[col])
+        if m in ("rigl", "set", "snfs", "topkast"):
+            assert d["n_updates"] == 2, (m, d["n_updates"])
+            assert d["grown_total"] >= 0 and d["dropped_total"] > 0, m
+            # cross-method distance columns vs the rigl reference
+            assert "jaccard_dist_vs_rigl" in d and "nhd_vs_rigl" in d, m
+            assert 0.0 <= d["jaccard_dist_vs_rigl"] <= 1.0, m
+        if m in ("dense", "static", "snip", "small_dense"):
+            assert d["n_updates"] == 0, m

@@ -144,9 +144,9 @@ def test_snfs_tracks_dense_momentum():
 # Pallas kernel-dispatch mode (cfg.sparse.kernel != 'dense')
 # ---------------------------------------------------------------------------
 
-def _kernel_cfg(kernel, arch="h2o-danube-1.8b", block=16, sparsity=0.8):
+def _kernel_cfg(kernel, arch="h2o-danube-1.8b", block=16, sparsity=0.8, method="rigl"):
     cfg = get_config(arch, smoke=True)
-    sp = dict(sparsity=sparsity, method="rigl", delta_t=10, alpha=0.3, kernel=kernel)
+    sp = dict(sparsity=sparsity, method=method, delta_t=10, alpha=0.3, kernel=kernel)
     if kernel == "block_sparse":
         sp["block_shape"] = (block, block)
         sp["kernel_block"] = (128, block, block)
@@ -155,15 +155,19 @@ def _kernel_cfg(kernel, arch="h2o-danube-1.8b", block=16, sparsity=0.8):
     return dataclasses.replace(cfg, sparse=SparseConfig(**sp))
 
 
-def test_block_sparse_kernel_trains_end_to_end(monkeypatch):
-    """50 steps through make_train_step with kernel='block_sparse': loss must
-    decrease, nnz must be preserved, masks must stay block-aligned, and
-    apply_masks must NEVER run on the dispatched hot path (the masked weight
-    copy is never materialized)."""
+@pytest.mark.parametrize("method", ["rigl", "snfs", "topkast"])
+def test_block_sparse_kernel_trains_end_to_end(monkeypatch, method):
+    """50 steps through make_train_step with kernel='block_sparse' for every
+    gradient-guided method: loss must decrease, nnz must be preserved, masks
+    must stay block-aligned, and apply_masks must NEVER run on the dispatched
+    hot path (the masked weight copy is never materialized).  snfs/topkast
+    here is itself a regression test — both used to be rejected under kernel
+    dispatch; the superset PackState channel (core/pack.py::pack_entry) lifted
+    that restriction."""
     import repro.models.model as model_mod
     import repro.training.steps as steps_mod
 
-    cfg = _kernel_cfg("block_sparse")
+    cfg = _kernel_cfg("block_sparse", method=method)
     opt = OptConfig(kind="adam", weight_decay=0.0, grad_clip=1.0)
     steps = 50
     lr = LRSchedule(base_lr=3e-3, warmup_steps=10, total_steps=steps)
@@ -239,13 +243,16 @@ def test_masked_kernel_grads_match_legacy_path():
         )
 
 
-def test_snfs_rejected_under_kernel_dispatch():
-    cfg = _kernel_cfg("masked")
-    cfg = dataclasses.replace(
-        cfg, sparse=dataclasses.replace(cfg.sparse, method="snfs")
-    )
-    with pytest.raises(ValueError, match="snfs"):
-        make_train_step(cfg, OptConfig(), LRSchedule(total_steps=10))
+def test_snfs_no_longer_rejected_under_kernel_dispatch():
+    """Regression: make_train_step used to raise ValueError('snfs ... dense')
+    for any non-dense kernel — SNFS grow scores needed a dense gradient the
+    dispatched path never materialized.  The backward-superset channel
+    (training/steps.py::needs_bwd_masks) now feeds grow scores from the
+    superset gradient, so construction must succeed for every kernel."""
+    for kernel in ("masked", "block_sparse"):
+        cfg = _kernel_cfg(kernel, method="snfs")
+        step = make_train_step(cfg, OptConfig(), LRSchedule(total_steps=10))
+        assert callable(step)
 
 
 def test_block_sparse_requires_matching_block_shape():
