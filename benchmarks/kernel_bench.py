@@ -304,6 +304,176 @@ def _moe_grouped_rows(key):
     return rows
 
 
+def _fused_epilogue_rows(key):
+    """Fused wgrad->SGD epilogue rows (docs/kernels.md#fused-epilogue).
+
+    The fused kernels fold m_new = mu*mom + dw + wd*w into the wgrad store
+    while dw is still VMEM-resident, so the train step's HBM-BOUND elementwise
+    epilogue shrinks from 5 grad-sized passes (read dw, mom, w; write w, mom)
+    to 4 (read m_new, w; write w, mom): the momentum read is eliminated from
+    the bandwidth-bound region.  The kernel's own extra mom/w streams ride the
+    MXU-bound wgrad matmul (2*M*K*N flops vs K*N bytes), where they hide under
+    compute — the point is moving passes OUT of the bandwidth-bound epilogue,
+    not shrinking total bytes.  Parity canaries (sr=False): the fused VJP's
+    weight cotangent must equal the unfused composition <= 1e-5.
+    """
+    from repro.kernels.ops import (
+        fused_block_sparse_linear,
+        fused_masked_linear,
+    )
+
+    M, K, N = 128, 256, 128
+    mu, wd = 0.9, 1e-4
+    x = jax.random.normal(jax.random.fold_in(key, 50), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 51), (K, N), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 52), (M, N), jnp.float32)
+    mask = jax.random.uniform(jax.random.fold_in(key, 53), (K, N)) < 0.25
+    mom = (
+        jax.random.normal(jax.random.fold_in(key, 54), (K, N), jnp.float32)
+        * mask
+    )
+    seed = jnp.zeros((1,), jnp.int32)
+
+    def cot_w(fn):
+        _, vjp = jax.vjp(fn, w)
+        return vjp(g)[0]
+
+    m_fused = cot_w(lambda ww: fused_masked_linear(
+        x, ww, mask, mom, seed, mu=mu, wd=wd, sr=False, interpret=True
+    ))
+    dw_ref = cot_w(lambda ww: masked_linear(x, ww, mask, interpret=True))
+    m_ref = mu * mom + dw_ref + wd * (w * mask)
+    err_m = float(jnp.max(jnp.abs(m_fused - m_ref)))
+
+    bm = jax.random.uniform(jax.random.fold_in(key, 55), (K // 128, N // 128)) < 0.5
+    if not bool(bm.any()):
+        bm = bm.at[0, 0].set(True)
+    wb = w * np.kron(np.asarray(bm), np.ones((128, 128), np.float32))[:K, :N]
+    momb = jax.random.normal(
+        jax.random.fold_in(key, 56), (K, N), jnp.float32
+    ) * (wb != 0)
+    mb_fused = cot_w(lambda ww: fused_block_sparse_linear(
+        x, ww, momb, seed, mu=mu, wd=wd, sr=False,
+        block=(128, 128, 128), block_mask=bm, interpret=True,
+    ))
+    dwb_ref = cot_w(lambda ww: block_sparse_linear(
+        x, ww, bm, block=(128, 128, 128), interpret=True
+    ))
+    blk = jnp.kron(bm, jnp.ones((128, 128), jnp.float32))[:K, :N]
+    mb_ref = (mu * momb + dwb_ref + wd * w) * blk
+    err_b = float(jnp.max(jnp.abs(mb_fused - mb_ref)))
+    assert err_m <= 1e-5 and err_b <= 1e-5, (err_m, err_b)
+
+    grad_bytes = F32 * K * N
+    epi_unfused = 5 * grad_bytes  # R dw, mom, w; W w, mom
+    epi_fused = 4 * grad_bytes    # R m_new, w; W w, mom
+    assert epi_fused < epi_unfused
+    assert epi_unfused - epi_fused == grad_bytes  # exactly one grad pass
+    return [{
+        "name": "kernel/fused_epilogue_masked",
+        "us_per_call": 0.0,  # accounting + parity row
+        "derived": {
+            "epilogue_hbm_bytes_unfused": epi_unfused,
+            "epilogue_hbm_bytes_fused": epi_fused,
+            "epilogue_passes_unfused": 5,
+            "epilogue_passes_fused": 4,
+            "grad_passes_removed": 1,
+            "kernel_extra_streams_compute_shadowed": 2,  # mom + w reads
+            "parity_max_abs_err": err_m,
+        },
+    }, {
+        "name": "kernel/fused_epilogue_block_sparse",
+        "us_per_call": 0.0,
+        "derived": {
+            "epilogue_hbm_bytes_unfused": epi_unfused,
+            "epilogue_hbm_bytes_fused": epi_fused,
+            "grad_passes_removed": 1,
+            "parity_max_abs_err": err_b,
+        },
+    }]
+
+
+def _gqa_softcap_rows(key):
+    """GQA group folding + in-kernel logit softcap rows.
+
+    Folded flash BlockSpecs read K/V row b // G straight from the UNREPEATED
+    (BH/G, Sk, d) arrays, so the repeat materialization the old path needed
+    (write the (BH, Sk, d) expansion, then DMA it back into the kernel) is
+    gone: 2 full passes over the EXPANDED K/V bytes saved, and the
+    HBM-resident K/V footprint drops G-fold.  Asserted analytically (the
+    per-tile kernel DMA is unchanged — each grid row still gathers its
+    group's K/V; the win is the eliminated expansion round-trip + footprint,
+    not per-tile dedup).  Softcap: s = c*tanh(s/c) inside the flash kernels
+    (fwd + VJP), parity vs the jnp oracle <= 1e-5.
+    """
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    BH, G, S, d = 8, 4, 128, 32
+    q = jax.random.normal(jax.random.fold_in(key, 60), (BH, S, d), jnp.float32)
+    kv = jax.random.normal(
+        jax.random.fold_in(key, 61), (2, BH // G, S, d), jnp.float32
+    )
+    k, v = kv[0], kv[1]
+    k_rep = jnp.repeat(k, G, axis=0)
+    v_rep = jnp.repeat(v, G, axis=0)
+    out_fold = flash_attention(
+        q, k, v, causal=True, kv_groups=G, interpret=True
+    )
+    out_rep = flash_attention(q, k_rep, v_rep, causal=True, interpret=True)
+    err_fold = float(jnp.max(jnp.abs(out_fold - out_rep)))
+    g_fold = jax.grad(lambda a: jnp.sum(jnp.sin(flash_attention(
+        a, k, v, causal=True, kv_groups=G, interpret=True
+    ))))(q)
+    g_rep = jax.grad(lambda a: jnp.sum(jnp.sin(flash_attention(
+        a, k_rep, v_rep, causal=True, interpret=True
+    ))))(q)
+    err_fold_bwd = float(jnp.max(jnp.abs(g_fold - g_rep)))
+    assert err_fold <= 1e-5 and err_fold_bwd <= 1e-5, (err_fold, err_fold_bwd)
+
+    kv_bytes_folded = 2 * F32 * (BH // G) * S * d   # HBM-resident K/V
+    kv_bytes_repeated = 2 * F32 * BH * S * d        # expanded copy
+    # repeat path: write the expansion once + kernel reads it back
+    repeat_roundtrip_bytes = 2 * kv_bytes_repeated
+    assert kv_bytes_repeated == G * kv_bytes_folded  # G-fold footprint
+
+    cap = 30.0
+    err_cap = float(jnp.max(jnp.abs(
+        flash_attention(q, k_rep, v_rep, causal=True, softcap=cap,
+                        interpret=True)
+        - flash_attention_ref(q, k_rep, v_rep, causal=True, softcap=cap)
+    )))
+    gc_k = jax.grad(lambda a: jnp.sum(jnp.sin(flash_attention(
+        a, k_rep, v_rep, causal=True, softcap=cap, interpret=True
+    ))))(q)
+    gc_r = jax.grad(lambda a: jnp.sum(jnp.sin(flash_attention_ref(
+        a, k_rep, v_rep, causal=True, softcap=cap
+    ))))(q)
+    err_cap_bwd = float(jnp.max(jnp.abs(gc_k - gc_r)))
+    assert err_cap <= 1e-5 and err_cap_bwd <= 1e-5, (err_cap, err_cap_bwd)
+    return [{
+        "name": f"kernel/flash_gqa_folded_G{G}",
+        "us_per_call": 0.0,
+        "derived": {
+            "kv_groups": G,
+            "kv_hbm_bytes_folded": kv_bytes_folded,
+            "kv_hbm_bytes_repeated": kv_bytes_repeated,
+            "repeat_roundtrip_bytes_removed": repeat_roundtrip_bytes,
+            "footprint_reduction": G,
+            "parity_max_abs_err_fwd": err_fold,
+            "parity_max_abs_err_bwd": err_fold_bwd,
+        },
+    }, {
+        "name": f"kernel/flash_softcap_c{cap}",
+        "us_per_call": 0.0,
+        "derived": {
+            "softcap": cap,
+            "parity_max_abs_err_fwd": err_cap,
+            "parity_max_abs_err_bwd": err_cap_bwd,
+        },
+    }]
+
+
 def _attention_rows(key):
     """Flash-attention rows: tight (AttnSchedule) vs padded grids + the
     wasted-DMA accounting that motivated them.
@@ -504,6 +674,10 @@ def run(quick=True):
     # attention: schedule-driven tight grids vs the padded/@pl.when baseline
     # (grid + DMA fractions, tight-vs-padded wall time, fwd+bwd parity)
     rows.extend(_attention_rows(key))
+    # fused wgrad->optimizer epilogue (HBM-pass accounting + parity) and
+    # GQA group folding / in-kernel softcap (footprint accounting + parity)
+    rows.extend(_fused_epilogue_rows(key))
+    rows.extend(_gqa_softcap_rows(key))
     # interpret-mode correctness canaries for the Pallas path itself (cheap
     # shapes — wall time here is NOT meaningful, only parity is)
     xs = jax.random.normal(key, (128, 256), jnp.float32)
@@ -526,6 +700,13 @@ def run(quick=True):
 
 
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="output path (make bench-kernels-smoke points this "
+                         "at /tmp so verify runs don't churn the tracked file)")
+    args = ap.parse_args()
     rows = run(quick=True)
     out = {
         "meta": {
@@ -535,7 +716,7 @@ def main():
         },
         "rows": rows,
     }
-    path = pathlib.Path("BENCH_kernels.json")
+    path = pathlib.Path(args.out)
     path.write_text(json.dumps(out, indent=1))
     print(f"wrote {path} ({len(rows)} rows)")
     for r in rows:

@@ -84,12 +84,21 @@ class SparseConfig:
                        1-wide wiggle.  0.0 (default) keeps exact tight widths;
                        grouped banks benefit most (one lopsided expert widens
                        the whole bank's shared width).
+      fused_epilogue   fuse the SGD grad-accum epilogue into the wgrad
+                       kernels (docs/kernels.md#fused-epilogue): the weight
+                       cotangent leaving the backward IS the new momentum
+                       m_new = mu*mom + dw + wd*w, so the raw gradient never
+                       round-trips HBM.  Requires kernel dispatch + plain SGD
+                       (no nesterov/grad_clip, microbatches=1, method !=
+                       'snfs', bf16_grads off) — training/steps.py raises
+                       loudly on unsupported combinations.  With
+                       OptConfig.state_dtype='bfloat16' the kernel also
+                       stochastically rounds m_new onto the bf16 grid.
 
     Execution path for ATTENTION score blocks (independent of the weight
     kernels above; models/attention.py dispatch):
       attn_kernel      'dense'        pure-jnp chunked attention — scores
-                                      materialize in HBM (reference path; the
-                                      only path supporting logit_softcap).
+                                      materialize in HBM (reference path).
                        'flash'        Pallas flash attention, fwd + custom-VJP
                                       bwd, PADDED grid: the KV loop spans the
                                       full Sk/bk range with dead score blocks
@@ -115,6 +124,7 @@ class SparseConfig:
     kernel: str = "dense"
     kernel_block: tuple[int, int, int] = (128, 128, 128)  # (bm, bn, bk) tiles
     pack_width_slack: float = 0.0  # width hysteresis (0 = exact tight widths)
+    fused_epilogue: bool = False  # fuse SGD epilogue into the wgrad kernels
     attn_kernel: str = "dense"  # dense | flash | flash_tight
 
 
@@ -140,6 +150,14 @@ def validate_sparse_kernel(sp: SparseConfig) -> None:
         raise ValueError(
             f"sparse.pack_width_slack must be in [0, 1] "
             f"(got {sp.pack_width_slack!r})"
+        )
+    if getattr(sp, "fused_epilogue", False) and sp.kernel not in (
+        "masked", "block_sparse"
+    ):
+        raise ValueError(
+            "sparse.fused_epilogue fuses the optimizer epilogue into the "
+            "Pallas wgrad kernels — it requires kernel='masked' or "
+            f"'block_sparse' (got kernel={sp.kernel!r})"
         )
     if sp.kernel == "block_sparse":
         _, bn, bk = sp.kernel_block

@@ -3,8 +3,15 @@
 [hf:xai-org/grok-1; unverified]. 64L d_model=6144 48H (GQA kv=8)
 moe_d_ff=32768 vocab=131072. Pure-MoE FFN every layer; FSDP required.
 8 experts on a 16-way model axis => intra-expert TP (see moe.py docstring).
+
+attn_kernel='flash_tight': the flash kernels apply logit_softcap in-kernel
+(fwd + VJP) and fold the kv=8 GQA groups into the BlockSpec index maps, so
+the 48H/8kv attention reads each K/V group once instead of 6x — the tight
+schedule-aware grid is the intended production path for this cell.
 """
-from .base import ModelConfig
+from .base import ModelConfig, SparseConfig
+
+_SP = SparseConfig(attn_kernel="flash_tight")
 
 CONFIG = ModelConfig(
     name="grok-1-314b", family="moe", n_layers=64, d_model=6144,
@@ -12,11 +19,12 @@ CONFIG = ModelConfig(
     n_experts=8, top_k=2, moe_d_ff=32768, logit_softcap=30.0,
     final_softcap=50.0, tie_embeddings=False, fsdp=True, loss_chunks=4,
     microbatches=16, param_dtype="bfloat16", grad_accum_dtype="bfloat16",
+    sparse=_SP,
 )
 
 SMOKE = ModelConfig(
     name="grok-1-314b-smoke", family="moe", n_layers=2, d_model=64,
     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=0, vocab_size=128,
     n_experts=4, top_k=2, moe_d_ff=64, logit_softcap=30.0, final_softcap=50.0,
-    tie_embeddings=False, q_chunk=64, remat=False,
+    tie_embeddings=False, q_chunk=64, remat=False, sparse=_SP,
 )

@@ -25,6 +25,7 @@ from .pack import (  # noqa: F401
     PackIntegrityError,
     build_bwd_carrier,
     build_pack_state,
+    is_pack_entry,
     pack_mismatch,
     pack_stats,
     refresh_pack_state,

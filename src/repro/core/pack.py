@@ -114,11 +114,15 @@ class PackIntegrityError(ValueError):
 def is_pack_entry(x) -> bool:
     """Leaf predicate for pack pytrees (an entry dict or a None leaf).
 
-    Covers both the block-sparse CSC/CSR entries and the masked-kernel
-    backward-superset carrier (``{"bwd_mask": ...}``, build_bwd_carrier).
+    Covers the block-sparse CSC/CSR entries, the masked-kernel
+    backward-superset carrier (``{"bwd_mask": ...}``, build_bwd_carrier), and
+    the fused-epilogue entries the train step builds per-trace by merging
+    ``{"mom", "seed", "mu", "wd", "sr"}`` into either of the above
+    (training/steps.py — layers.linear routes on the ``mom`` key).
     """
     return x is None or (
-        isinstance(x, dict) and (("idx" in x and "cnt" in x) or "bwd_mask" in x)
+        isinstance(x, dict)
+        and (("idx" in x and "cnt" in x) or "bwd_mask" in x or "mom" in x)
     )
 
 

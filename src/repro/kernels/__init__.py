@@ -6,6 +6,10 @@ per-kernel modules hold the pallas_call plumbing and backward kernels.
 from .ops import (  # noqa: F401
     auto_interpret,
     block_sparse_linear,
+    fused_block_sparse_linear,
+    fused_grouped_block_sparse_linear,
+    fused_grouped_masked_linear,
+    fused_masked_linear,
     grouped_block_sparse_linear,
     grouped_masked_linear,
     masked_linear,
@@ -17,6 +21,10 @@ from .ops import (  # noqa: F401
 __all__ = [
     "auto_interpret",
     "block_sparse_linear",
+    "fused_block_sparse_linear",
+    "fused_grouped_block_sparse_linear",
+    "fused_grouped_masked_linear",
+    "fused_masked_linear",
     "grouped_block_sparse_linear",
     "grouped_masked_linear",
     "masked_linear",

@@ -53,11 +53,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .masked_matmul import sr_to_bf16
+
 __all__ = [
     "block_sparse_matmul",
     "grouped_block_sparse_matmul",
     "topkast_block_sparse_matmul",
     "topkast_grouped_block_sparse_matmul",
+    "fused_block_sparse_matmul",
+    "fused_grouped_block_sparse_matmul",
     "pack_block_mask",
     "pack_block_mask_rows",
     "pack_block_mask_traced",
@@ -877,4 +881,366 @@ def topkast_grouped_block_sparse_matmul(
     return _topkast_grouped_block_sparse_matmul(
         x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
         bm, bn, bk, interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused wgrad -> optimizer epilogue (docs/kernels.md#fused-epilogue)
+#
+# Block-sparse twin of masked_matmul.fused_masked_matmul: the packed wgrad
+# kernel DMAs the matching w/mom tiles alongside x/g and stores
+# m_new = mu*mom + xᵀg + wd*w per active block — the packed blocks leaving
+# the kernel ARE the new SGD momentum (optionally stochastically rounded onto
+# the bf16 grid), scattered into the dense (K, N) cotangent layout the
+# optimizer consumes.  The raw dw never round-trips HBM.  One custom-VJP
+# covers plain AND Top-KAST: the wgrad grid is driven by whichever pack the
+# wrapper selects (tight CSC, or the B ⊇ A superset ``bidx``/``bcnt``).
+# ---------------------------------------------------------------------------
+
+def _dw_fused_kernel(
+    idx_ref, cnt_ref, seed_ref, x_ref, g_ref, w_ref, mom_ref, o_ref, acc_ref,
+    *, n_m: int, ncols: int, mu: float, wd: float, sr: bool,
+):
+    i = pl.program_id(2)
+    j, s = pl.program_id(0), pl.program_id(1)
+    # block row id for the sr element-coordinate hash; read at top level
+    # (program_id/scalar reads inside a pl.when branch fail interpret lowering)
+    kb = _clamp(idx_ref, cnt_ref, j, s)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < cnt_ref[j])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        m_new = (
+            mu * mom_ref[...].astype(jnp.float32)
+            + acc_ref[...]
+            + wd * w_ref[...].astype(jnp.float32)
+        )
+        # padded slots alias a clamped block's w/mom tiles — zero them BEFORE
+        # sr (sr_to_bf16(0) == 0 exactly, so zeros stay zeros)
+        m_new = jnp.where(s < cnt_ref[j], m_new, jnp.zeros_like(m_new))
+        if sr:
+            bkk, bnn = m_new.shape
+            rows = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 1)
+            ku, ju = jnp.uint32(kb), jnp.uint32(j)
+            gid = (ku * bkk + rows) * jnp.uint32(ncols) + (ju * bnn + cols)
+            m_new = sr_to_bf16(m_new, seed_ref[0], gid)
+        o_ref[...] = m_new.astype(o_ref.dtype)[None]
+
+
+def _dw_fused_call(
+    x, g, wg_idx, wg_cnt, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+):
+    from jax.experimental.pallas import tpu as pltpu
+
+    M, K = x.shape
+    N = g.shape[1]
+    nnb = N // bn
+    max_k = wg_idx.shape[1]
+    n_m = M // bm
+    grid = (nnb, max_k, n_m)
+
+    def x_map(j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (i, _clamp(idx_ref, cnt_ref, j, s))
+
+    def g_map(j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (i, j)
+
+    def wm_map(j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (_clamp(idx_ref, cnt_ref, j, s), j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bm, bn), g_map),
+            pl.BlockSpec((bk, bn), wm_map),
+            pl.BlockSpec((bk, bn), wm_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bk, bn), lambda j, s, i, *_: (j * max_k + s, 0, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dw_fused_kernel, n_m=n_m, ncols=N, mu=mu, wd=wd, sr=sr
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nnb * max_k, bk, bn), jnp.float32),
+        interpret=interpret,
+    )(wg_idx, wg_cnt, seed, x, g, w, mom)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13, 14, 15, 16)
+)
+def _fused_block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed,
+    mu, wd, sr, bm, bn, bk, interpret,
+):
+    return _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _fbs_fwd(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed,
+    mu, wd, sr, bm, bn, bk, interpret,
+):
+    out = _fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (
+        x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed
+    )
+
+
+def _fbs_bwd(mu, wd, sr, bm, bn, bk, interpret, res, g):
+    (
+        x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed
+    ) = res
+    K = w.shape[0]
+    nkb = K // bk
+
+    dx = _dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _dw_fused_call(
+        x, g, wg_idx, wg_cnt, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+    )
+    m_new = _scatter_packed_dw(packed, wg_idx, wg_cnt, nkb, bk, bn, w.dtype)
+
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (
+        dx, m_new, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt),
+        z(wg_idx), z(wg_cnt), jnp.zeros_like(mom), z(seed),
+    )
+
+
+_fused_block_sparse_matmul.defvjp(_fbs_fwd, _fbs_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mu", "wd", "sr", "bm", "bn", "bk", "interpret")
+)
+def fused_block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    mom,
+    seed,
+    bwd_idx=None,
+    bwd_cnt=None,
+    row_idx=None,
+    row_cnt=None,
+    *,
+    mu: float,
+    wd: float,
+    sr: bool,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """``block_sparse_matmul`` whose weight COTANGENT is the new SGD momentum.
+
+    Forward/dgrad identical to ``block_sparse_matmul``.  The packed wgrad
+    kernel stores m_new = mu*mom + xᵀg + wd*w per active block of the wgrad
+    pack — ``bwd_idx``/``bwd_cnt`` (Top-KAST superset B) when given, else the
+    forward CSC — scattered to the dense (K, N) layout (zeros off-support;
+    momentum there is pinned to zero, the documented fused semantic).  seed:
+    (1,) int32 per-leaf counter; sr=True stochastically rounds m_new onto the
+    bf16 grid in-kernel (masked_matmul.sr_to_bf16).  Consumed via
+    ops.fused_block_sparse_linear + optim.apply_opt_fused.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and N % bn == 0 and K % bk == 0 and M % bm == 0
+    assert mom.shape == w.shape, (mom.shape, w.shape)
+    if row_idx is None:
+        bmask = unpack_block_mask(block_idx, block_cnt, K // bk)
+        row_idx, row_cnt = _pack_jnp(bmask.T, N // bn)
+    if bwd_idx is None:
+        bwd_idx, bwd_cnt = block_idx, block_cnt
+    return _fused_block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+        mom, seed, mu, wd, sr, bm, bn, bk, interpret,
+    )
+
+
+def _g_dw_fused_kernel(
+    idx_ref, cnt_ref, seed_ref, x_ref, g_ref, w_ref, mom_ref, o_ref, acc_ref,
+    *, n_m: int, nrows: int, ncols: int, mu: float, wd: float, sr: bool,
+):
+    i = pl.program_id(3)
+    g, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    kb = _gclamp(idx_ref, cnt_ref, g, j, s)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < cnt_ref[g, j])
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0], g_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        m_new = (
+            mu * mom_ref[0].astype(jnp.float32)
+            + acc_ref[...]
+            + wd * w_ref[0].astype(jnp.float32)
+        )
+        m_new = jnp.where(s < cnt_ref[g, j], m_new, jnp.zeros_like(m_new))
+        if sr:
+            bkk, bnn = m_new.shape
+            rows = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 1)
+            gu, ku, ju = jnp.uint32(g), jnp.uint32(kb), jnp.uint32(j)
+            gid = (gu * nrows + ku * bkk + rows) * jnp.uint32(ncols) + (
+                ju * bnn + cols
+            )
+            m_new = sr_to_bf16(m_new, seed_ref[0], gid)
+        o_ref[...] = m_new.astype(o_ref.dtype)[None, None]
+
+
+def _g_dw_fused_call(
+    x, g_, wg_idx, wg_cnt, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+):
+    from jax.experimental.pallas import tpu as pltpu
+
+    G, M, K = x.shape
+    N = g_.shape[2]
+    nnb = N // bn
+    max_k = wg_idx.shape[2]
+    n_m = M // bm
+    grid = (G, nnb, max_k, n_m)
+
+    def x_map(g, j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (g, i, _gclamp(idx_ref, cnt_ref, g, j, s))
+
+    def g_map(g, j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (g, i, j)
+
+    def wm_map(g, j, s, i, idx_ref, cnt_ref, seed_ref):
+        return (g, _gclamp(idx_ref, cnt_ref, g, j, s), j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), x_map),
+            pl.BlockSpec((1, bm, bn), g_map),
+            pl.BlockSpec((1, bk, bn), wm_map),
+            pl.BlockSpec((1, bk, bn), wm_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bk, bn), lambda g, j, s, i, *_: (g, j * max_k + s, 0, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _g_dw_fused_kernel, n_m=n_m, nrows=K, ncols=N, mu=mu, wd=wd, sr=sr
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, nnb * max_k, bk, bn), jnp.float32),
+        interpret=interpret,
+    )(wg_idx, wg_cnt, seed, x, g_, w, mom)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13, 14, 15, 16)
+)
+def _fused_grouped_block_sparse_matmul(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed,
+    mu, wd, sr, bm, bn, bk, interpret,
+):
+    return _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+
+
+def _gfbs_fwd(
+    x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed,
+    mu, wd, sr, bm, bn, bk, interpret,
+):
+    out = _g_fwd_call(x, w, block_idx, block_cnt, bm, bn, bk, interpret)
+    return out, (
+        x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed
+    )
+
+
+def _gfbs_bwd(mu, wd, sr, bm, bn, bk, interpret, res, g):
+    (
+        x, w, block_idx, block_cnt, row_idx, row_cnt, wg_idx, wg_cnt, mom, seed
+    ) = res
+    K = w.shape[1]
+    nkb = K // bk
+
+    dx = _g_dx_call(g, w, row_idx, row_cnt, bm, bn, bk, interpret, x.dtype)
+    packed = _g_dw_fused_call(
+        x, g, wg_idx, wg_cnt, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+    )
+    m_new = jax.vmap(
+        lambda p_, i_, c_: _scatter_packed_dw(p_, i_, c_, nkb, bk, bn, w.dtype)
+    )(packed, wg_idx, wg_cnt)
+
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (
+        dx, m_new, z(block_idx), z(block_cnt), z(row_idx), z(row_cnt),
+        z(wg_idx), z(wg_cnt), jnp.zeros_like(mom), z(seed),
+    )
+
+
+_fused_grouped_block_sparse_matmul.defvjp(_gfbs_fwd, _gfbs_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mu", "wd", "sr", "bm", "bn", "bk", "interpret")
+)
+def fused_grouped_block_sparse_matmul(
+    x,
+    w,
+    block_idx,
+    block_cnt,
+    mom,
+    seed,
+    bwd_idx=None,
+    bwd_cnt=None,
+    row_idx=None,
+    row_cnt=None,
+    *,
+    mu: float,
+    wd: float,
+    sr: bool,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """Grouped ``fused_block_sparse_matmul`` (MoE banks / xLSTM heads)."""
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2, (x.shape, w.shape)
+    assert N % bn == 0 and K % bk == 0 and M % bm == 0, (M, K, N, bm, bn, bk)
+    assert mom.shape == w.shape, (mom.shape, w.shape)
+    if row_idx is None:
+        bmask = jax.vmap(
+            lambda i_, c_: unpack_block_mask(i_, c_, K // bk)
+        )(block_idx, block_cnt)
+        row_idx, row_cnt = pack_group_mask_rows_traced(bmask)
+    if bwd_idx is None:
+        bwd_idx, bwd_cnt = block_idx, block_cnt
+    return _fused_grouped_block_sparse_matmul(
+        x, w, block_idx, block_cnt, row_idx, row_cnt, bwd_idx, bwd_cnt,
+        mom, seed, mu, wd, sr, bm, bn, bk, interpret,
     )

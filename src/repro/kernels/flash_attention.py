@@ -14,9 +14,16 @@ machinery the weight kernels get from core/pack.py.
 
 Backward is a custom-VJP Pallas kernel pair reusing the same schedule:
 
-  dq     grid (BH, n_q, width)    — the forward schedule (per-q live KV)
-  dk/dv  grid (BH, n_k, q_width)  — the TRANSPOSED schedule (per-KV live q),
-                                    one kernel producing both cotangents
+  dq     grid (BH, n_q, width)       — the forward schedule (per-q live KV)
+  dk/dv  grid (B*KV, n_k, G, q_width) — the TRANSPOSED schedule (per-KV live
+                                    q), one kernel producing both cotangents;
+                                    the G axis sums each KV tile's cotangent
+                                    over its GQA query-group members
+
+GQA is folded into the BlockSpec index maps (``kv_groups``): K/V stay at
+their true KV-head count and q row b reads KV row b // G, so no repeated
+K/V copy is ever materialized.  ``logit_softcap`` (gemma/grok) is applied
+inside the online softmax, fwd and bwd.
 
 with the standard flash backward recomputation: p = exp(s - lse) from the
 saved per-row logsumexp, delta = rowsum(do * o) precomputed in jnp.  Training
@@ -60,6 +67,18 @@ def effective_blocks(
     return min(bq, _round_up(sq, 16)), min(bk, _round_up(sk, 16))
 
 
+def _capped(u, softcap):
+    """Gemma/grok-style logit soft-capping s = c * tanh(u / c), applied to the
+    RAW scaled scores BEFORE the mask clamp (a NEG_INF-clamped score must stay
+    NEG_INF, not saturate to ±c).  softcap == 0.0 disables (python-static, so
+    uncapped kernels compile without the tanh).  Returns (s, t) with
+    t = tanh(u / c) — the backward reuses t for ds/du = 1 - t²."""
+    if not softcap:
+        return u, None
+    t = jnp.tanh(u / softcap)
+    return softcap * t, t
+
+
 def _score_mask(qb, kb, *, bq, bk, causal, window, q_offset, sk):
     """(bq, bk) bool mask for score block (qb, kb), or None when every
     position is live (interior full-attention block on aligned shapes)."""
@@ -84,7 +103,7 @@ def _score_mask(qb, kb, *, bq, bk, causal, window, q_offset, sk):
 def _fwd_kernel(
     kv_idx_ref, kv_cnt_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
     m_ref, l_ref, acc_ref, *, width, bq, bk, causal, window, q_offset, sk,
-    scale,
+    scale, softcap,
 ):
     s_id = pl.program_id(2)
 
@@ -102,7 +121,10 @@ def _fwd_kernel(
         q = q_ref[0]  # (bq, d)
         k = k_ref[0]  # (bk, d)
         v = v_ref[0]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s, _ = _capped(
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale,
+            softcap,
+        )
         mask = _score_mask(
             qb, kb, bq=bq, bk=bk, causal=causal, window=window,
             q_offset=q_offset, sk=sk,
@@ -139,8 +161,10 @@ def _fwd_kernel(
 def _dq_kernel(
     kv_idx_ref, kv_cnt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     dq_ref, acc_ref, *, width, bq, bk, causal, window, q_offset, sk, scale,
+    softcap,
 ):
-    """dq (bq, d) += (p * (do@vT - delta)) @ k * scale over live KV blocks."""
+    """dq (bq, d) += (p * (do@vT - delta)) @ k * scale over live KV blocks.
+    With softcap, ds additionally carries the cap's chain factor 1 - t²."""
     s_id = pl.program_id(2)
 
     @pl.when(s_id == 0)
@@ -156,7 +180,10 @@ def _dq_kernel(
         k = k_ref[0]
         v = v_ref[0]
         do = do_ref[0]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s, t = _capped(
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale,
+            softcap,
+        )
         mask = _score_mask(
             qb, kb, bq=bq, bk=bk, causal=causal, window=window,
             q_offset=q_offset, sk=sk,
@@ -166,6 +193,8 @@ def _dq_kernel(
         p = jnp.exp(s - lse_ref[0, :][:, None])  # masked slots: exp(-inf) = 0
         dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
         ds = p * (dp - delta_ref[0, :][:, None]) * scale
+        if t is not None:
+            ds = ds * (1.0 - t * t)
         acc_ref[...] += jnp.dot(
             ds.astype(k.dtype), k, preferred_element_type=jnp.float32
         )
@@ -177,14 +206,22 @@ def _dq_kernel(
 
 def _dkv_kernel(
     q_idx_ref, q_cnt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-    dk_ref, dv_ref, dk_acc, dv_acc, *, q_width, bq, bk, causal, window,
-    q_offset, sk, scale,
+    dk_ref, dv_ref, dk_acc, dv_acc, *, q_width, groups, bq, bk, causal,
+    window, q_offset, sk, scale, softcap,
 ):
     """One kernel for both KV cotangents, walking the TRANSPOSED schedule:
-    dv (bk, d) += pT @ do;  dk (bk, d) += dsT @ q * scale."""
-    s_id = pl.program_id(2)
+    dv (bk, d) += pT @ do;  dk (bk, d) += dsT @ q * scale.
 
-    @pl.when(s_id == 0)
+    Grid (B*KV, n_k, G, q_width): under GQA folding a KV tile's cotangent is
+    the SUM over its G query-group members, so the group dim is one more
+    accumulated grid axis — the (bk, d) K/V tile and the dk/dv accumulators
+    stay resident across the (gm, s) inner loops while the q-side tiles walk
+    row b*G + gm of the folded (BH, ...) layout.  G == 1 recovers the plain
+    MHA backward exactly."""
+    gm = pl.program_id(2)
+    s_id = pl.program_id(3)
+
+    @pl.when((gm == 0) & (s_id == 0))
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
@@ -198,7 +235,10 @@ def _dkv_kernel(
         k = k_ref[0]
         v = v_ref[0]
         do = do_ref[0]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s, t = _capped(
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale,
+            softcap,
+        )
         mask = _score_mask(
             qb, kb, bq=bq, bk=bk, causal=causal, window=window,
             q_offset=q_offset, sk=sk,
@@ -211,11 +251,13 @@ def _dkv_kernel(
         )
         dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
         ds = p * (dp - delta_ref[0, :][:, None]) * scale
+        if t is not None:
+            ds = ds * (1.0 - t * t)
         dk_acc[...] += jnp.dot(
             ds.T.astype(q.dtype), q, preferred_element_type=jnp.float32
         )
 
-    @pl.when(s_id == q_width - 1)
+    @pl.when((gm == groups - 1) & (s_id == q_width - 1))
     def _finish():
         dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
@@ -226,14 +268,18 @@ def _dkv_kernel(
 # ---------------------------------------------------------------------------
 
 def _fwd_call(q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk,
-              scale, interpret):
+              scale, softcap, kv_groups, interpret):
     BH, Sqp, d = q.shape
     width = kv_idx.shape[1]
     n_q = Sqp // bq
     grid = (BH, n_q, width)
 
     def kv_map(b, qb, s, idx_ref, cnt_ref):
-        return (b, _clamp(idx_ref, cnt_ref, qb, s), 0)
+        # GQA fold: query row b of the (B*H, ...) layout reads KV row
+        # b // G of the UNREPEATED (B*KV, ...) layout — the G query heads of
+        # a group share the same physical tiles, so the G-fold repeated K/V
+        # copy (and its HBM write + re-read) never exists
+        return (b // kv_groups, _clamp(idx_ref, cnt_ref, qb, s), 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -257,6 +303,7 @@ def _fwd_call(q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk,
         functools.partial(
             _fwd_kernel, width=width, bq=bq, bk=bk, causal=causal,
             window=window, q_offset=q_offset, sk=sk, scale=scale,
+            softcap=softcap,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -269,7 +316,7 @@ def _fwd_call(q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk,
 
 def _paged_kernel(
     kv_idx_ref, table_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-    m_ref, l_ref, acc_ref, *, n_pages, bq, bs, scale,
+    m_ref, l_ref, acc_ref, *, n_pages, bq, bs, scale, softcap,
 ):
     """Prefix phase of suffix-only prefill over a PAGED KV cache.
 
@@ -304,7 +351,10 @@ def _paged_kernel(
         q = q_ref[0, 0]  # (bq, d)
         k = k_ref[0, 0]  # (bs, d)
         v = v_ref[0, 0]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s, _ = _capped(
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale,
+            softcap,
+        )
         kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
         mask = kpos < ctx
         s = jnp.where(mask, s, NEG_INF)
@@ -328,7 +378,7 @@ def _paged_kernel(
         lse_ref[0, 0, :] = lse[:, 0]
 
 
-def _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret):
+def _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, softcap, interpret):
     """q: (B, H, Sqp, d); pk/pv: pool TRANSPOSED to (N, KV, bs, d) so each
     grid step DMAs one (bs, d) page tile; table: (B, T); ctx: (B,)."""
     B, H, Sqp, d = q.shape
@@ -368,7 +418,8 @@ def _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret):
     )
     return pl.pallas_call(
         functools.partial(
-            _paged_kernel, n_pages=n_pages, bq=bq, bs=bs, scale=scale
+            _paged_kernel, n_pages=n_pages, bq=bq, bs=bs, scale=scale,
+            softcap=softcap,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -379,13 +430,19 @@ def _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret):
     )(kv_idx, table, ctx, q, pk, pv)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "scale", "interpret"))
-def _paged_jit(q, pk, pv, kv_idx, table, ctx, *, bq, scale, interpret):
-    return _paged_call(q, pk, pv, kv_idx, table, ctx, bq, scale, interpret)
+@functools.partial(
+    jax.jit, static_argnames=("bq", "scale", "softcap", "interpret")
+)
+def _paged_jit(q, pk, pv, kv_idx, table, ctx, *, bq, scale, softcap,
+               interpret):
+    return _paged_call(
+        q, pk, pv, kv_idx, table, ctx, bq, scale, softcap, interpret
+    )
 
 
 def flash_attention_paged(
-    q, pool_k, pool_v, table, ctx, *, bq: int = 128, interpret=None
+    q, pool_k, pool_v, table, ctx, *, bq: int = 128, softcap: float = 0.0,
+    interpret=None,
 ):
     """Suffix queries attending a paged KV prefix through a block table.
 
@@ -418,13 +475,14 @@ def flash_attention_paged(
         jnp.asarray(ctx, jnp.int32),
         bq=bq,
         scale=float(1.0 / np.sqrt(d)),
+        softcap=float(softcap),
         interpret=interpret,
     )
     return o[:, :, :Sq], lse[:, :, :Sq]
 
 
 def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
-             q_offset, sk, scale, interpret):
+             q_offset, sk, scale, softcap, kv_groups, interpret):
     BH, Sqp, d = q.shape
     width = kv_idx.shape[1]
     grid = (BH, Sqp // bq, width)
@@ -436,7 +494,8 @@ def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
         return (b, qb)
 
     def kv_map(b, qb, s, idx_ref, cnt_ref):
-        return (b, _clamp(idx_ref, cnt_ref, qb, s), 0)
+        # same GQA fold as the forward: K/V stay at their true KV-head count
+        return (b // kv_groups, _clamp(idx_ref, cnt_ref, qb, s), 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -456,6 +515,7 @@ def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
         functools.partial(
             _dq_kernel, width=width, bq=bq, bk=bk, causal=causal,
             window=window, q_offset=q_offset, sk=sk, scale=scale,
+            softcap=softcap,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BH, Sqp, d), q.dtype),
@@ -464,18 +524,22 @@ def _dq_call(q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
 
 
 def _dkv_call(q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
-              q_offset, sk, scale, interpret):
-    BH, Skp, d = k.shape
+              q_offset, sk, scale, softcap, kv_groups, interpret):
+    # k/v (and dk/dv) live at the true KV-head count B*KV = BH // G; the
+    # grid grows a GROUP axis between the KV-block and schedule dims so each
+    # KV tile's cotangent accumulates over its G query-group members while
+    # the (bk, d) tile and both accumulators stay VMEM-resident
+    BKV, Skp, d = k.shape
     q_width = q_idx.shape[1]
-    grid = (BH, Skp // bk, q_width)
+    grid = (BKV, Skp // bk, kv_groups, q_width)
 
-    def q_map(b, kb, s, idx_ref, cnt_ref):
-        return (b, _clamp(idx_ref, cnt_ref, kb, s), 0)
+    def q_map(b, kb, gm, s, idx_ref, cnt_ref):
+        return (b * kv_groups + gm, _clamp(idx_ref, cnt_ref, kb, s), 0)
 
-    def row_map(b, kb, s, idx_ref, cnt_ref):
-        return (b, _clamp(idx_ref, cnt_ref, kb, s))
+    def row_map(b, kb, gm, s, idx_ref, cnt_ref):
+        return (b * kv_groups + gm, _clamp(idx_ref, cnt_ref, kb, s))
 
-    def kv_map(b, kb, s, *_):
+    def kv_map(b, kb, gm, s, *_):
         return (b, kb, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -500,13 +564,14 @@ def _dkv_call(q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
     )
     return pl.pallas_call(
         functools.partial(
-            _dkv_kernel, q_width=q_width, bq=bq, bk=bk, causal=causal,
-            window=window, q_offset=q_offset, sk=sk, scale=scale,
+            _dkv_kernel, q_width=q_width, groups=kv_groups, bq=bq, bk=bk,
+            causal=causal, window=window, q_offset=q_offset, sk=sk,
+            scale=scale, softcap=softcap,
         ),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((BH, Skp, d), k.dtype),
-            jax.ShapeDtypeStruct((BH, Skp, d), v.dtype),
+            jax.ShapeDtypeStruct((BKV, Skp, d), k.dtype),
+            jax.ShapeDtypeStruct((BKV, Skp, d), v.dtype),
         ],
         interpret=interpret,
     )(q_idx, q_cnt, q, k, v, do, lse, delta)
@@ -516,26 +581,29 @@ def _dkv_call(q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
 # custom VJP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13, 14))
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+)
 def _flash(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
-           q_offset, sk, scale, interpret):
+           q_offset, sk, scale, softcap, kv_groups, interpret):
     out, _ = _fwd_call(
         q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
-        interpret,
+        softcap, kv_groups, interpret,
     )
     return out
 
 
 def _flash_fwd(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
-               q_offset, sk, scale, interpret):
+               q_offset, sk, scale, softcap, kv_groups, interpret):
     out, lse = _fwd_call(
         q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
-        interpret,
+        softcap, kv_groups, interpret,
     )
     return out, (q, k, v, out, lse, kv_idx, kv_cnt, q_idx, q_cnt)
 
 
-def _flash_bwd(bq, bk, causal, window, q_offset, sk, scale, interpret, res, do):
+def _flash_bwd(bq, bk, causal, window, q_offset, sk, scale, softcap,
+               kv_groups, interpret, res, do):
     q, k, v, out, lse, kv_idx, kv_cnt, q_idx, q_cnt = res
     # delta_i = sum_j p_ij * dp_ij = rowsum(do * o): O(S*d) in jnp, f32
     delta = jnp.sum(
@@ -543,11 +611,11 @@ def _flash_bwd(bq, bk, causal, window, q_offset, sk, scale, interpret, res, do):
     )
     dq = _dq_call(
         q, k, v, do, lse, delta, kv_idx, kv_cnt, bq, bk, causal, window,
-        q_offset, sk, scale, interpret,
+        q_offset, sk, scale, softcap, kv_groups, interpret,
     )
     dk, dv = _dkv_call(
         q, k, v, do, lse, delta, q_idx, q_cnt, bq, bk, causal, window,
-        q_offset, sk, scale, interpret,
+        q_offset, sk, scale, softcap, kv_groups, interpret,
     )
     z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
     return dq, dk, dv, z(kv_idx), z(kv_cnt), z(q_idx), z(q_cnt)
@@ -559,14 +627,15 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "interpret"
+        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "softcap",
+        "kv_groups", "interpret",
     ),
 )
 def _flash_jit(q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, *, bq, bk, causal,
-               window, q_offset, sk, scale, interpret):
+               window, q_offset, sk, scale, softcap, kv_groups, interpret):
     return _flash(
         q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq, bk, causal, window,
-        q_offset, sk, scale, interpret,
+        q_offset, sk, scale, softcap, kv_groups, interpret,
     )
 
 
@@ -582,23 +651,25 @@ def _pad_width(idx: jnp.ndarray, to: int) -> jnp.ndarray:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "interpret"
+        "bq", "bk", "causal", "window", "q_offset", "sk", "scale", "softcap",
+        "kv_groups", "interpret",
     ),
 )
 def _fwd_jit(q, k, v, kv_idx, kv_cnt, *, bq, bk, causal, window, q_offset,
-             sk, scale, interpret):
+             sk, scale, softcap, kv_groups, interpret):
     return _fwd_call(
         q, k, v, kv_idx, kv_cnt, bq, bk, causal, window, q_offset, sk, scale,
-        interpret,
+        softcap, kv_groups, interpret,
     )
 
 
 def flash_attention(
     q, k, v, *, causal: bool = True, window: int = 0, sched=None,
-    tight: bool = True, bq: int = 128, bk: int = 128, interpret=None,
-    return_lse: bool = False,
+    tight: bool = True, bq: int = 128, bk: int = 128, softcap: float = 0.0,
+    kv_groups: int = 1, interpret=None, return_lse: bool = False,
 ):
-    """q: (BH, Sq, d); k, v: (BH, Sk, d) -> (BH, Sq, d).  Differentiable.
+    """q: (BH, Sq, d); k, v: (BH/kv_groups, Sk, d) -> (BH, Sq, d).
+    Differentiable.
 
     Softmax attention with scores only ever materialized tile-wise in VMEM,
     fwd and bwd (custom-VJP Pallas kernel pair).  The mask family is
@@ -617,6 +688,19 @@ def flash_attention(
     bit-identical output, every slot beyond a row's count an empty iteration
     (the old @pl.when-only behaviour, kept as the padded baseline).
 
+    softcap: gemma/grok-style logit soft-capping c*tanh(s/c) applied to the
+    scaled scores inside the online softmax (0.0 disables).  Exact in the
+    custom VJP too — ds carries the cap's 1 - tanh² chain factor — so capped
+    configs train on the flash path with no dense fallback.
+
+    kv_groups: GQA group fold.  G > 1 takes k/v at their TRUE KV-head count
+    (BH/G, Sk, d) — q row b reads KV row b // G via the BlockSpec index maps,
+    so the G-fold repeated K/V copy `_flash_attend` used to materialize (and
+    its HBM write + re-read) never exists.  dk/dv grow a group grid axis and
+    accumulate each KV tile's cotangent over its G group members in VMEM —
+    the repeat-path's G-fold dk/dv output plus jnp segment-sum disappears
+    too.  G == 1 is the plain MHA layout, bit-identical to before.
+
     Non-aligned Sq/Sk are zero-padded up to the (clamped) block sizes and
     trimmed after; padded keys are masked in-kernel, padded query rows cost
     dead rows in the boundary block only.  interpret=None auto-selects
@@ -632,6 +716,13 @@ def flash_attention(
     interpret = auto_interpret() if interpret is None else interpret
     BH, Sq, d = q.shape
     Sk = k.shape[1]
+    kv_groups = int(kv_groups)
+    if BH % kv_groups or k.shape[0] != BH // kv_groups:
+        raise ValueError(
+            f"flash_attention: q has {BH} batch*head rows but k/v have "
+            f"{k.shape[0]} with kv_groups={kv_groups} — expected "
+            "k.shape[0] == q.shape[0] // kv_groups (UNREPEATED KV heads)"
+        )
     bq, bk = effective_blocks(Sq, Sk, bq, bk)
     Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
     q_offset = Sk - Sq
@@ -661,12 +752,14 @@ def flash_attention(
         out, lse = _fwd_jit(
             q, k, v, kv_idx, kv_cnt, bq=bq, bk=bk, causal=bool(causal),
             window=int(window), q_offset=q_offset, sk=Sk,
-            scale=float(1.0 / np.sqrt(d)), interpret=interpret,
+            scale=float(1.0 / np.sqrt(d)), softcap=float(softcap),
+            kv_groups=kv_groups, interpret=interpret,
         )
         return out[:, :Sq], lse[:, :Sq]
     out = _flash_jit(
         q, k, v, kv_idx, kv_cnt, q_idx, q_cnt, bq=bq, bk=bk,
         causal=bool(causal), window=int(window), q_offset=q_offset, sk=Sk,
-        scale=float(1.0 / np.sqrt(d)), interpret=interpret,
+        scale=float(1.0 / np.sqrt(d)), softcap=float(softcap),
+        kv_groups=kv_groups, interpret=interpret,
     )
     return out[:, :Sq]

@@ -43,7 +43,37 @@ __all__ = [
     "grouped_masked_matmul",
     "topkast_masked_matmul",
     "topkast_grouped_masked_matmul",
+    "fused_masked_matmul",
+    "fused_grouped_masked_matmul",
 ]
+
+
+def sr_to_bf16(v, seed, gid):
+    """Stochastically round f32 values onto the bf16 grid (f32 carrier).
+
+    Counter-based (reproducible, no RNG state): a murmur-style finalizer of
+    ``gid ^ seed`` supplies 16 uniform bits that are added below the bf16
+    mantissa cut of the f32 bit pattern; truncating to the top 16 bits then
+    lands on the lower/upper bf16 neighbour with probability equal to the
+    fractional distance — unbiased, so momentum doesn't drift under repeated
+    rounding (the reason bf16 optimizer state needs SR at all).  The result
+    stays an f32 array whose values are exactly bf16-representable: the
+    caller's ``astype(bfloat16)`` is then lossless.  Non-finite values pass
+    through untouched (the train step's finite guard decides their fate).
+    gid: per-element uint32 ids, unique per (leaf, element); mantissa-carry
+    into the exponent is the correct round-up to the next binade.
+    """
+    h = gid ^ seed.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    bits = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.uint32)
+    r = (bits + (h & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+    return jnp.where(
+        jnp.isfinite(v), jax.lax.bitcast_convert_type(r, jnp.float32), v
+    )
 
 
 def _fwd_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
@@ -450,4 +480,243 @@ def topkast_grouped_masked_matmul(
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     return _topkast_grouped_masked_matmul(
         x, w, mask, bwd_mask, bm, bn, bk, interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused wgrad -> optimizer epilogue (docs/kernels.md#fused-epilogue)
+#
+# The SGD-momentum epilogue m_new = mu*mom + (dw + wd*w)*m_wgrad is computed
+# INSIDE the wgrad kernel's store step: the mom/w tiles ride the same VMEM
+# pipeline as the x/g tiles, so the raw dw never exists in HBM — the weight
+# cotangent leaving the VJP *is* the new momentum (optionally stochastically
+# rounded onto the bf16 grid in-register).  apply_opt_fused (optim/) then
+# only does p -= lr*g and momentum := g — one full HBM pass over the weight
+# gradient (write + re-read) is gone per train step.
+# ---------------------------------------------------------------------------
+
+def _dw_fused_kernel(
+    seed_ref, x_ref, g_ref, m_ref, w_ref, mom_ref, o_ref, acc_ref,
+    *, n_m: int, ncols: int, mu: float, wd: float, sr: bool,
+):
+    """dw-tile accumulate as _dw_kernel; epilogue folded into the store."""
+    i = pl.program_id(2)
+    # program_id must be read at kernel top level (a pl.when branch body is a
+    # cond jaxpr, where it fails to lower in interpret mode)
+    k, n = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        mk = m_ref[...].astype(jnp.float32)
+        m_new = (
+            mu * mom_ref[...].astype(jnp.float32)
+            + acc_ref[...]
+            + wd * w_ref[...].astype(jnp.float32)
+        ) * mk  # momentum off the wgrad support is pinned to zero (documented)
+        if sr:
+            bkk, bnn = m_new.shape
+            rows = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 1)
+            ku, nu = jnp.uint32(k), jnp.uint32(n)
+            gid = (ku * bkk + rows) * jnp.uint32(ncols) + (nu * bnn + cols)
+            m_new = sr_to_bf16(m_new, seed_ref[0], gid)
+        o_ref[...] = m_new.astype(o_ref.dtype)
+
+
+def _dw_fused_call(x, g, wgm, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret):
+    M, K = x.shape
+    N = g.shape[1]
+    n_m = M // bm
+    grid = (K // bk, N // bn, n_m)
+    kn = lambda k, n, i, *_: (k, n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda k, n, i, *_: (i, k)),
+            pl.BlockSpec((bm, bn), lambda k, n, i, *_: (i, n)),
+            pl.BlockSpec((bk, bn), kn),
+            pl.BlockSpec((bk, bn), kn),
+            pl.BlockSpec((bk, bn), kn),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), kn),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dw_fused_kernel, n_m=n_m, ncols=N, mu=mu, wd=wd, sr=sr
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        interpret=interpret,
+    )(seed, x, g, wgm, w, mom)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
+def _fused_masked_matmul(x, w, mask, wgm, mom, seed, mu, wd, sr, bm, bn, bk, interpret):
+    return _fwd_call(x, w, mask, bm, bn, bk, interpret)
+
+
+def _fmm_fwd(x, w, mask, wgm, mom, seed, mu, wd, sr, bm, bn, bk, interpret):
+    out = _fwd_call(x, w, mask, bm, bn, bk, interpret)
+    return out, (x, w, mask, wgm, mom, seed)
+
+
+def _fmm_bwd(mu, wd, sr, bm, bn, bk, interpret, res, g):
+    x, w, mask, wgm, mom, seed = res
+    dx = _dx_call(g, w, mask, bm, bn, bk, interpret, x.dtype)
+    m_new = _dw_fused_call(
+        x, g, wgm, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+    )
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, m_new, z(mask), z(wgm), jnp.zeros_like(mom), z(seed)
+
+
+_fused_masked_matmul.defvjp(_fmm_fwd, _fmm_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mu", "wd", "sr", "bm", "bn", "bk", "interpret")
+)
+def fused_masked_matmul(
+    x, w, mask, wgrad_mask, mom, seed, *, mu: float, wd: float, sr: bool,
+    bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = False,
+):
+    """``masked_matmul`` whose weight COTANGENT is the new SGD momentum.
+
+    Forward/dgrad identical to ``masked_matmul`` (mask fused in-pipeline).
+    The wgrad kernel stores m_new = (mu*mom + xᵀg + wd*w) ⊙ wgrad_mask —
+    the optimizer epilogue fused at the tile store, so the raw gradient
+    never round-trips HBM.  wgrad_mask is the Top-KAST superset B when the
+    pack carries one, else the forward mask.  seed: (1,) int32 per-leaf
+    counter (train step supplies step*P + leaf_index); sr=True additionally
+    stochastically rounds m_new onto the bf16 grid (see sr_to_bf16).
+    mom's own cotangent is a discarded zero (nothing differentiates w.r.t.
+    momentum).  Consumed via ops.fused_masked_linear + optim.apply_opt_fused.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and mask.shape == w.shape == wgrad_mask.shape == mom.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    return _fused_masked_matmul(
+        x, w, mask, wgrad_mask, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+    )
+
+
+def _g_dw_fused_kernel(
+    seed_ref, x_ref, g_ref, m_ref, w_ref, mom_ref, o_ref, acc_ref,
+    *, n_m: int, nrows: int, ncols: int, mu: float, wd: float, sr: bool,
+):
+    i = pl.program_id(3)
+    g_, k, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], g_ref[0], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == n_m - 1)
+    def _store():
+        mk = m_ref[0].astype(jnp.float32)
+        m_new = (
+            mu * mom_ref[0].astype(jnp.float32)
+            + acc_ref[...]
+            + wd * w_ref[0].astype(jnp.float32)
+        ) * mk
+        if sr:
+            bkk, bnn = m_new.shape
+            rows = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 0)
+            cols = jax.lax.broadcasted_iota(jnp.uint32, m_new.shape, 1)
+            gu, ku, nu = jnp.uint32(g_), jnp.uint32(k), jnp.uint32(n)
+            gid = (gu * nrows + ku * bkk + rows) * jnp.uint32(ncols) + (
+                nu * bnn + cols
+            )
+            m_new = sr_to_bf16(m_new, seed_ref[0], gid)
+        o_ref[...] = m_new.astype(o_ref.dtype)[None]
+
+
+def _g_dw_fused_call(x, g, wgm, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret):
+    G, M, K = x.shape
+    N = g.shape[2]
+    n_m = M // bm
+    grid = (G, K // bk, N // bn, n_m)
+    gkn = lambda g_, k, n, i, *_: (g_, k, n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g_, k, n, i, *_: (g_, i, k)),
+            pl.BlockSpec((1, bm, bn), lambda g_, k, n, i, *_: (g_, i, n)),
+            pl.BlockSpec((1, bk, bn), gkn),
+            pl.BlockSpec((1, bk, bn), gkn),
+            pl.BlockSpec((1, bk, bn), gkn),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bn), gkn),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _g_dw_fused_kernel, n_m=n_m, nrows=K, ncols=N, mu=mu, wd=wd, sr=sr
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, K, N), w.dtype),
+        interpret=interpret,
+    )(seed, x, g, wgm, w, mom)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
+def _fused_grouped_masked_matmul(
+    x, w, mask, wgm, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+):
+    return _g_fwd_call(x, w, mask, bm, bn, bk, interpret)
+
+
+def _gfmm_fwd(x, w, mask, wgm, mom, seed, mu, wd, sr, bm, bn, bk, interpret):
+    out = _g_fwd_call(x, w, mask, bm, bn, bk, interpret)
+    return out, (x, w, mask, wgm, mom, seed)
+
+
+def _gfmm_bwd(mu, wd, sr, bm, bn, bk, interpret, res, g):
+    x, w, mask, wgm, mom, seed = res
+    dx = _g_dx_call(g, w, mask, bm, bn, bk, interpret, x.dtype)
+    m_new = _g_dw_fused_call(
+        x, g, wgm, w, mom, seed, mu, wd, sr, bm, bn, bk, interpret
+    )
+    z = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return dx, m_new, z(mask), z(wgm), jnp.zeros_like(mom), z(seed)
+
+
+_fused_grouped_masked_matmul.defvjp(_gfmm_fwd, _gfmm_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mu", "wd", "sr", "bm", "bn", "bk", "interpret")
+)
+def fused_grouped_masked_matmul(
+    x, w, mask, wgrad_mask, mom, seed, *, mu: float, wd: float, sr: bool,
+    bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = False,
+):
+    """Grouped ``fused_masked_matmul``: per-group wgrad -> epilogue fusion."""
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2
+    assert mask.shape == w.shape == wgrad_mask.shape == mom.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    return _fused_grouped_masked_matmul(
+        x, w, mask, wgrad_mask, mom, seed, mu, wd, sr, bm, bn, bk, interpret
     )

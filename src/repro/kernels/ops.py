@@ -35,6 +35,8 @@ import numpy as np
 
 from .block_sparse_matmul import (
     block_sparse_matmul,
+    fused_block_sparse_matmul,
+    fused_grouped_block_sparse_matmul,
     grouped_block_sparse_matmul,
     pack_block_mask,
     pack_block_mask_rows,
@@ -48,6 +50,8 @@ from .block_sparse_matmul import (
     topkast_grouped_block_sparse_matmul,
 )
 from .masked_matmul import (
+    fused_grouped_masked_matmul,
+    fused_masked_matmul,
     grouped_masked_matmul,
     masked_matmul,
     topkast_grouped_masked_matmul,
@@ -62,6 +66,10 @@ __all__ = [
     "grouped_block_sparse_linear",
     "topkast_masked_linear",
     "topkast_grouped_masked_linear",
+    "fused_masked_linear",
+    "fused_grouped_masked_linear",
+    "fused_block_sparse_linear",
+    "fused_grouped_block_sparse_linear",
     "topk_threshold",
     "auto_interpret",
 ]
@@ -340,6 +348,158 @@ def grouped_block_sparse_linear(
             x, w, idx, cnt, ridx, rcnt, bm=bm_eff, bn=bn, bk=bk,
             interpret=interpret,
         )
+    return out[:, :M]
+
+
+def fused_masked_linear(
+    x, w, mask, mom, seed, *, mu, wd, sr, bwd_mask=None,
+    block=(128, 128, 128), interpret=None,
+):
+    """``masked_linear`` whose weight cotangent is the new SGD momentum.
+
+    The fused-epilogue hot path (docs/kernels.md#fused-epilogue): identical
+    forward/dgrad to ``masked_linear``/``topkast_masked_linear``, but the
+    wgrad kernel stores m_new = (mu*mom + xᵀg + wd*w) ⊙ wgrad_mask, where
+    wgrad_mask is ``bwd_mask`` (Top-KAST superset B) when given, else
+    ``mask``.  mom rides the same pad/trim as w (zero-padded; the pad VJP
+    trims the cotangent back to (K, N)).  sr=True stochastically rounds the
+    emitted momentum onto the bf16 grid in-kernel.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    *lead, K = x.shape
+    N = w.shape[1]
+    wgm = mask if bwd_mask is None else bwd_mask
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm_eff, Mp = _row_tile(M, bm)
+    x2 = _pad_rows(x2, Mp)
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        pad2 = lambda a: jnp.pad(a, ((0, Kp - K), (0, Np - N)))
+        w, mask, wgm, mom = pad2(w), pad2(mask), pad2(wgm), pad2(mom)
+    out = fused_masked_matmul(
+        x2, w, mask, wgm, mom, seed, mu=mu, wd=wd, sr=sr,
+        bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+    )
+    return out[:M, :N].reshape(*lead, N)
+
+
+def fused_grouped_masked_linear(
+    x, w, mask, mom, seed, *, mu, wd, sr, bwd_mask=None,
+    block=(128, 128, 128), interpret=None,
+):
+    """Grouped ``fused_masked_linear`` (weight banks, one launch)."""
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    G, M, K = x.shape
+    N = w.shape[2]
+    wgm = mask if bwd_mask is None else bwd_mask
+    bm_eff, Mp = _row_tile(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
+    Kp = _round_up(K, min(bk, K))
+    Np = _round_up(N, min(bn, N))
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Kp - K)))
+    if (Kp, Np) != (K, N):
+        pad3 = lambda a: jnp.pad(a, ((0, 0), (0, Kp - K), (0, Np - N)))
+        w, mask, wgm, mom = pad3(w), pad3(mask), pad3(wgm), pad3(mom)
+    out = fused_grouped_masked_matmul(
+        x, w, mask, wgm, mom, seed, mu=mu, wd=wd, sr=sr,
+        bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+    )
+    return out[:, :M, :N]
+
+
+def fused_block_sparse_linear(
+    x, w, mom, seed, *, mu, wd, sr, block=(128, 128, 128), interpret=None,
+    pack=None, block_mask=None,
+):
+    """``block_sparse_linear`` whose weight cotangent is the new SGD momentum.
+
+    Topology sources mirror ``block_sparse_linear`` (PackState entry dict /
+    bare (idx, cnt) / block_mask); an entry carrying ``bidx``/``bcnt`` runs
+    the wgrad-epilogue on the Top-KAST superset B, exactly like the unfused
+    topkast route.  mom: dense-laid-out (K, N) momentum (supported on the
+    wgrad topology); K/N must be tile-aligned.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    *lead, K = x.shape
+    bk, bn = min(bk, K), min(bn, w.shape[1])
+    ridx = rcnt = bidx = bcnt = None
+    if pack is not None:
+        if isinstance(pack, dict):
+            idx, cnt = pack["idx"], pack["cnt"]
+            ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+            bidx, bcnt = pack.get("bidx"), pack.get("bcnt")
+        else:
+            idx, cnt = pack
+    elif block_mask is None:
+        raise ValueError(
+            "fused_block_sparse_linear needs a topology: pass block_mask= or "
+            "a precomputed pack=(idx, cnt) — see docs/kernels.md#packing"
+        )
+    elif isinstance(block_mask, jax.core.Tracer):
+        idx, cnt = pack_block_mask_traced(block_mask)
+        ridx, rcnt = pack_block_mask_rows_traced(block_mask)
+    else:
+        idx, cnt = pack_block_mask(np.asarray(block_mask))
+        ridx, rcnt = pack_block_mask_rows(np.asarray(block_mask))
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm_eff, Mp = _row_tile(M, bm)
+    x2 = _pad_rows(x2, Mp)
+    out = fused_block_sparse_matmul(
+        x2, w, idx, cnt, mom, seed, bwd_idx=bidx, bwd_cnt=bcnt,
+        row_idx=ridx, row_cnt=rcnt, mu=mu, wd=wd, sr=sr,
+        bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+    )
+    return out[:M].reshape(*lead, w.shape[1])
+
+
+def fused_grouped_block_sparse_linear(
+    x, w, mom, seed, *, mu, wd, sr, block=(128, 128, 128), interpret=None,
+    pack=None, block_mask=None,
+):
+    """Grouped ``fused_block_sparse_linear`` (MoE banks / xLSTM heads)."""
+    interpret = auto_interpret() if interpret is None else interpret
+    bm, bn, bk = block
+    G, M, K = x.shape
+    N = w.shape[2]
+    bk, bn = min(bk, K), min(bn, N)
+    ridx = rcnt = bidx = bcnt = None
+    if pack is not None:
+        if isinstance(pack, dict):
+            idx, cnt = pack["idx"], pack["cnt"]
+            ridx, rcnt = pack.get("ridx"), pack.get("rcnt")
+            bidx, bcnt = pack.get("bidx"), pack.get("bcnt")
+        else:
+            idx, cnt = pack
+    elif block_mask is None:
+        raise ValueError(
+            "fused_grouped_block_sparse_linear needs a topology: pass "
+            "block_mask= or a precomputed stacked pack=(idx, cnt) — see "
+            "docs/kernels.md#packing"
+        )
+    elif isinstance(block_mask, jax.core.Tracer):
+        idx, cnt = pack_group_mask_traced(block_mask)
+        ridx, rcnt = pack_group_mask_rows_traced(block_mask)
+    else:
+        idx, cnt = pack_group_mask(np.asarray(block_mask))
+        ridx, rcnt = pack_group_mask_rows(np.asarray(block_mask))
+    bm_eff, Mp = _row_tile(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, 0)))
+    out = fused_grouped_block_sparse_matmul(
+        x, w, idx, cnt, mom, seed, bwd_idx=bidx, bwd_cnt=bcnt,
+        row_idx=ridx, row_cnt=rcnt, mu=mu, wd=wd, sr=sr,
+        bm=bm_eff, bn=bn, bk=bk, interpret=interpret,
+    )
     return out[:, :M]
 
 

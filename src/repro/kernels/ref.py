@@ -57,7 +57,7 @@ def kth_value_ref(x, k: int):
 
 
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
-                        q_offset=None):
+                        q_offset=None, softcap: float = 0.0):
     """q: (BH, Sq, d); k, v: (BH, Sk, d) softmax-attention oracle.
 
     Mask semantics match models/attention.py::_make_mask and the Pallas
@@ -66,6 +66,8 @@ def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
     index; causal keeps ``kpos <= qpos``, window keeps ``kpos > qpos -
     window``.  Rows with NO live key are zeroed (the kernel's convention)
     rather than left as the uniform-softmax artifact of the -1e30 clamp.
+    ``softcap`` caps the scaled scores c*tanh(s/c) BEFORE masking, matching
+    the kernels and models/attention.py::_scores.
     """
     sq, sk = q.shape[1], k.shape[1]
     if q_offset is None:
@@ -73,6 +75,8 @@ def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
     d = q.shape[-1]
     s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
     s = s / np.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
     qpos = q_offset + jnp.arange(sq)[:, None]
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), bool)

@@ -162,36 +162,24 @@ def attn_schedules(cfg, S: int):
 def _flash_attend(q, k, v, cfg, *, causal, window, tight, sched=None):
     """(B, S, H, hd) GQA heads -> flash kernel layout (B*H, S, hd) and back.
 
-    K/V are repeated to the full head count (jnp.repeat is differentiable:
-    the cotangent sums over the group), heads fold into the kernel's batch
-    dim.  Scores exist only tile-wise in VMEM, fwd AND bwd (custom VJP), so
-    ``attn_scores_dtype`` is moot on this path — the kernel accumulates f32.
-
-    Known cost: the repeat materializes H/KV copies of K/V in HBM (G·S·d
-    bytes — small next to the S² score traffic the kernel eliminates, but
-    not free at high G).  Folding the group mapping into the kernels'
-    index_maps instead (DMA each KV tile once per group) is the ROADMAP
-    follow-up; it needs a grid restructure of the dk/dv kernel, whose output
-    must sum over group members.
+    Q heads fold into the kernel's batch dim; K/V fold to their UNREPEATED
+    (B*KV, S, hd) layout and the kernels' index maps read row ``b // G``
+    (``kv_groups``), so the G-fold repeated K/V copy the old dispatch
+    materialized in HBM (G·S·d bytes written + re-read) never exists, and
+    dk/dv come back already group-summed.  Scores exist only tile-wise in
+    VMEM, fwd AND bwd (custom VJP), so ``attn_scores_dtype`` is moot on
+    this path — the kernel accumulates f32.  ``cfg.logit_softcap`` caps the
+    scaled scores inside the online softmax (fwd + VJP chain factor).
     """
-    if cfg.logit_softcap:
-        raise ValueError(
-            "sparse.attn_kernel='flash'/'flash_tight' does not support "
-            "logit_softcap (the online softmax would need the capped scores); "
-            "use attn_kernel='dense' for softcapped configs — see "
-            "docs/kernels.md#attention-schedules"
-        )
     B, S, H, hd = q.shape
     KV = k.shape[2]
-    if H != KV:  # GQA: repeat each KV head over its query group
-        k = jnp.repeat(k, H // KV, axis=2)
-        v = jnp.repeat(v, H // KV, axis=2)
-    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * t.shape[2], S, hd)
     from ..kernels.flash_attention import flash_attention
 
     o = flash_attention(
         fold(q), fold(k), fold(v), causal=causal, window=window, sched=sched,
-        tight=tight,
+        tight=tight, softcap=float(cfg.logit_softcap or 0.0),
+        kv_groups=H // KV,
     )
     return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
 
@@ -325,23 +313,18 @@ def _attend_with_history(q, k, v, history, cfg, *, flash):
             mask,
             cfg,
         )
-    if cfg.logit_softcap:
-        raise ValueError(
-            "attention: history + flash attn_kernel does not support "
-            "logit_softcap; use attn_kernel='dense'"
-        )
     from ..kernels.flash_attention import flash_attention, flash_attention_paged
 
+    softcap = float(cfg.logit_softcap or 0.0)
     KV = k.shape[2]
     o_hist, l_hist = flash_attention_paged(
-        q.transpose(0, 2, 1, 3), pool["k"], pool["v"], table, ctx
+        q.transpose(0, 2, 1, 3), pool["k"], pool["v"], table, ctx,
+        softcap=softcap,
     )  # (B, H, S, hd), (B, H, S)
-    if H != KV:  # GQA: the self phase folds heads, so repeat (paged doesn't)
-        k = jnp.repeat(k, H // KV, axis=2)
-        v = jnp.repeat(v, H // KV, axis=2)
-    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * t.shape[2], S, hd)
     o_self, l_self = flash_attention(
-        fold(q), fold(k), fold(v), causal=True, window=0, return_lse=True
+        fold(q), fold(k), fold(v), causal=True, window=0, return_lse=True,
+        softcap=softcap, kv_groups=H // KV,
     )
     o_self = o_self.reshape(B, H, S, hd)
     l_self = l_self.reshape(B, H, S)  # finite: every row attends itself

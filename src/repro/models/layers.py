@@ -122,18 +122,35 @@ def linear(
     if mask is not None and kernel in ("masked", "block_sparse"):
         from ..kernels import (
             block_sparse_linear,
+            fused_block_sparse_linear,
+            fused_masked_linear,
             masked_linear,
             topkast_masked_linear,
         )
 
         xc = x.astype(dt)
+        fused = isinstance(pack, dict) and "mom" in pack
         if kernel == "masked":
-            if isinstance(pack, dict) and "bwd_mask" in pack:
+            if fused:
+                # fused wgrad->optimizer epilogue: the weight cotangent of
+                # this call IS the new SGD momentum (docs/kernels.md)
+                y = fused_masked_linear(
+                    xc, w, mask, pack["mom"], pack["seed"],
+                    mu=pack["mu"], wd=pack["wd"], sr=pack["sr"],
+                    bwd_mask=pack.get("bwd_mask"), block=block,
+                )
+            elif isinstance(pack, dict) and "bwd_mask" in pack:
                 y = topkast_masked_linear(
                     xc, w, mask, pack["bwd_mask"], block=block
                 )
             else:
                 y = masked_linear(xc, w, mask, block=block)
+        elif fused:
+            y = fused_block_sparse_linear(
+                xc, w, pack["mom"], pack["seed"],
+                mu=pack["mu"], wd=pack["wd"], sr=pack["sr"],
+                block=block, pack=pack,
+            )
         elif pack is not None:
             # full PackState entry: tight CSC for fwd/wgrad AND tight CSR
             # for the custom-VJP dgrad grid
@@ -178,18 +195,33 @@ def grouped_linear(
     w = w.astype(dt)
     if mask is not None and kernel in ("masked", "block_sparse"):
         from ..kernels import (
+            fused_grouped_block_sparse_linear,
+            fused_grouped_masked_linear,
             grouped_block_sparse_linear,
             grouped_masked_linear,
             topkast_grouped_masked_linear,
         )
 
         xc = x.astype(dt)
+        fused = isinstance(pack, dict) and "mom" in pack
         if kernel == "masked":
+            if fused:
+                return fused_grouped_masked_linear(
+                    xc, w, mask, pack["mom"], pack["seed"],
+                    mu=pack["mu"], wd=pack["wd"], sr=pack["sr"],
+                    bwd_mask=pack.get("bwd_mask"), block=block,
+                )
             if isinstance(pack, dict) and "bwd_mask" in pack:
                 return topkast_grouped_masked_linear(
                     xc, w, mask, pack["bwd_mask"], block=block
                 )
             return grouped_masked_linear(xc, w, mask, block=block)
+        if fused:
+            return fused_grouped_block_sparse_linear(
+                xc, w, pack["mom"], pack["seed"],
+                mu=pack["mu"], wd=pack["wd"], sr=pack["sr"],
+                block=block, pack=pack,
+            )
         if pack is not None:
             return grouped_block_sparse_linear(xc, w, block=block, pack=pack)
         bm, bn, bk = block

@@ -1,2 +1,9 @@
 from .lr import LRSchedule  # noqa: F401
-from .optimizers import OptConfig, apply_opt, init_opt, reset_connections, reset_new_connections  # noqa: F401
+from .optimizers import (  # noqa: F401
+    OptConfig,
+    apply_opt,
+    apply_opt_fused,
+    init_opt,
+    reset_connections,
+    reset_new_connections,
+)

@@ -16,7 +16,14 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["OptConfig", "init_opt", "apply_opt", "reset_connections", "reset_new_connections"]
+__all__ = [
+    "OptConfig",
+    "init_opt",
+    "apply_opt",
+    "apply_opt_fused",
+    "reset_connections",
+    "reset_new_connections",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,38 @@ def apply_opt(cfg: OptConfig, grads, opt_state, params, lr):
         return g0(0), {"m": g0(1), "v": g0(2), "count": count}
 
     raise ValueError(cfg.kind)
+
+
+def apply_opt_fused(cfg: OptConfig, grads, opt_state, params, lr, fused_flags):
+    """SGD epilogue for the fused wgrad->optimizer path (docs/kernels.md).
+
+    ``fused_flags`` is a pytree of python bools mirroring ``grads``.  Leaves
+    flagged fused arrive as m_new = mu*mom + dw + wd*w (the weight cotangent
+    the fused kernels emit, re-masked to the optimizer support by the train
+    step), so the update collapses to ``p -= lr*g; momentum := g`` — no
+    second read-modify-write pass over the gradient.  Plain leaves
+    (embeddings, norms, anything not kernel-dispatched) get the standard
+    SGD+momentum update, bit-identical to ``apply_opt``.  Restricted to
+    plain SGD (the gating in training/steps.py enforces kind=='sgd',
+    nesterov=False, grad_clip=0).
+    """
+    assert cfg.kind == "sgd" and not cfg.nesterov and not cfg.grad_clip
+    mom = opt_state["momentum"]
+
+    def upd(g, m, p, fused):
+        g32 = g.astype(jnp.float32)
+        if fused:
+            m_new = g32
+        else:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+            m_new = cfg.momentum * m + g32
+        return (p - lr * m_new).astype(p.dtype), m_new.astype(m.dtype)
+
+    out = jax.tree_util.tree_map(upd, grads, mom, params, fused_flags)
+    is_t = lambda x: isinstance(x, tuple)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_t)
+    new_mom = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_t)
+    return new_params, {"momentum": new_mom}
 
 
 def reset_connections(opt_state, where_masks):

@@ -152,6 +152,27 @@ def _bucket_len(n: int, floor: int = 8) -> int:
     return max(floor, 1 << (n - 1).bit_length())
 
 
+def _chunk_capped_len(bucket: int, cap: int, length: int, q_chunk: int) -> int:
+    """min(bucket, cap), except a CAPPING cap is rounded down to the flash
+    q-chunk multiple when that still covers ``length``.
+
+    Power-of-two buckets below the cap chunk evenly by construction, but the
+    cap itself (max_len minus patch rows) lands wherever the deployment put
+    it — and a padded prefill length off the q-chunk grid hands the flash
+    kernels a ragged final q tile (models/attention.py pads it per call,
+    wasting a partial chunk of attention FLOPs/DMA on EVERY capped prefill
+    and splitting the trace cache between ragged and even shapes).  Rounding
+    down is only legal when the prompt still fits; otherwise the raw cap is
+    the only length that does."""
+    if bucket <= cap:
+        return bucket
+    if q_chunk:
+        aligned = (cap // q_chunk) * q_chunk
+        if aligned >= length:
+            return aligned
+    return cap
+
+
 @functools.lru_cache(maxsize=None)
 def _prefill_fn(cfg, max_len: int, prompt_len: int, n_patches: int,
                 greedy: bool, faulty: bool = False):
@@ -414,10 +435,15 @@ class ServeEngine:
         """Token count the prefill trace is compiled for: the next power of
         two where padding is exact (bounding compiles under arbitrary-length
         traffic), the exact length otherwise; always capped so the padded
-        sequence still fits the cache rows."""
+        sequence still fits the cache rows.  A capping cap is rounded down
+        to the flash q-chunk grid when the prompt still fits
+        (_chunk_capped_len) so capped prefills chunk evenly."""
         if not self._pad_prompts:
             return prompt_len
-        return min(_bucket_len(prompt_len), self.max_len - self._n_patches)
+        return _chunk_capped_len(
+            _bucket_len(prompt_len), self.max_len - self._n_patches,
+            prompt_len, getattr(self.cfg, "q_chunk", 0),
+        )
 
     def _prefill_for(self, prompt_len: int, greedy: bool, faulty: bool = False):
         return _prefill_fn(self.cfg, self.max_len, self._padded_len(prompt_len),
@@ -626,7 +652,10 @@ class ServeEngine:
             if ctx:
                 # shared-prefix hit: run ONLY the suffix through the model
                 slen = req.prompt_len - ctx
-                padded = min(_bucket_len(slen), self.max_len)
+                padded = _chunk_capped_len(
+                    _bucket_len(slen), self.max_len, slen,
+                    getattr(self.cfg, "q_chunk", 0),
+                )
                 toks = np.zeros(padded, np.int32)
                 toks[:slen] = np.asarray(req.tokens[ctx:], np.int32)
                 batch = {"tokens": jnp.asarray(toks)[None]}

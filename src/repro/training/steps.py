@@ -48,6 +48,7 @@ from ..core import (
     dense_to_sparse_grad,
     get_distribution,
     init_masks,
+    is_pack_entry,
     pack_mismatch,
     refresh_pack_state,
     rigl_update,
@@ -62,6 +63,7 @@ from ..optim import (
     LRSchedule,
     OptConfig,
     apply_opt,
+    apply_opt_fused,
     init_opt,
     reset_connections,
     reset_new_connections,
@@ -333,6 +335,41 @@ def make_train_step(
         from ..configs.base import validate_sparse_kernel
 
         validate_sparse_kernel(cfg.sparse)
+    fused = dispatch and getattr(cfg.sparse, "fused_epilogue", False)
+    if getattr(cfg.sparse, "fused_epilogue", False):
+        # the fused path replaces the wgrad cotangent with the NEW MOMENTUM
+        # (kernels/masked_matmul.py fused_* docstrings) — it only exists for
+        # plain SGD+momentum single-microbatch steps; anything else would
+        # silently compute a different update, so refuse loudly instead.
+        bad = []
+        if not dispatch:
+            bad.append("kernel dispatch off (sparse.kernel is dense/None)")
+        if opt_cfg.kind != "sgd":
+            bad.append(f"optimizer kind {opt_cfg.kind!r} (need plain sgd)")
+        if opt_cfg.nesterov:
+            bad.append("nesterov (the kernel epilogue emits plain momentum)")
+        if opt_cfg.grad_clip:
+            bad.append("grad_clip (the raw gradient never exists to clip)")
+        if max(getattr(cfg, "microbatches", 1), 1) != 1:
+            bad.append("microbatches > 1 (the epilogue folds mom ONCE/step)")
+        if cfg.sparse.method == "snfs":
+            bad.append("method='snfs' (its dense-momentum buffer needs the "
+                       "raw superset gradient every step)")
+        if getattr(cfg, "bf16_grads", False):
+            bad.append("bf16_grads (cotangent dtype must match the weights)")
+        if cfg.dtype != "float32" and opt_cfg.state_dtype != "bfloat16":
+            bad.append(
+                f"compute dtype {cfg.dtype!r} with f32 optimizer state (the "
+                "kernel would nearest-round momentum to the compute dtype; "
+                "use dtype='float32', or opt in to bf16 momentum via "
+                "OptConfig.state_dtype='bfloat16' for in-kernel stochastic "
+                "rounding)"
+            )
+        if bad:
+            raise ValueError(
+                "sparse.fused_epilogue=True is unsupported with: "
+                + "; ".join(bad)
+            )
     if loss_fn is None:
         loss_fn = lambda p, b, masks=None, pack=None: lm_loss(
             p, cfg, b, masks=masks, pack=pack
@@ -346,6 +383,11 @@ def make_train_step(
     # custom loss_fns without a pack= parameter just fall back to the padded
     # traced pack.
     loss_accepts_pack = "pack" in inspect.signature(loss_fn).parameters
+    if fused and not loss_accepts_pack:
+        raise ValueError(
+            "sparse.fused_epilogue=True needs a loss_fn accepting pack= — "
+            "the momentum/seed epilogue operands ride in on the pack entries"
+        )
     mb = max(getattr(cfg, "microbatches", 1), 1)
     acc_dt = jnp.bfloat16 if getattr(cfg, "grad_accum_dtype", "") == "bfloat16" else jnp.float32
 
@@ -422,11 +464,47 @@ def make_train_step(
                 state["masks"], (), kernel=cfg.sparse.kernel,
                 where="train_step", pack=state.get("pack"), require_bwd=True,
             )
+        pack = state.get("pack") if dispatch else None
+        if fused:
+            # FUSED EPILOGUE (docs/kernels.md#fused-epilogue): merge the SGD
+            # operands into each dispatched pack entry.  layers.py routes
+            # entries carrying "mom" onto the fused wgrad kernels, whose
+            # weight cotangent IS the new momentum m_new = mu*mom + dw + wd*w
+            # (masked to the wgrad support) — the raw dw never round-trips
+            # through HBM.  mu/wd/sr are python statics baked into the trace;
+            # mom/seed are traced operands.
+            mu_, wd_ = opt_cfg.momentum, opt_cfg.weight_decay
+            sr_ = opt_cfg.state_dtype == "bfloat16"
+            is_none = lambda x: x is None
+            flat_m, treedef = jax.tree_util.tree_flatten(
+                state["masks"], is_leaf=is_none
+            )
+            flat_pe = (
+                jax.tree_util.tree_leaves(pack, is_leaf=is_pack_entry)
+                if pack is not None
+                else [None] * len(flat_m)
+            )
+            flat_mom = jax.tree_util.tree_flatten(
+                state["opt"]["momentum"], is_leaf=is_none
+            )[0]
+            entries = []
+            for i, (m, pe, mo) in enumerate(zip(flat_m, flat_pe, flat_mom)):
+                if m is None:
+                    entries.append(None)
+                    continue
+                seed = (
+                    state["step"] * jnp.int32(1000003) + jnp.int32(i)
+                ).reshape(1)
+                entries.append(
+                    dict(pe or {})
+                    | {"mom": mo, "seed": seed, "mu": mu_, "wd": wd_, "sr": sr_}
+                )
+            pack = jax.tree_util.tree_unflatten(treedef, entries)
         loss, g_dense = _grads(
             src,
             batch,
             masks=state["masks"] if dispatch else None,
-            pack=state.get("pack") if dispatch else None,
+            pack=pack,
         )
         # topkast trains the whole backward superset B (exploration set gets
         # optimizer updates); every other method optimizes A only.
@@ -444,6 +522,10 @@ def make_train_step(
             wd = opt_cfg.weight_decay
 
             def _decay(g, w, m):
+                if fused and m is not None:
+                    # wd on dispatched leaves is folded into the kernel
+                    # epilogue (g here is already m_new = mu*mom + dw + wd*w)
+                    return g
                 w_act = w if m is None else w * m.astype(w.dtype)
                 return g + wd * w_act.astype(g.dtype)
 
@@ -461,6 +543,10 @@ def make_train_step(
                     lambda g, w: g + wd * w.astype(g.dtype), g_sparse, src
                 )
         lr = lr_sched(state["step"])
+        # NOTE: in fused mode the dispatched leaves of g_sparse are the NEW
+        # MOMENTUM (the raw gradient never exists in HBM), so grad_norm
+        # reports the momentum-update norm there.  The nonfinite guard below
+        # stays valid: m_new is finite iff the gradient contribution is.
         gnorm = jnp.sqrt(
             sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -475,9 +561,20 @@ def make_train_step(
         # stays a single XLA program (the skip costs one where() per leaf).
         ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
         opt_nowd = dataclasses.replace(opt_cfg, weight_decay=0.0)
-        new_params, new_opt = apply_opt(
-            opt_nowd, g_sparse, state["opt"], state["params"], lr
-        )
+        if fused:
+            # dispatched leaves already carry m_new; plain leaves (embeddings,
+            # norms) get the standard SGD+momentum update inside apply_opt_fused
+            fused_flags = jax.tree_util.tree_map(
+                lambda m: m is not None, opt_masks, is_leaf=lambda x: x is None
+            )
+            new_params, new_opt = apply_opt_fused(
+                opt_nowd, g_sparse, state["opt"], state["params"], lr,
+                fused_flags,
+            )
+        else:
+            new_params, new_opt = apply_opt(
+                opt_nowd, g_sparse, state["opt"], state["params"], lr
+            )
         keep = lambda new, old: jax.tree_util.tree_map(
             lambda n, o: jnp.where(ok, n, o), new, old
         )

@@ -303,18 +303,106 @@ def test_lm_loss_grads_flash_vs_dense():
         )
 
 
-def test_softcap_rejected_loudly():
+@pytest.mark.parametrize("family", ["causal", "causal+window128"])
+def test_softcap_forward_parity(family):
+    """logit_softcap inside the online softmax == capping the dense scores
+    before the mask (the gemma/grok convention, ref + _scores)."""
+    causal, window = FAMILIES[family]
+    key = jax.random.PRNGKey(23)
+    q, k, v = _qkv(key, 2, 192, 192, 64)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, bq=64, bk=64, softcap=30.0,
+        interpret=True,
+    )
+    expect = ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=30.0
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_softcap_grads_vs_ref():
+    """The VJP chain factor (1 - tanh²) through dq AND dk/dv."""
+    key = jax.random.PRNGKey(29)
+    q, k, v = _qkv(key, 2, 192, 192, 64)
+    f_k = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(
+        q, k, v, causal=True, bq=64, bk=64, softcap=20.0, interpret=True
+    )))
+    f_r = lambda q, k, v: jnp.sum(jnp.sin(ref.flash_attention_ref(
+        q, k, v, causal=True, softcap=20.0
+    )))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("G", [2, 4])
+def test_gqa_folded_forward_bitexact_vs_repeated(G):
+    """kv_groups=G reading unrepeated (BH/G) K/V == repeating K/V to the
+    full head count — bit-identical (same arithmetic, different DMA source)."""
+    key = jax.random.PRNGKey(31)
+    BH = 8
+    q = jax.random.normal(key, (BH, 128, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH // G, 128, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH // G, 128, 64))
+    folded = flash_attention(
+        q, k, v, causal=True, bq=64, bk=64, kv_groups=G, interpret=True
+    )
+    repeated = flash_attention(
+        q, jnp.repeat(k, G, axis=0), jnp.repeat(v, G, axis=0), causal=True,
+        bq=64, bk=64, interpret=True,
+    )
+    assert jnp.array_equal(folded, repeated)
+
+
+@pytest.mark.parametrize("G", [2, 4])
+def test_gqa_folded_grads_vs_repeated(G):
+    """The restructured dk/dv grid sums over group members == the cotangent
+    of jnp.repeat (which segment-sums over the group)."""
+    key = jax.random.PRNGKey(37)
+    BH = 8
+    q = jax.random.normal(key, (BH, 128, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH // G, 128, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH // G, 128, 64))
+    f_fold = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(
+        q, k, v, causal=True, window=96, bq=64, bk=64, kv_groups=G,
+        softcap=15.0, interpret=True,
+    )))
+    f_rep = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(
+        q, jnp.repeat(k, G, axis=0), jnp.repeat(v, G, axis=0), causal=True,
+        window=96, bq=64, bk=64, softcap=15.0, interpret=True,
+    )))
+    gf = jax.grad(f_fold, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_rep, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_gqa_layout_mismatch_is_loud():
+    key = jax.random.PRNGKey(41)
+    q, k, v = _qkv(key, 8, 128, 128, 64)  # k/v NOT unrepeated for G=4
+    with pytest.raises(ValueError, match="UNREPEATED"):
+        flash_attention(q, k, v, causal=True, kv_groups=4, interpret=True)
+
+
+def test_model_softcap_flash_matches_dense():
+    """Softcapped GQA config through flash_tight == the chunked jnp path —
+    the dispatch that used to raise now runs the kernels for real."""
     from repro.models.attention import attn_init, attention
 
-    cfg = _smoke_cfg("flash_tight")
-    cfg = dataclasses.replace(cfg, logit_softcap=30.0)
+    cfg = dataclasses.replace(_smoke_cfg("flash_tight"), logit_softcap=30.0)
+    cfg_d = dataclasses.replace(_smoke_cfg("dense"), logit_softcap=30.0)
     key = jax.random.PRNGKey(2)
     p = jax.tree_util.tree_map(
         lambda b: b.value, attn_init(key, cfg), is_leaf=lambda x: hasattr(x, "value")
     )
-    x = jax.random.normal(key, (1, 32, cfg.d_model))
-    with pytest.raises(ValueError, match="logit_softcap"):
-        attention(p, x, cfg, kind="global")
+    x = jax.random.normal(key, (1, 64, cfg.d_model))
+    for kind in ("local", "global"):
+        out_f, _ = attention(p, x, cfg, kind=kind)
+        out_d, _ = attention(p, x, cfg_d, kind=kind)
+        np.testing.assert_allclose(
+            np.asarray(out_f), np.asarray(out_d), atol=2e-5
+        )
 
 
 def test_validate_attn_kernel():

@@ -1,0 +1,145 @@
+"""Fused wgrad->optimizer epilogue (docs/kernels.md#fused-epilogue).
+
+The fused kernels' weight cotangent IS the new SGD momentum
+m_new = mu*mom + dw + wd*w (masked to the wgrad support), so a fused train
+step must be numerically indistinguishable from the unfused step it replaces
+— params, momentum and loss — for every dispatched kernel and method the
+path supports.  Also: the loud-failure gating for unsupported combinations,
+and the bf16 stochastic-rounding mode (momentum stored exactly on the bf16
+grid).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SparseConfig
+from repro.data import batch_for
+from repro.optim import LRSchedule, OptConfig
+from repro.training import init_train_state, make_train_step
+
+pytestmark = pytest.mark.kernels
+
+BLOCK = 16
+
+
+def _sp(kernel, method, fused):
+    return SparseConfig(
+        sparsity=0.8, method=method, delta_t=10, alpha=0.3, kernel=kernel,
+        block_shape=(BLOCK, BLOCK), kernel_block=(128, BLOCK, BLOCK),
+        fused_epilogue=fused,
+    )
+
+
+def _run(kernel, method, fused, state_dtype="float32", steps=2):
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, dtype="float32", sparse=_sp(kernel, method, fused)
+    )
+    opt = OptConfig(kind="sgd", momentum=0.9, weight_decay=1e-4,
+                    grad_clip=0.0, state_dtype=state_dtype)
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=0, total_steps=10)
+    state, _, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, lr))
+    for t in range(steps):
+        state, m = step(state, batch_for(cfg, t, 2, 16, learnable=True))
+    return state, m
+
+
+def _maxdiff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        )
+    )
+
+
+@pytest.mark.parametrize(
+    "kernel,method",
+    [("masked", "rigl"), ("block_sparse", "rigl"), ("masked", "topkast")],
+)
+def test_fused_step_matches_unfused(kernel, method):
+    s0, m0 = _run(kernel, method, fused=False)
+    s1, m1 = _run(kernel, method, fused=True)
+    assert _maxdiff(s0["params"], s1["params"]) < 2e-6
+    assert _maxdiff(s0["opt"]["momentum"], s1["opt"]["momentum"]) < 1e-5
+    assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-5
+
+
+def test_fused_sr_bf16_momentum():
+    """state_dtype='bfloat16' switches the epilogue to in-kernel stochastic
+    rounding: stored momentum is exactly bf16 and within ~1 bf16 ulp of the
+    unfused f32 trajectory after a step."""
+    s0, _ = _run("masked", "rigl", fused=False, state_dtype="bfloat16")
+    s1, _ = _run("masked", "rigl", fused=True, state_dtype="bfloat16")
+    for x in jax.tree_util.tree_leaves(s1["opt"]["momentum"]):
+        assert x.dtype == jnp.bfloat16
+    # both sides round to the bf16 grid (nearest vs stochastic), so they
+    # agree to roughly one bf16 ulp of the largest momentum entry
+    mref = max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+        for x in jax.tree_util.tree_leaves(s0["opt"]["momentum"])
+    )
+    assert _maxdiff(s0["opt"]["momentum"], s1["opt"]["momentum"]) < 2e-2 * max(
+        mref, 1e-3
+    )
+
+
+@pytest.mark.parametrize(
+    "opt_kw,needle",
+    [
+        (dict(kind="adam"), "sgd"),
+        (dict(nesterov=True), "nesterov"),
+        (dict(grad_clip=1.0), "grad_clip"),
+    ],
+)
+def test_fused_rejects_unsupported_optimizer(opt_kw, needle):
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, dtype="float32", sparse=_sp("masked", "rigl", True)
+    )
+    opt = OptConfig(**{"kind": "sgd", "grad_clip": 0.0, **opt_kw})
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=0, total_steps=10)
+    with pytest.raises(ValueError, match=needle):
+        make_train_step(cfg, opt, lr)
+
+
+def test_fused_rejects_snfs_microbatches_and_dense_kernel():
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=0, total_steps=10)
+    opt = OptConfig(kind="sgd", grad_clip=0.0)
+    base = get_config("h2o-danube-1.8b", smoke=True)
+    base = dataclasses.replace(base, dtype="float32")
+
+    cfg = dataclasses.replace(base, sparse=_sp("masked", "snfs", True))
+    with pytest.raises(ValueError, match="snfs"):
+        make_train_step(cfg, opt, lr)
+
+    cfg = dataclasses.replace(
+        base, microbatches=2, sparse=_sp("masked", "rigl", True)
+    )
+    with pytest.raises(ValueError, match="microbatches"):
+        make_train_step(cfg, opt, lr)
+
+    cfg = dataclasses.replace(base, sparse=_sp("dense", "rigl", True))
+    with pytest.raises(ValueError):  # validate_sparse_kernel
+        make_train_step(cfg, opt, lr)
+
+
+def test_fused_rejects_bf16_compute_with_f32_state():
+    """bf16 compute stores the cotangent in bf16 — only legal when the
+    momentum state opts in to bf16 (stochastic rounding); f32 state would
+    silently nearest-round the whole optimizer trajectory."""
+    lr = LRSchedule(base_lr=3e-3, warmup_steps=0, total_steps=10)
+    opt = OptConfig(kind="sgd", grad_clip=0.0, state_dtype="float32")
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, dtype="bfloat16", sparse=_sp("masked", "rigl", True)
+    )
+    with pytest.raises(ValueError, match="state_dtype"):
+        make_train_step(cfg, opt, lr)
+    # the same combo with bf16 state is accepted (SR mode)
+    opt_sr = dataclasses.replace(opt, state_dtype="bfloat16")
+    make_train_step(cfg, opt_sr, lr)

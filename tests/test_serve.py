@@ -74,3 +74,49 @@ def test_recurrent_cache_constant_size():
     s1 = sum(x.size for x in jax.tree_util.tree_leaves(c1))
     s2 = sum(x.size for x in jax.tree_util.tree_leaves(c2))
     assert s1 == s2  # O(1) state independent of context length
+
+
+def test_grok_softcap_serve_parity():
+    """final_softcap must reach EVERY serving entry point, not just lm_loss:
+    teacher-forced full-forward logits vs lm_prefill / lm_decode /
+    lm_prefill_suffix on the grok smoke config — which also routes attention
+    through flash_tight with an in-kernel logit_softcap, so this is the
+    end-to-end 'grok cell serves on the tight softcapped flash path' check."""
+    from repro.models import init_paged_caches, lm_prefill_into, lm_prefill_suffix
+
+    cfg = get_config("grok-1-314b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", moe_capacity_factor=16.0)
+    assert cfg.sparse.attn_kernel == "flash_tight"
+    assert cfg.logit_softcap and cfg.final_softcap
+    key = jax.random.PRNGKey(3)
+    params, _, _ = init_lm(key, cfg)
+    S_, ctx = 32, 16
+    tokens = jax.random.randint(key, (1, S_), 0, cfg.vocab_size)
+    h, _, _ = lm_forward(params, cfg, {"tokens": tokens})
+    full = _logits(params, cfg, h)
+    # the cap itself must be live end to end: tanh bounds every true logit
+    assert float(jnp.max(jnp.abs(full[..., : cfg.vocab_size]))) <= cfg.final_softcap
+
+    logits_p, caches = lm_prefill(
+        params, cfg, {"tokens": tokens[:, : S_ - 1]}, max_len=S_
+    )
+    assert float(jnp.max(jnp.abs(logits_p[:, 0] - full[:, -2]))) < 2e-4
+    assert float(jnp.max(jnp.abs(logits_p[..., : cfg.vocab_size]))) <= cfg.final_softcap
+
+    logits_d, _ = lm_decode(params, cfg, caches, tokens[:, S_ - 1 :], pos=S_ - 1)
+    assert float(jnp.max(jnp.abs(logits_d[:, 0] - full[:, -1]))) < 2e-4
+
+    # shared-prefix suffix path: prefix pages via paged admission, then only
+    # the suffix runs through the model (flash history attention + softcaps)
+    page = 8
+    n_blocks = {"global": S_ // page, "local": S_ // page}
+    paged = init_paged_caches(cfg, 1, S_, n_blocks, page)
+    table = jnp.arange(S_ // page, dtype=jnp.int32)
+    _, paged = lm_prefill_into(
+        params, cfg, paged, {"tokens": tokens[:, :ctx]}, jnp.int32(0),
+        max_len=S_, tables={"global": table},
+    )
+    logits_s, _ = lm_prefill_suffix(
+        params, cfg, paged, {"tokens": tokens[:, ctx:]}, table, jnp.int32(ctx)
+    )
+    assert float(jnp.max(jnp.abs(logits_s[:, 0] - full[:, -1]))) < 2e-4
