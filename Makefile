@@ -4,9 +4,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-kernels test-serve test-chaos test-paged test-topology docs-check bench-kernels bench-kernels-smoke bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke bench-methods bench-methods-smoke
+.PHONY: verify test test-kernels test-serve test-chaos test-paged test-topology test-obs docs-check bench-kernels bench-kernels-smoke bench-serve bench-serve-smoke bench-chaos bench-chaos-smoke bench-methods bench-methods-smoke bench-obs bench-obs-smoke
 
-verify: test docs-check bench-kernels-smoke bench-serve-smoke bench-chaos-smoke bench-methods-smoke
+verify: test docs-check bench-kernels-smoke bench-serve-smoke bench-chaos-smoke bench-methods-smoke bench-obs-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -84,3 +84,18 @@ bench-methods:
 # tests/test_topology_invariants.py)
 bench-methods-smoke:
 	$(PY) -m benchmarks.methods_comparison --smoke-bench --out /tmp/BENCH_methods_smoke.json
+
+# observability tier only: metrics/trace/export semantics, instrumented
+# engine determinism, quarantine trace <-> injector correlation — re-run
+# after touching src/repro/obs/ or the engine/train instrumentation hooks
+test-obs:
+	$(PY) -m pytest -x -q -m obs
+
+# observability bench: instrumented-vs-bare engine throughput (FAILS above a
+# 3% overhead), token identity, and the chaos-trace correlation invariants —
+# regenerates BENCH_obs.json plus the Perfetto-loadable chaos trace
+bench-obs:
+	$(PY) -m benchmarks.obs_bench
+
+bench-obs-smoke:
+	$(PY) -m benchmarks.obs_bench --smoke-bench --out /tmp/BENCH_obs_smoke.json

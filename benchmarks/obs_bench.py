@@ -1,0 +1,352 @@
+"""Observability overhead gate + trace <-> fault-injector correlation.
+
+  PYTHONPATH=src python -m benchmarks.obs_bench            # writes BENCH_obs.json
+  PYTHONPATH=src python -m benchmarks.obs_bench --smoke-bench --out /tmp/o.json
+
+Two claims from docs/observability.md, checked mechanically:
+
+  overhead     the instrumented ServeEngine (obs=Observability(...)) serves
+               the serve_bench staggered workload within ``--overhead-pct``
+               (default 3%) of the bare engine's throughput, with
+               bit-identical greedy token streams.  Bare and instrumented
+               runs INTERLEAVE (bare, obs, bare, obs, ...) so a slow patch
+               of a shared machine penalises both sides equally; each side
+               reports its median-throughput run, and a failed gate retries
+               with doubled repeats before giving up — instrumentation is
+               host-side attribute adds, so a real >3% regression survives
+               retries while container noise does not.
+  correlation  a seeded chaos run (FaultInjector poisoning decode logits
+               and one request's prefills, virtual clock) must produce a
+               Perfetto-loadable Chrome trace whose ``quarantine`` instants
+               EXACTLY mirror ``engine.quarantine_log``, and whose
+               quarantines are EXACTLY the ones the injector's fired log
+               predicts: every fired decode injection appears as a
+               ``fault_injected`` instant (step + targeted slots), the
+               union of their ``active`` hits is the decode quarantine set,
+               and each fired prefill injection (rid, attempt) maps to one
+               prefill quarantine.  A shed mini-storm checks ``shed``
+               instants against the queue's books the same way.
+
+The process EXITS NONZERO on any violation; results land in BENCH_obs.json.
+``--smoke-bench`` shrinks the workload for make verify.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.launch.serve import (
+    configure_kernel,
+    init_serving_state,
+    staggered_requests,
+)
+from repro.obs import MetricsRegistry, Observability, median_by
+from repro.serving import FaultInjector, ServeEngine, Status, burst_storm
+
+TRACE_PH = {"X", "i", "C", "M"}
+
+
+def _fresh_obs() -> Observability:
+    """A private registry per run: accumulation across timed repeats must
+    not make later runs cheaper (memoised series) or dirtier (old counts)."""
+    return Observability(metrics=MetricsRegistry(), process_name="serve")
+
+
+def _run(cfg, params, reqs, *, capacity, max_len, masks, pack, obs=None):
+    engine = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                         masks=masks, pack=pack, obs=obs)
+    for r in copy.deepcopy(reqs):
+        engine.submit(r)
+    stats = engine.run()
+    return stats, engine
+
+
+def _streams(engine) -> dict[int, list[int]]:
+    return {r.rid: list(r.generated) for r in engine.queue.done
+            if r.status is Status.DONE}
+
+
+def _drain(engine, *, dt: float = 1.0, max_steps: int = 10_000) -> float:
+    now = 0.0
+    steps = 0
+    while len(engine.queue) or engine.active.any():
+        engine.step(now)
+        now += dt
+        steps += 1
+        if steps > max_steps:
+            raise SystemExit("obs_bench: engine failed to drain (livelock?)")
+    return now
+
+
+def measure_overhead(cfg, params, reqs, *, capacity, max_len, masks, pack,
+                     repeats) -> dict:
+    """Interleaved bare/instrumented repeats; returns both sides' median
+    runs, the throughput overhead, and the token-identity verdict."""
+    kw = dict(capacity=capacity, max_len=max_len, masks=masks, pack=pack)
+    # warm every jit on a throwaway pair (per-length prefills + decode step)
+    _, bare_eng = _run(cfg, params, reqs, **kw)
+    _, obs_eng = _run(cfg, params, reqs, obs=_fresh_obs(), **kw)
+    token_identical = _streams(bare_eng) == _streams(obs_eng)
+
+    bare_runs, obs_runs = [], []
+    for _ in range(repeats):
+        bare_runs.append(_run(cfg, params, reqs, **kw)[0])
+        obs_runs.append(_run(cfg, params, reqs, obs=_fresh_obs(), **kw)[0])
+    bare = median_by(bare_runs, "tok_per_s")
+    inst = median_by(obs_runs, "tok_per_s")
+    overhead = 1.0 - inst["tok_per_s"] / max(bare["tok_per_s"], 1e-9)
+    return {
+        "repeats": repeats,
+        "bare": bare,
+        "instrumented": inst,
+        "overhead_pct": 100.0 * overhead,
+        "token_identical": token_identical,
+    }
+
+
+def _validate_chrome(path) -> dict:
+    """Perfetto-loadability by schema: top-level traceEvents list, every
+    event a known phase with integer microsecond timestamps."""
+    doc = json.loads(pathlib.Path(path).read_text())
+    assert isinstance(doc.get("traceEvents"), list), "traceEvents missing"
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in TRACE_PH, f"unknown phase {ev['ph']!r}"
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "M":
+            continue
+        assert isinstance(ev["ts"], int) and ev["ts"] >= 0, ev
+        if ev["ph"] == "X":
+            assert isinstance(ev["dur"], int) and ev["dur"] >= 0, ev
+    return {"n_events": len(doc["traceEvents"]), "valid": True}
+
+
+def run_correlation(cfg, params, masks, pack, *, capacity, max_len,
+                    n_requests, n_faults, seed, trace_path) -> dict:
+    """Seeded chaos run; every expectation comes from the injector's FIRED
+    log, every observation from the trace/engine — zero shared bookkeeping
+    between the two sides, so agreement means the wiring is honest."""
+    violations: list[str] = []
+
+    inj = FaultInjector(seed)
+    planned = inj.poison_random(n_faults, max_step=n_requests * 4,
+                                capacity=capacity)
+    poisoned_rid = 1  # every admission attempt of rid 1 fails its prefill
+    inj.poison_prefill(poisoned_rid)
+
+    obs = _fresh_obs()
+    engine = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                         masks=masks, pack=pack, faults=inj, max_retries=1,
+                         obs=obs)
+    for r in burst_storm(cfg, n_requests, prompt_len=8, max_new_tokens=8,
+                         seed=seed):
+        engine.submit(r)
+    _drain(engine)
+    obs.trace.to_chrome(trace_path)
+    trace = _validate_chrome(trace_path)
+
+    # 1. quarantine instants == engine.quarantine_log, field for field
+    got = [
+        (e["args"]["step"], e["args"]["rid"], e["args"]["slot"],
+         e["args"]["attempt"], e["args"]["where"])
+        for e in obs.trace.find("quarantine")
+    ]
+    book = [tuple(q) for q in engine.quarantine_log]
+    if sorted(got) != sorted(book):
+        violations.append(
+            f"trace quarantine instants {sorted(got)} != engine "
+            f"quarantine_log {sorted(book)}"
+        )
+
+    # 2. every fired decode injection surfaced as a fault_injected instant
+    fired_decode = [e for e in inj.log if e[0] == "decode"]
+    instants = obs.trace.find("fault_injected")
+    seen = {(e["args"]["step"], tuple(e["args"]["targeted"]))
+            for e in instants}
+    want = {(step, tuple(sorted(plan))) for _, step, plan in fired_decode}
+    if seen != want:
+        violations.append(
+            f"fault_injected instants {sorted(seen)} != fired decode "
+            f"injections {sorted(want)}"
+        )
+
+    # 3. decode quarantines == the union of the instants' ACTIVE hits (an
+    # injection on a parked slot fires in the log but quarantines nobody)
+    expect_decode = sorted(
+        (e["args"]["step"], h["rid"], h["slot"], h["attempt"], "decode")
+        for e in instants for h in e["args"]["active"]
+    )
+    got_decode = sorted(q for q in book if q[4] == "decode")
+    if got_decode != expect_decode:
+        violations.append(
+            f"decode quarantines {got_decode} != injector-predicted "
+            f"{expect_decode}"
+        )
+
+    # 4. each fired prefill injection (rid, attempt) -> one prefill
+    # quarantine with the same key
+    fired_prefill = sorted((e[1], e[2]) for e in inj.log
+                           if e[0] == "prefill")
+    got_prefill = sorted((q[1], q[3]) for q in book if q[4] == "prefill")
+    if got_prefill != fired_prefill:
+        violations.append(
+            f"prefill quarantines {got_prefill} != fired prefill "
+            f"injections {fired_prefill}"
+        )
+    if not fired_prefill:
+        violations.append("prefill poisoning never fired — scenario is vacuous")
+
+    # 5. retry instants: one per requeue the engine counted
+    n_retry = len(obs.trace.find("retry"))
+    if n_retry != engine.n_retries_total:
+        violations.append(
+            f"{n_retry} retry instants != n_retries_total "
+            f"{engine.n_retries_total}"
+        )
+
+    # shed mini-storm: instants vs the queue's books
+    obs2 = _fresh_obs()
+    eng2 = ServeEngine(cfg, params, capacity=capacity, max_len=max_len,
+                       masks=masks, pack=pack, obs=obs2,
+                       queue_limit=n_requests, deadline=3.0)
+    for r in burst_storm(cfg, n_requests * 2, prompt_len=8, max_new_tokens=8,
+                         seed=seed):
+        eng2.submit(r)
+    _drain(eng2)
+    shed_rids = sorted(r.rid for r in eng2.queue.done
+                       if r.status is Status.SHED)
+    instant_rids = sorted(e["args"]["rid"] for e in obs2.trace.find("shed"))
+    if shed_rids != instant_rids:
+        violations.append(
+            f"shed instants {instant_rids} != SHED requests {shed_rids}"
+        )
+    if not shed_rids:
+        violations.append("shed storm shed nothing — scenario is vacuous")
+
+    return {
+        "requests": n_requests,
+        "planned_decode_faults": len(planned),
+        "fired_decode": len(fired_decode),
+        "fired_prefill": len(fired_prefill),
+        "quarantined": engine.n_quarantined,
+        "retries": engine.n_retries_total,
+        "shed": len(shed_rids),
+        "trace": dict(trace, path=str(trace_path)),
+        "violations": violations,
+    }
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="h2o-danube-1.8b")
+    p.add_argument("--capacity", type=int, default=4)
+    p.add_argument("--requests", type=int, default=24)
+    p.add_argument("--arrival-rate", type=float, default=100.0)
+    p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--overhead-pct", type=float, default=3.0,
+                   help="fail if instrumented throughput lags bare by more")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--kernel", default=None,
+                   choices=["dense", "masked", "block_sparse"])
+    p.add_argument("--block", type=int, default=16)
+    p.add_argument("--out", default="BENCH_obs.json")
+    p.add_argument("--trace-out", default=None,
+                   help="chaos-run Chrome trace (default: <out>.trace.json)")
+    p.add_argument("--smoke-bench", action="store_true",
+                   help="tiny workload for make verify (seconds, not minutes)")
+    args = p.parse_args()
+
+    if args.smoke_bench:
+        args.requests = min(args.requests, 6)
+        args.repeats = min(args.repeats, 2)
+        gen_lens, prompt_lens = (4, 8, 16), (8, 16)
+    else:
+        gen_lens, prompt_lens = (8, 16, 32, 64), (16, 32)
+    trace_path = pathlib.Path(
+        args.trace_out or str(args.out) + ".trace.json"
+    )
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+
+    cfg = configure_kernel(
+        get_config(args.arch, smoke=True), kernel=args.kernel, block=args.block
+    )
+    params, masks, pack = init_serving_state(cfg)
+
+    reqs = staggered_requests(
+        cfg, args.requests, prompt_lens=prompt_lens, gen_lens=gen_lens,
+        arrival_rate=args.arrival_rate, seed=args.seed,
+    )
+    kw = dict(capacity=args.capacity, max_len=args.max_len,
+              masks=masks, pack=pack)
+
+    # retry a failed gate with doubled repeats: medians over more interleaved
+    # runs squeeze out container noise, not a real per-event regression
+    attempts = []
+    repeats = args.repeats
+    for _ in range(3):
+        attempts.append(measure_overhead(cfg, params, reqs, repeats=repeats,
+                                         **kw))
+        if attempts[-1]["overhead_pct"] <= args.overhead_pct:
+            break
+        repeats *= 2
+    best = min(attempts, key=lambda a: a["overhead_pct"])
+
+    chaos = run_correlation(
+        cfg, params, masks, pack, capacity=3, max_len=32,
+        n_requests=8, n_faults=3, seed=args.seed, trace_path=trace_path,
+    )
+
+    violations = list(chaos["violations"])
+    if not best["token_identical"]:
+        violations.append(
+            "instrumentation changed greedy token streams — obs must be "
+            "host-side only"
+        )
+    gate_failed = best["overhead_pct"] > args.overhead_pct
+    if gate_failed:
+        violations.append(
+            f"instrumented engine overhead {best['overhead_pct']:.2f}% > "
+            f"{args.overhead_pct:.1f}% after {len(attempts)} attempt(s)"
+        )
+
+    out = {
+        "meta": {
+            "arch": cfg.name,
+            "kernel": cfg.sparse.kernel,
+            "capacity": args.capacity,
+            "requests": args.requests,
+            "overhead_gate_pct": args.overhead_pct,
+            "seed": args.seed,
+            "smoke_bench": bool(args.smoke_bench),
+        },
+        "overhead": {"attempts": attempts, "best": best},
+        "chaos": chaos,
+        "ok": not violations,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"bare:         {best['bare']['tok_per_s']:8.1f} tok/s")
+    print(f"instrumented: {best['instrumented']['tok_per_s']:8.1f} tok/s "
+          f"({best['overhead_pct']:+.2f}% overhead, gate "
+          f"{args.overhead_pct:.1f}%, {len(attempts)} attempt(s))")
+    print(f"tokens identical under instrumentation: "
+          f"{best['token_identical']}")
+    print(f"chaos: {chaos['fired_decode']} decode + {chaos['fired_prefill']} "
+          f"prefill injections fired -> {chaos['quarantined']} quarantines, "
+          f"{chaos['retries']} retries, {chaos['shed']} sheds; trace "
+          f"{chaos['trace']['n_events']} events -> {chaos['trace']['path']}")
+    print(f"-> {args.out}")
+    if violations:
+        for v in violations:
+            print(f"VIOLATION: {v}")
+        raise SystemExit(
+            f"obs_bench: {len(violations)} violation(s) — see above"
+        )
+    print("observability overhead gate + correlation invariants hold")
+
+
+if __name__ == "__main__":
+    main()

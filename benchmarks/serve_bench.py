@@ -54,14 +54,14 @@ from repro.launch.serve import (
     serve_session,
     staggered_requests,
 )
+from repro.obs import median_by, percentile
 from repro.serving import Request, ServeEngine
 
 
 def _median_by_throughput(runs):
     """Median run by tok_per_s — one noisy-container run (CPU throttling
     bursts on shared machines) must not decide the headline number."""
-    runs = sorted(runs, key=lambda r: r["tok_per_s"])
-    return runs[len(runs) // 2]
+    return median_by(runs, "tok_per_s")
 
 
 def _lockstep_run(cfg, params, reqs, capacity, repeats, *, masks=None, pack=None):
@@ -105,8 +105,8 @@ def _lockstep_run(cfg, params, reqs, capacity, repeats, *, masks=None, pack=None
             "compute_s": compute_s,
             "tok_per_s": toks / max(now, 1e-9),
             "decode_steps": steps,
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_p50_s": percentile(lat, 50),
+            "latency_p95_s": percentile(lat, 95),
         }
 
     return _median_by_throughput([one() for _ in range(repeats)])

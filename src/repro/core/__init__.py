@@ -28,6 +28,7 @@ from .pack import (  # noqa: F401
     is_pack_entry,
     pack_mismatch,
     pack_stats,
+    publish_pack_gauges,
     refresh_pack_state,
     validate_pack,
 )

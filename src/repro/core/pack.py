@@ -93,6 +93,7 @@ __all__ = [
     "pack_entry",
     "pack_mismatch",
     "pack_stats",
+    "publish_pack_gauges",
     "is_pack_entry",
     "slack_width",
     "validate_pack",
@@ -517,9 +518,16 @@ def validate_pack(pack, *, where: str = "pack") -> int:
 
 
 def pack_stats(pack) -> dict[str, Any]:
-    """Host-side bookkeeping: per-layer grid width vs the padded worst case."""
+    """Host-side bookkeeping: per-layer grid width vs the padded worst case,
+    plus block-grid densities — ``density`` is live forward blocks over the
+    full (nkb x cols x groups) block grid, ``superset_density`` the same for
+    the Top-KAST backward superset B (None when the entry carries no
+    superset).  These feed the live ``kernel_*`` gauges
+    (docs/observability.md#metric-catalog), so the tight-grid win and the
+    B-vs-A overhead are visible during a run, not only in kernel_bench."""
     out: dict[str, Any] = {"layers": {}}
     tight = padded = 0
+    nnz_total = bnnz_total = cells_total = bcells_total = 0
     flat, _ = jax.tree_util.tree_flatten_with_path(pack, is_leaf=is_pack_entry)
     for path, e in flat:
         if e is None:
@@ -528,18 +536,66 @@ def pack_stats(pack) -> dict[str, Any]:
         width = int(e["idx"].shape[-1])
         nkb = int(e["nkb"])
         groups = int(e["idx"].shape[0]) if e["idx"].ndim == 3 else 1
+        cols = int(e["cnt"].shape[-1])
+        nnz = int(e["nnz"])
+        cells = nkb * cols * groups
+        bnnz = int(e["bnnz"]) if "bidx" in e else None
         out["layers"][name] = {
             "width": width,
             "worst_case": nkb,
             "grid_fraction": width / nkb,
             "row_width": int(e["ridx"].shape[-1]) if "ridx" in e else None,
-            "nnz_blocks": int(e["nnz"]),
-            "cols": int(e["cnt"].shape[-1]),
+            "nnz_blocks": nnz,
+            "cols": cols,
             "groups": groups,
+            "density": nnz / cells if cells else 0.0,
+            "superset_density": (
+                bnnz / cells if bnnz is not None and cells else None
+            ),
         }
         tight += width * groups
         padded += nkb * groups
+        nnz_total += nnz
+        cells_total += cells
+        if bnnz is not None:
+            bnnz_total += bnnz
+            bcells_total += cells
     out["grid_iters_tight"] = tight
     out["grid_iters_padded"] = padded
     out["grid_fraction"] = tight / padded if padded else 1.0
+    out["density"] = nnz_total / cells_total if cells_total else 0.0
+    out["superset_density"] = (
+        bnnz_total / bcells_total if bcells_total else None
+    )
     return out
+
+
+def publish_pack_gauges(metrics, pack) -> None:
+    """Set the kernel_* gauges on a metrics registry (repro.obs duck-typed —
+    no import, so core stays obs-free) from ``pack_stats``: runtime grid
+    fraction plus forward/superset block densities, per layer and under the
+    ``_total`` aggregate label.  Both the serving engine (construction — its
+    pack is engine-lifetime constant) and the trainer (every refresh_pack)
+    publish through this one helper, so the catalog names stay identical
+    across the two paths (docs/observability.md#metric-catalog)."""
+    if pack is None:
+        return
+    st = pack_stats(pack)
+    gf = metrics.gauge("kernel_grid_fraction",
+                       "packed grid width / padded worst case",
+                       labels=("layer",))
+    dn = metrics.gauge("kernel_block_density",
+                       "live forward blocks / full block grid",
+                       labels=("layer",))
+    sd = metrics.gauge("kernel_superset_density",
+                       "Top-KAST backward-superset blocks / full block grid",
+                       labels=("layer",))
+    gf.labels("_total").set(st["grid_fraction"])
+    dn.labels("_total").set(st["density"])
+    if st["superset_density"] is not None:
+        sd.labels("_total").set(st["superset_density"])
+    for name, ls in st["layers"].items():
+        gf.labels(name).set(ls["grid_fraction"])
+        dn.labels(name).set(ls["density"])
+        if ls["superset_density"] is not None:
+            sd.labels(name).set(ls["superset_density"])

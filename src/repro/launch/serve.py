@@ -263,6 +263,16 @@ def main():
         help="override cfg.sparse.attn_kernel: prefill attention via the "
         "Pallas flash kernels (flash_tight = live-KV-block grids)",
     )
+    # observability exports (docs/observability.md)
+    p.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write the engine's Chrome-trace JSON here (open in Perfetto / "
+        "chrome://tracing; docs/observability.md)",
+    )
+    p.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write Prometheus text-exposition metrics here after the run",
+    )
     args = p.parse_args()
     cfg = configure_kernel(
         get_config(args.arch, smoke=args.smoke), kernel=args.kernel,
@@ -286,12 +296,17 @@ def main():
 
     from ..serving import ServeEngine
 
+    obs = None
+    if args.trace_out or args.metrics_out:
+        from ..obs import Observability
+
+        obs = Observability(process_name="serve")
     engine = ServeEngine(
         cfg, params, capacity=args.capacity, max_len=args.max_len,
         masks=masks, pack=pack, queue_limit=args.queue_limit,
         deadline=args.deadline, max_retries=args.max_retries,
         paged=args.paged, page_size=args.page_size, n_blocks=args.n_blocks,
-        prefix_cache=args.prefix_cache,
+        prefix_cache=args.prefix_cache, obs=obs,
     )
     n_shed_at_submit = 0
     for req in staggered_requests(
@@ -303,6 +318,15 @@ def main():
         print(f"backpressure: {n_shed_at_submit} requests shed at submit "
               f"(--queue-limit {args.queue_limit})")
     stats = engine.run()
+    if obs is not None:
+        flusher = obs.flusher(
+            metrics_path=args.metrics_out, trace_path=args.trace_out,
+        )
+        flusher.close(stats["wall_s"])
+        if args.trace_out:
+            print(f"trace written to {args.trace_out}")
+        if args.metrics_out:
+            print(f"metrics written to {args.metrics_out}")
     print(
         f"engine  kernel={cfg.sparse.kernel}  "
         f"attn_kernel={cfg.sparse.attn_kernel}  capacity={args.capacity}"

@@ -27,8 +27,9 @@ import numpy as np
 
 from ..configs import get_config
 from ..configs.base import SparseConfig
-from ..core import TopologyTrace, mask_stats
+from ..core import TopologyTrace, mask_stats, publish_pack_gauges
 from ..core.pruning import PruningSchedule
+from ..obs import Observability, jit_retraces
 from ..checkpoint.checkpoint import Checkpointer
 from ..data import batch_for
 from ..optim import LRSchedule, OptConfig
@@ -63,8 +64,20 @@ def train_loop(
     learnable: bool = True,
     log_every: int = 50,
     seed: int = 0,
+    obs=None,
+    flusher=None,
 ):
-    """One worker attempt. Raises on (simulated) failure; restartable."""
+    """One worker attempt. Raises on (simulated) failure; restartable.
+
+    ``obs`` (optional repro.obs.Observability) turns on the training side
+    of the observability layer (docs/observability.md): per-step train_step
+    spans + a loss/gnorm counter track on the tracer, train_* gauges/
+    histograms and topology-distance series in the metrics registry, and
+    kernel_* pack gauges re-published after every refresh_pack.  ``flusher``
+    (repro.obs.PeriodicFlusher, usually ``obs.flusher(...)`` — built by
+    main() from --trace-out/--metrics-out) is pumped at log cadence and
+    force-flushed before return, so a live run's files stay current.
+    """
     workdir = pathlib.Path(workdir)
     opt_cfg = opt_cfg or OptConfig(kind="adam", weight_decay=0.0, grad_clip=1.0)
     lr_sched = lr_sched or LRSchedule(
@@ -100,9 +113,34 @@ def train_loop(
     metrics_log = []
     topo_log = []  # per-update records, kept apart from the loss log
     topo_trace = TopologyTrace()  # graph-distance telemetry (core/topology.py)
+    om = None
+    if obs is not None:
+        m = obs.metrics
+        obs.trace.thread_name(0, "train")
+        om = {
+            "loss": m.gauge("train_loss", "last logged training loss"),
+            "lr": m.gauge("train_lr", "current learning rate"),
+            "gnorm": m.gauge("train_grad_norm", "last logged gradient norm"),
+            "stale": m.gauge("train_pack_stale",
+                             "pack blocks differing from the masks (must be 0)"),
+            "nonfinite": m.gauge("train_nonfinite_steps",
+                                 "skipped non-finite optimizer updates"),
+            "steps": m.counter("train_steps_total", "optimizer steps run"),
+            "topo": m.counter("train_topology_updates_total",
+                              "drop/grow topology updates applied"),
+            "step_s": m.histogram("train_step_seconds",
+                                  "host-side step dispatch time"),
+            "dist": m.gauge("train_topology_distance",
+                            "last topology-update distance by metric",
+                            labels=("metric",)),
+            "retraces": m.gauge("train_retraces",
+                                "jit retraces of the train/update steps"),
+        }
+        publish_pack_gauges(m, state.get("pack"))
     t0 = time.time()
     step = int(state["step"])
     while step < steps:
+        ts0 = time.time()
         b = batch_for(cfg, step, batch, seq, learnable=learnable)
         is_update = (
             sp.method in ("rigl", "set", "snfs", "topkast")
@@ -119,12 +157,36 @@ def train_loop(
             state = refresh_pack(state, cfg)
             rec = topo_trace.record(prev_masks, state["masks"], step=step)
             topo_log.append({"step": step, "topology": rec})
+            if om is not None:
+                om["topo"].inc()
+                for k in ("jaccard_dist", "graph_edit_dist", "nhd"):
+                    om["dist"].labels(k).set(rec[k])
+                obs.trace.instant(
+                    "topology_update", time.time() - t0, tid=0, cat="train",
+                    args={"step": step, **{k: rec[k] for k in
+                          ("dropped", "grown", "jaccard_dist", "nhd")}},
+                )
+                # the drop/grow moved blocks: re-publish the pack gauges
+                publish_pack_gauges(obs.metrics, state.get("pack"))
         else:
             state, m = train_step(state, b)
         if prune_fn is not None and step % prune_sched.prune_every == 0:
             state = prune_fn(state)
             state = refresh_pack(state, cfg)  # pruning moved the masks too
+            if om is not None:
+                publish_pack_gauges(obs.metrics, state.get("pack"))
         step = int(state["step"])
+        if om is not None:
+            # host-side dispatch slice (jax is async: the log-cadence block
+            # below is where queued work drains — visible as long spans
+            # there, exactly the truth of where the host waited)
+            ts1 = time.time()
+            obs.trace.span(
+                "topology_update_step" if is_update else "train_step",
+                ts0 - t0, ts1 - t0, tid=0, cat="train", args={"step": step},
+            )
+            om["step_s"].observe(ts1 - ts0)
+            om["steps"].inc()
         if preempt_at is not None and step == preempt_at:
             ckpt.maybe_save(state, step, force=True)
             ckpt.wait()
@@ -132,12 +194,34 @@ def train_loop(
         if step % log_every == 0 or step == steps:
             loss = float(m["loss"])
             rec = {"step": step, "loss": loss}
+            if "lr" in m:  # topology-update steps report loss only
+                rec["lr"] = float(m["lr"])
+                rec["grad_norm"] = float(m["grad_norm"])
+            # compile-counter: growth during steady state (after the first
+            # log interval) is the pack-width-hysteresis regression signal
+            rec["n_retraces"] = jit_retraces(train_step, rigl_step)
+            if om is not None:
+                tnow = time.time() - t0
+                om["loss"].set(loss)
+                om["retraces"].set(rec["n_retraces"])
+                track = {"loss": loss}
+                if "lr" in m:
+                    om["lr"].set(float(m["lr"]))
+                    om["gnorm"].set(float(m["grad_norm"]))
+                    track["grad_norm"] = float(m["grad_norm"])
+                if "nonfinite_steps" in m:
+                    om["nonfinite"].set(int(m["nonfinite_steps"]))
+                obs.trace.counter("train", tnow, track, tid=0)
+                if flusher is not None:
+                    flusher.maybe_flush(tnow)
             if "pack_stale" in m:
                 # staleness is sticky until the next refresh, so checking at
                 # log cadence (not every step) still catches a missed
                 # refresh_pack — and a nonzero value means the kernels are
                 # executing the WRONG topology: fail fast, don't mistrain
                 rec["pack_stale"] = stale = int(m["pack_stale"])
+                if om is not None:
+                    om["stale"].set(stale)
                 if stale:
                     raise RuntimeError(
                         f"PackState is stale ({stale} blocks differ from the "
@@ -149,6 +233,8 @@ def train_loop(
         ckpt.maybe_save(state, step)
     ckpt.maybe_save(state, step, force=True)
     ckpt.wait()
+    if flusher is not None:
+        flusher.close(time.time() - t0)
     stats = mask_stats(state["masks"])
     (workdir / "result.json").write_text(
         json.dumps({
@@ -201,6 +287,16 @@ def main():
     p.add_argument("--workdir", default="/tmp/repro_train")
     p.add_argument("--preempt-at", type=int, default=None)
     p.add_argument("--max-restarts", type=int, default=3)
+    p.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write a Chrome-trace JSON here (open in Perfetto / "
+             "chrome://tracing; docs/observability.md)",
+    )
+    p.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write Prometheus text-exposition metrics here "
+             "(rewritten at log cadence)",
+    )
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -219,6 +315,12 @@ def main():
         sparse_kw["block_shape"] = (args.block, args.block)
         sparse_kw["kernel_block"] = (128, args.block, args.block)
     cfg = dataclasses.replace(cfg, sparse=SparseConfig(**sparse_kw))
+    obs = flusher = None
+    if args.trace_out or args.metrics_out:
+        obs = Observability(pid=1, process_name="train")
+        flusher = obs.flusher(
+            metrics_path=args.metrics_out, trace_path=args.trace_out,
+        )
     run_with_restarts(
         max_restarts=args.max_restarts,
         cfg=cfg,
@@ -227,6 +329,8 @@ def main():
         seq=args.seq,
         workdir=args.workdir,
         preempt_at=args.preempt_at,
+        obs=obs,
+        flusher=flusher,
     )
 
 

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +66,9 @@ import numpy as np
 
 import hashlib
 
-from ..core.pack import validate_pack
+from ..core.pack import publish_pack_gauges, validate_pack
+from ..obs.metrics import jit_retraces
+from ..obs.stats_util import percentile
 from ..models import (
     attn_schedules,
     cache_group,
@@ -82,7 +84,27 @@ from .faults import FaultInjector
 from .queue import Request, RequestQueue, Status
 from .sampler import request_key, sample_tokens, step_keys
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "QuarantineRecord"]
+
+
+class QuarantineRecord(NamedTuple):
+    """One quarantine event, keyed for exact FaultInjector correlation.
+
+    ``step`` is the engine decode-step counter AT detection time — the same
+    key ``FaultInjector.decode_fault`` logs, so a decode quarantine joins
+    its fired injection on (step, slot).  ``attempt`` is the request's retry
+    ordinal when the fault hit (0 = first admission), matching the attempt
+    the injector logs for prefill faults — a retried-then-quarantined rid
+    appears once PER ATTEMPT, unambiguously.  A NamedTuple compares equal
+    to the plain tuple form, so existing ``== [(step, rid, slot, ...)]``
+    assertions stay literal.
+    """
+
+    step: int
+    rid: int
+    slot: int
+    attempt: int
+    where: str  # "decode" | "prefill"
 
 
 @functools.lru_cache(maxsize=None)
@@ -299,6 +321,17 @@ class ServeEngine:
                      partially-shared boundary page FORKS) and prefills only
                      the suffix.  All-global causal transformer configs
                      only (no recurrent carry to replay, no MoE routing).
+
+    Observability (docs/observability.md):
+      obs            optional repro.obs.Observability bundle.  When set, the
+                     engine emits per-request spans (queue_wait / prefill /
+                     decode, one trace track per slot), quarantine / retry /
+                     shed / fault_injected instants, and updates the serve_*
+                     metric families each step.  All instrumentation is
+                     host-side — the jitted executables and their arguments
+                     are IDENTICAL with and without ``obs``, so decode
+                     streams are token-identical by construction
+                     (benchmarks/obs_bench.py asserts it anyway).
     """
 
     def __init__(self, cfg, params, *, capacity: int, max_len: int,
@@ -306,7 +339,7 @@ class ServeEngine:
                  deadline: Optional[float] = None, max_retries: int = 0,
                  faults: Optional[FaultInjector] = None, paged: bool = False,
                  page_size: int = 16, n_blocks: Optional[int] = None,
-                 prefix_cache: int = 0):
+                 prefix_cache: int = 0, obs=None):
         if not cfg.causal:
             raise ValueError("ServeEngine needs a causal config (no decode "
                              "path for encoder-only models)")
@@ -422,12 +455,114 @@ class ServeEngine:
         self.n_quarantined = 0   # non-finite detections (decode + prefill)
         self.n_retries_total = 0
         self.slot_history: list[tuple[int, int]] = []  # (rid, slot) admissions
-        self.quarantine_log: list[tuple[int, int, int]] = []  # (step, rid, slot)
+        self.quarantine_log: list[QuarantineRecord] = []
+        # retrace baseline: stats() reports compiles that happened DURING
+        # this engine's lifetime (module-level lru caches are shared across
+        # engines, so the absolute miss count includes other instances)
+        self._retrace_base = jit_retraces(
+            _decode_fn, _prefill_fn, _suffix_prefill_fn
+        )
+        self.obs = obs
+        self._init_obs()
         # both sampler variants bound once: the per-step dispatch is a dict
         # lookup, not a ModelConfig re-hash through the lru_cache (the chaos
         # ``faulty`` variants are looked up lazily — fault-free engines never
         # compile them)
         self._decode = {g: _decode_fn(cfg, g) for g in (False, True)}
+
+    # -- observability (docs/observability.md) -----------------------------
+
+    def _init_obs(self) -> None:
+        """Bind one metric-series handle per event kind, ONCE: the hot-path
+        cost of an enabled engine is then an attribute add per event — no
+        name/label resolution inside the step loop.  Trace tids: 0 is the
+        engine/scheduler track, slot ``s`` traces on tid ``s + 1``."""
+        if self.obs is None:
+            self._m = None
+            return
+        m = self.obs.metrics
+        tr = self.obs.trace
+        tr.thread_name(0, "engine")
+        for s in range(self.capacity):
+            tr.thread_name(s + 1, f"slot{s}")
+        req = m.counter("serve_requests_total",
+                        "terminal requests by status", labels=("status",))
+        pre = m.counter("serve_prefills_total",
+                        "admissions by prefill variant", labels=("variant",))
+        quar = m.counter("serve_quarantine_total",
+                         "non-finite quarantines by phase", labels=("where",))
+        self._m = {
+            "done": req.labels("DONE"),
+            "shed": req.labels("SHED"),
+            "failed": req.labels("FAILED"),
+            "tokens": m.counter("serve_tokens_total",
+                                "tokens generated by DONE requests"),
+            "steps": m.counter("serve_decode_steps_total",
+                               "engine decode steps dispatched"),
+            "prefill_full": pre.labels("full"),
+            "prefill_suffix": pre.labels("suffix"),
+            "quar_decode": quar.labels("decode"),
+            "quar_prefill": quar.labels("prefill"),
+            "retries": m.counter("serve_retries_total",
+                                 "quarantine retries re-queued"),
+            "queue_wait": m.histogram("serve_queue_wait_seconds",
+                                      "ready -> admission wait"),
+            "prefill_s": m.histogram("serve_prefill_seconds",
+                                     "prefill dispatch wall time"),
+            "step_s": m.histogram("serve_decode_step_seconds",
+                                  "decode-step dispatch wall time"),
+            "latency": m.histogram("serve_request_latency_seconds",
+                                   "arrival -> DONE latency"),
+            "slots": m.gauge("serve_slots_active", "active decode slots"),
+            "depth": m.gauge("serve_queue_depth",
+                             "waiting (un-admitted) requests"),
+            "hit_rate": m.gauge("serve_prefix_hit_rate",
+                                "prefix-cache hit fraction of probes"),
+            "retraces": m.gauge(
+                "serve_retraces",
+                "jit variants compiled during this engine's lifetime"),
+        }
+        if self.paged and self.pools:
+            for nm, help_ in (("free", "free pages"), ("live", "live pages"),
+                              ("forks", "copy-on-write page forks")):
+                fam = m.gauge(f"serve_pool_pages_{nm}" if nm != "forks"
+                              else "serve_pool_forks",
+                              f"block-pool {help_}", labels=("group",))
+                for g in self.pools:
+                    self._m[f"pool_{nm}_{g}"] = fam.labels(g)
+        # tight-grid kernel telemetry: the pack is engine-lifetime constant,
+        # so set-once at construction is the steady-state truth
+        publish_pack_gauges(m, self.pack)
+
+    def _obs_gauges(self) -> None:
+        """Per-step gauge refresh (enabled engines only): occupancy, queue
+        depth, pool pages, prefix hit rate, retraces."""
+        mm = self._m
+        mm["slots"].set(int(self.active.sum()))
+        mm["depth"].set(len(self.queue))
+        probes = self.n_prefix_hits + self.n_prefix_misses
+        if probes:
+            mm["hit_rate"].set(self.n_prefix_hits / probes)
+        mm["retraces"].set(
+            jit_retraces(_decode_fn, _prefill_fn, _suffix_prefill_fn)
+            - self._retrace_base
+        )
+        for g, pool in self.pools.items():
+            mm[f"pool_free_{g}"].set(pool.n_free)
+            mm[f"pool_live_{g}"].set(pool.n_live)
+            mm[f"pool_forks_{g}"].set(pool.n_forks)
+
+    def _obs_shed(self, reqs, now: float) -> None:
+        """Shed annotations (instant + counter) for queue-expired or
+        backpressure-dropped requests."""
+        if self._m is None or not reqs:
+            return
+        for r in reqs:
+            self._m["shed"].inc()
+            self.obs.trace.instant(
+                "shed", now, tid=0, cat="serve",
+                args={"rid": r.rid, "reason": r.error},
+            )
 
     # -- admission ---------------------------------------------------------
 
@@ -481,7 +616,12 @@ class ServeEngine:
             )
         if req.ttl is None:
             req.ttl = self.deadline  # engine-wide default admission deadline
-        return self.queue.submit(req)
+        ok = self.queue.submit(req)
+        if not ok:
+            # backpressure shed carries no clock (docs/serving.md): annotate
+            # at the request's own arrival time
+            self._obs_shed([req], req.arrival)
+        return ok
 
     # -- paged-pool bookkeeping (host-side; serving/block_pool.py) ---------
 
@@ -644,11 +784,15 @@ class ServeEngine:
                     return
                 ctx = got
             base = request_key(req.seed)
-            fval = self.faults.prefill_fault(req.rid) if self.faults else None
+            fval = (
+                self.faults.prefill_fault(req.rid, req.n_retries)
+                if self.faults else None
+            )
             if self.faults and clock is not None:
                 delay = self.faults.prefill_delay(req.rid)
                 if delay > 0:
                     time.sleep(delay)  # wall-clock chaos only (run())
+            t0 = clock() if clock is not None else now
             if ctx:
                 # shared-prefix hit: run ONLY the suffix through the model
                 slen = req.prompt_len - ctx
@@ -694,6 +838,21 @@ class ServeEngine:
             self.n_prefills += 1
             tok = int(tok)  # blocks on the prefill -> post-compute timestamps
             t = clock() if clock is not None else now
+            if self._m is not None:
+                tid = s + 1
+                self.obs.trace.span(
+                    "queue_wait", req.ready_at, t0, tid=tid, cat="serve",
+                    args={"rid": req.rid, "attempt": req.n_retries},
+                )
+                self.obs.trace.span(
+                    "prefill", t0, t, tid=tid, cat="serve",
+                    args={"rid": req.rid, "attempt": req.n_retries,
+                          "variant": "suffix" if ctx else "full",
+                          "padded_len": len(toks), "slot": int(s)},
+                )
+                self._m["queue_wait"].observe(max(t0 - req.ready_at, 0.0))
+                self._m["prefill_s"].observe(max(t - t0, 0.0))
+                self._m["prefill_suffix" if ctx else "prefill_full"].inc()
             if not bool(fin):
                 # prefill produced non-finite logits: the slot was written
                 # but never activated — quarantine before the request exists
@@ -735,6 +894,17 @@ class ServeEngine:
         self.active[s] = False
         self.slot_req[s] = None
         self._device_state = None
+        if self._m is not None:
+            self._m["done"].inc()
+            self._m["tokens"].inc(len(req.generated))
+            if req.latency is not None:
+                self._m["latency"].observe(req.latency)
+            # the request's decode residency on its slot's track: first
+            # token (t_admitted) -> terminal
+            self.obs.trace.span(
+                "decode", req.t_admitted, now, tid=s + 1, cat="serve",
+                args={"rid": req.rid, "n_tokens": len(req.generated)},
+            )
 
     def _quarantine(self, req: Request, slot: int, now: float,
                     finished: list, *, where: str) -> None:
@@ -745,7 +915,20 @@ class ServeEngine:
         OTHER slot is untouched — quarantine is per-request by construction.
         """
         self.n_quarantined += 1
-        self.quarantine_log.append((self.n_steps, req.rid, slot))
+        # attempt = the retry ordinal that FAILED (0 = first admission):
+        # the same value the FaultInjector logged for a prefill fault, and
+        # (with the step key) the unambiguous join against decode entries
+        self.quarantine_log.append(
+            QuarantineRecord(self.n_steps, req.rid, slot, req.n_retries, where)
+        )
+        if self._m is not None:
+            self._m["quar_decode" if where == "decode"
+                    else "quar_prefill"].inc()
+            self.obs.trace.instant(
+                "quarantine", now, tid=slot + 1, cat="chaos",
+                args={"step": self.n_steps, "rid": req.rid, "slot": slot,
+                      "attempt": req.n_retries, "where": where},
+            )
         if self.paged and self.pools:
             self._free_slot_pages(slot)  # scrub = return the pages too
         self.active[slot] = False
@@ -760,6 +943,13 @@ class ServeEngine:
             req.t_admitted = None
             req.retry_at = now + req.retry_backoff * (2 ** (req.n_retries - 1))
             self.queue.requeue(req)
+            if self._m is not None:
+                self._m["retries"].inc()
+                self.obs.trace.instant(
+                    "retry", now, tid=0, cat="chaos",
+                    args={"rid": req.rid, "attempt": req.n_retries,
+                          "retry_at": req.retry_at},
+                )
         else:
             self.queue.fail(
                 req, now,
@@ -767,6 +957,8 @@ class ServeEngine:
                 f"(after {req.n_retries} retries)",
             )
             finished.append(req)
+            if self._m is not None:
+                self._m["failed"].inc()
 
     # -- stepping ----------------------------------------------------------
 
@@ -784,10 +976,15 @@ class ServeEngine:
         to a full step.
         """
         finished: list[Request] = []
-        finished.extend(self.queue.shed_expired(now))
+        shed = self.queue.shed_expired(now)
+        finished.extend(shed)
+        self._obs_shed(shed, now)
         self._admit(now, finished, clock)
         if not self.active.any():
+            if self._m is not None:
+                self._obs_gauges()
             return finished
+        t0 = clock() if clock is not None else now
         if self._device_state is None:  # mirrors changed: re-upload the carry
             self._device_state = (
                 jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos),
@@ -807,6 +1004,22 @@ class ServeEngine:
         else:
             fn = _decode_fn(self.cfg, greedy, True)
             extra = (jnp.asarray(fault[0]), jnp.asarray(fault[1]))
+            if self._m is not None:
+                # record which TARGETED slots were active (with the request
+                # each held): injections on parked slots are no-ops, so this
+                # is the exact expected-quarantine set for this step — the
+                # trace <-> FaultInjector.log join obs_bench verifies
+                hit = [
+                    {"slot": int(s2), "rid": self.slot_req[s2].rid,
+                     "attempt": self.slot_req[s2].n_retries}
+                    for s2 in np.nonzero(fault[0])[0] if self.active[s2]
+                ]
+                self.obs.trace.instant(
+                    "fault_injected", now, tid=0, cat="chaos",
+                    args={"step": self.n_steps,
+                          "targeted": [int(x) for x in np.nonzero(fault[0])[0]],
+                          "active": hit},
+                )
         tabs = None
         if self.paged and self.pools:
             if self._device_tables is None:  # a table row changed: re-upload
@@ -822,6 +1035,15 @@ class ServeEngine:
         nxt = np.asarray(nxt)  # blocks on the decode -> post-compute timestamp
         finite = np.asarray(finite)
         t = clock() if clock is not None else now
+        if self._m is not None:
+            self.obs.trace.span(
+                "decode_step", t0, t, tid=0, cat="serve",
+                args={"step": self.n_steps,
+                      "n_active": int(self.active.sum()),
+                      "greedy": bool(greedy)},
+            )
+            self._m["step_s"].observe(max(t - t0, 0.0))
+            self._m["steps"].inc()
         for s in np.nonzero(self.active)[0]:
             req = self.slot_req[s]
             if not finite[s]:
@@ -840,6 +1062,8 @@ class ServeEngine:
         # the fault lookup above used)
         self.n_steps += 1
         self.n_greedy_steps += greedy
+        if self._m is not None:
+            self._obs_gauges()
         return finished
 
     def run(self) -> dict:
@@ -877,7 +1101,6 @@ class ServeEngine:
             [r.t_admitted - r.arrival for r in self.queue.done
              if r.t_admitted is not None], np.float64
         )
-        pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
         out = {
             "requests": len(done),
             "shed": len(shed),
@@ -889,10 +1112,17 @@ class ServeEngine:
             "tok_per_s": toks / max(wall_s, 1e-9),
             "decode_steps": self.n_steps,
             "prefills": self.n_prefills,
-            "latency_p50_s": pct(lat, 50),
-            "latency_p95_s": pct(lat, 95),
-            "queue_wait_p50_s": pct(waits, 50),
-            "queue_wait_p95_s": pct(waits, 95),
+            "latency_p50_s": percentile(lat, 50),
+            "latency_p95_s": percentile(lat, 95),
+            "queue_wait_p50_s": percentile(waits, 50),
+            "queue_wait_p95_s": percentile(waits, 95),
+            # jit variants compiled during THIS engine's lifetime (the
+            # module-level caches are shared, hence the construction-time
+            # baseline): nonzero growth during steady-state traffic is the
+            # pack-width-hysteresis / bucket-churn regression signal
+            "n_retraces": jit_retraces(
+                _decode_fn, _prefill_fn, _suffix_prefill_fn
+            ) - self._retrace_base,
         }
         if self.paged and self.pools:
             out["prefix_hits"] = self.n_prefix_hits

@@ -112,10 +112,15 @@ class FaultInjector:
         self.log.append(("decode", int(step), tuple(sorted(plan))))
         return mask, vals
 
-    def prefill_fault(self, rid: int) -> Optional[float]:
+    def prefill_fault(self, rid: int, attempt: int = 0) -> Optional[float]:
+        """``attempt`` is the request's retry ordinal (0 = first admission):
+        logged alongside the rid so a retried-then-poisoned-again request's
+        fired entries are distinguishable — the engine's quarantine records
+        carry the same (rid, attempt) pair, making the trace <-> injector
+        correlation exact (benchmarks/obs_bench.py cross-checks it)."""
         v = self._prefill.get(int(rid))
         if v is not None:
-            self.log.append(("prefill", int(rid), v))
+            self.log.append(("prefill", int(rid), int(attempt), v))
         return v
 
     def prefill_delay(self, rid: int) -> float:

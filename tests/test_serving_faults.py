@@ -144,7 +144,7 @@ def test_nan_quarantine_isolates_one_request():
     assert [r.rid for r in failed] == [0]
     assert "non-finite" in failed[0].error
     assert eng.n_quarantined == 1
-    assert eng.quarantine_log == [(2, 0, 0)]
+    assert eng.quarantine_log == [(2, 0, 0, 0, "decode")]
     got = _streams(eng)
     assert sorted(got) == [1, 2, 3, 4, 5]
     for rid, toks in got.items():
